@@ -1,0 +1,56 @@
+"""Paper Figs. 8/9: record-cost amortization over repeated executions.
+
+Runs each workload end-to-end for N iterations INCLUDING the first-call
+record cost, vs the vanilla eager execution of the same N iterations, for
+N in {4, 64}: speedup < 1 at small N (record not amortized), -> the
+optimal-TDG speedup as N grows (paper's observation on CG/FT class W).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import EagerExecutor, ReplayExecutor, lower_tdg
+
+from .common import csv_row
+from .workloads import WORKLOADS
+
+
+def _time_replay_with_record(tdg, bufs, iters: int) -> float:
+    replay = ReplayExecutor(tdg)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        replay.run(dict(bufs))        # 1st call pays lower+compile (record)
+    return time.perf_counter() - t0
+
+
+def _time_eager(tdg, bufs, iters: int, workers: int = 4) -> float:
+    ex = EagerExecutor(tdg, n_workers=workers)  # per-task compile = vanilla
+    t0 = time.perf_counter()                    # task creation cost
+    for _ in range(iters):
+        ex.run(dict(bufs))
+    return time.perf_counter() - t0
+
+
+def run(workloads=("cholesky", "heat", "axpy", "dotp"), iter_counts=(4, 64)):
+    print("# amortization: speedup incl. record/compile cost, by iterations")
+    print("name,us_per_call,derived")
+    rows = []
+    for wname in workloads:
+        for iters in iter_counts:
+            tdg, bufs, _ = WORKLOADS[wname](nb=8)
+            t_r = _time_replay_with_record(tdg, bufs, iters)
+            tdg2, bufs2, _ = WORKLOADS[wname](nb=8)
+            t_e = _time_eager(tdg2, bufs2, iters)
+            sp = t_e / t_r
+            rows.append((wname, iters, sp))
+            print(csv_row(f"amortization/{wname}/iters={iters}",
+                          f"{t_r/iters*1e6:.1f}",
+                          f"eager_total_s={t_e:.3f};replay_total_s={t_r:.3f};"
+                          f"speedup={sp:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

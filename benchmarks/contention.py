@@ -1,0 +1,100 @@
+"""Paper Fig. 2 / Table 1: task-orchestration overhead vs task count.
+
+Reproduces the paper's experiment structure on this framework:
+  * workload = Listing 1 (series of independent task chains), total FLOPs
+    held constant while task count grows (granularity shrinks);
+  * ``Computation`` = ideal time (serial_time x ceil(tasks/workers) / tasks),
+    paper Eq. (1); ``Overhead`` = measured - Computation, Eq. (2);
+  * eager executor (dynamic per-task dispatch, per-worker queues) plays the
+    vanilla LLVM-like runtime; ``central_queue=True`` plays GOMP's single
+    queue; replay is the Taskgraph.
+
+Output CSV: name,us_per_call,derived (one row per configuration).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import TDG, EagerExecutor, ReplayExecutor
+
+from .common import csv_row, timeit
+
+PER_TASK_ELEMS = 1024          # fine-grained tasks: ~us of compute each
+SERIES = 4
+
+
+def _make_tdg(n_tasks: int) -> tuple[TDG, dict]:
+    """SERIES waves of n_tasks chains (paper Listing 1). Per-task work is a
+    small fixed vector op (~paper's 10k-instruction fine-grain regime), so
+    orchestration — not FLOPs — dominates, exactly the effect under study."""
+
+    def fn(x):
+        return jnp.tanh(x) * 1.0001 + 0.1
+
+    tdg = TDG(f"listing1[{n_tasks}]")
+    for s in range(SERIES):
+        for t in range(n_tasks):
+            tdg.add_task(fn, inouts=[f"x{t}"], name=f"t{s}.{t}")
+    bufs = {f"x{t}": jnp.ones((PER_TASK_ELEMS,), jnp.float32)
+            for t in range(n_tasks)}
+    return tdg, bufs
+
+
+def _ideal_time(n_tasks: int) -> float:
+    """Computation term (paper Eq. 1): orchestration-free execution of the
+    same total work — one fused jit, SERIES-deep chain over all elements.
+    (One physical core here, so c(Th)=1; worker counts still exercise the
+    queue policies and their bookkeeping.)"""
+    x = jnp.ones((PER_TASK_ELEMS * n_tasks,), jnp.float32)
+
+    @jax.jit
+    def chain(x):
+        for _ in range(SERIES):
+            x = jnp.tanh(x) * 1.0001 + 0.1
+        return x
+
+    return timeit(lambda: chain(x), reps=5)
+
+
+def run(task_counts=(1, 4, 16, 64, 256, 1024), workers: int = 4):
+    rows = []
+    print("# contention: overhead(ms) vs task count (fine-grained tasks, "
+          f"{PER_TASK_ELEMS} elems each, {workers} workers)")
+    print("name,us_per_call,derived")
+    for n in task_counts:
+        tdg, bufs = _make_tdg(n)
+        ideal = _ideal_time(n)
+
+        eager = EagerExecutor(tdg, n_workers=workers)
+        eager.run(dict(bufs))                       # warm compile
+        t_eager = timeit(lambda: eager.run(dict(bufs)), reps=5)
+
+        central = EagerExecutor(tdg, n_workers=workers, central_queue=True,
+                                round_robin_roots=False)
+        central.run(dict(bufs))
+        t_central = timeit(lambda: central.run(dict(bufs)), reps=5)
+
+        replay = ReplayExecutor(tdg)
+        replay.run(dict(bufs))
+        t_replay = timeit(lambda: replay.run(dict(bufs)), reps=5)
+
+        oh_e = (t_eager - ideal) * 1e3
+        oh_c = (t_central - ideal) * 1e3
+        oh_r = (t_replay - ideal) * 1e3
+        tasks = SERIES * n
+        rows.append((tasks, oh_c, oh_e, oh_r))
+        print(csv_row(f"contention/central_queue/tasks={tasks}",
+                      f"{t_central*1e6:.1f}",
+                      f"overhead_ms={oh_c:.2f};ideal_ms={ideal*1e3:.2f}"))
+        print(csv_row(f"contention/eager/tasks={tasks}",
+                      f"{t_eager*1e6:.1f}", f"overhead_ms={oh_e:.2f}"))
+        print(csv_row(f"contention/taskgraph_replay/tasks={tasks}",
+                      f"{t_replay*1e6:.1f}", f"overhead_ms={oh_r:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Benchmark aggregator — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Sections:
+  contention             Fig. 2 / Table 1  (orchestration overhead vs #tasks)
+  speedup_grid           Figs. 6/7         (granularity x workers heatmaps)
+  amortization           Figs. 8/9         (record-cost amortization)
+  granularity_stability  Fig. 10           (stability under fine granularity)
+  roofline               (beyond paper)    (dry-run roofline terms)
+
+Prints ``name,us_per_call,derived`` CSV rows per section.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sweeps (CI-sized)")
+    ap.add_argument("--only", default=None,
+                    help="run a single section by name")
+    args = ap.parse_args(argv)
+
+    from . import (amortization, contention, granularity_stability, roofline,
+                   speedup_grid)
+
+    sections = {
+        "contention": lambda: contention.run(
+            task_counts=(1, 4, 16, 64) if args.quick
+            else (1, 4, 16, 64, 256, 1024)),
+        "speedup_grid": lambda: speedup_grid.run(
+            workloads=("cholesky", "axpy") if args.quick
+            else ("cholesky", "heat", "nbody", "axpy", "dotp"),
+            grains=(4, 8) if args.quick else (4, 8, 16),
+            workers=(1, 4) if args.quick else (1, 4, 8)),
+        "amortization": lambda: amortization.run(
+            workloads=("cholesky", "axpy") if args.quick
+            else ("cholesky", "heat", "axpy", "dotp"),
+            iter_counts=(4, 16) if args.quick else (4, 64)),
+        "granularity_stability": lambda: granularity_stability.run(
+            grains=(4, 8) if args.quick else (2, 4, 8, 16, 32)),
+        "roofline": roofline.run,
+    }
+    for name, fn in sections.items():
+        if args.only and name != args.only:
+            continue
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        fn()
+        print(f"# section {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Paper Figs. 6/7: Taskgraph speedup over vanilla tasking, as a grid of
+task granularity (block count) x worker count, for the paper's application
+kernels (Cholesky, Heat, N-body, AXPY, DOTP).
+
+speedup = T_eager / T_replay   (paper: Time_task / Time_Taskgraph)
+
+Fig. 6 = unstructured (`task depend` webs: cholesky/heat);
+Fig. 7 = structured  (`taskloop`-like independent grids: nbody/axpy/dotp).
+"""
+from __future__ import annotations
+
+from repro.core import EagerExecutor, ReplayExecutor
+
+from .common import csv_row, timeit
+from .workloads import WORKLOADS
+
+
+def run(workloads=("cholesky", "heat", "nbody", "axpy", "dotp"),
+        grains=(4, 8, 16), workers=(1, 4, 8)):
+    print("# speedup grid: eager(vanilla)/replay(taskgraph) per "
+          "(workload x blocks x workers)")
+    print("name,us_per_call,derived")
+    rows = []
+    for wname in workloads:
+        for nb in grains:
+            try:
+                tdg, bufs, verify = WORKLOADS[wname](nb=nb)
+            except (AssertionError, ZeroDivisionError):
+                continue
+            replay = ReplayExecutor(tdg)
+            out = replay.run(dict(bufs))
+            verify(out)
+            t_replay = timeit(lambda: replay.run(dict(bufs)), reps=3)
+            for w in workers:
+                eager = EagerExecutor(tdg, n_workers=w)
+                eager.run(dict(bufs))
+                t_eager = timeit(lambda: eager.run(dict(bufs)), reps=3)
+                sp = t_eager / t_replay
+                rows.append((wname, nb, w, sp))
+                print(csv_row(
+                    f"speedup/{wname}/blocks={nb}/workers={w}",
+                    f"{t_replay*1e6:.1f}",
+                    f"eager_us={t_eager*1e6:.1f};speedup={sp:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

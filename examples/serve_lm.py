@@ -1,0 +1,24 @@
+"""Batched serving example: prefill + autoregressive decode with per-layer
+KV/SSM caches, across model families (dense / MoE / SSM / hybrid).
+
+Run: PYTHONPATH=src python examples/serve_lm.py [--arch mamba2-370m]
+"""
+import argparse
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    raise SystemExit(serve_mod.main(
+        ["--arch", args.arch, "--smoke", "--batch", str(args.batch),
+         "--prompt-len", str(args.prompt_len), "--gen", str(args.gen)]))
+
+
+if __name__ == "__main__":
+    main()

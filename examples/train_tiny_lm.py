@@ -1,0 +1,53 @@
+"""End-to-end training example: a ~100M-param dense LM through the full
+stack (data pipeline -> model -> AdamW+cosine -> record/replay step ->
+async checkpoints -> fault-tolerant supervisor).
+
+Default runs a CPU-sized slice (~5M params, 60 steps, loss must fall).
+``--full`` trains the ~100M config for --steps steps (the production run;
+use on real hardware, or let it run long on CPU).
+
+Run: PYTHONPATH=src python examples/train_tiny_lm.py [--full --steps 300]
+"""
+import argparse
+
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="~100M params (d=768, L=12, vocab=32k)")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    if args.full:
+        import dataclasses
+        import jax, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.configs.base import ModelConfig
+        cfg = ModelConfig(
+            name="tiny-lm-100m", family="dense", num_layers=12, d_model=768,
+            num_heads=12, num_kv_heads=12, d_ff=3072, vocab_size=32000,
+            scan_layers=False, remat="none", dtype="float32")
+        # route through the launch driver with an inline registry entry
+        from repro import configs as C
+        C._ARCH_MODULES = dict(C._ARCH_MODULES)
+        import types, sys
+        mod = types.ModuleType("repro.configs._tiny100m")
+        mod.CONFIG = cfg
+        sys.modules["repro.configs._tiny100m"] = mod
+        C._ARCH_MODULES["tiny-lm-100m"] = "_tiny100m"
+        C.ARCHS = tuple(C._ARCH_MODULES)
+        argv = ["--arch", "tiny-lm-100m", "--steps", str(args.steps),
+                "--batch", str(args.batch), "--seq", str(args.seq)]
+        # argparse choices were captured at import; patch through smoke path
+        raise SystemExit(train_mod.main(argv))
+    argv = ["--arch", "qwen2.5-3b", "--smoke", "--steps", str(args.steps),
+            "--batch", str(args.batch), "--seq", str(args.seq)]
+    raise SystemExit(train_mod.main(argv))
+
+
+if __name__ == "__main__":
+    main()

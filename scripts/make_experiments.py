@@ -1,0 +1,94 @@
+"""Generate the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
+dryrun_artifacts/ JSONs. Run after the sweep:
+
+    PYTHONPATH=src python scripts/make_experiments.py
+"""
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+ART = ROOT / "dryrun_artifacts"
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = ["llama4-scout-17b-a16e", "qwen3-moe-30b-a3b", "qwen2.5-3b",
+              "glm4-9b", "minitron-8b", "minicpm-2b", "mamba2-370m",
+              "whisper-small", "hymba-1.5b", "chameleon-34b"]
+
+
+def fmt(x, nd=4):
+    return f"{x:.{nd}f}" if isinstance(x, (int, float)) else str(x)
+
+
+def main():
+    arts = {}
+    for f in sorted(ART.glob("*.json")):
+        a = json.loads(f.read_text())
+        if "skipped" in a:
+            continue
+        tag = "+".join(f"{k}={v}" for k, v in sorted(a.get("opts", {}).items()))
+        arts[(a["arch"], a["shape"], a["mesh"], tag)] = a
+
+    lines = []
+    lines.append("### Dry-run matrix (generated)\n")
+    lines.append("| arch | shape | mesh | compile(s) | cost-mode | temp GB/dev | collectives (ag/ar/rs/aa/cp) |")
+    lines.append("|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mesh in ("16x16", "2x16x16"):
+                a = arts.get((arch, shape, mesh, ""))
+                if a is None:
+                    continue
+                t = sum(v["compile_s"] for v in a["timings"].values())
+                coll = a["collectives"]
+                if "scan_mode" in coll:
+                    coll = coll["scan_mode"]
+                cs = "/".join(str(coll[k]["count"]) for k in
+                              ("all-gather", "all-reduce", "reduce-scatter",
+                               "all-to-all", "collective-permute"))
+                mem = a["memory"].get("temp_size_in_bytes", 0) / 1e9
+                lines.append(f"| {arch} | {shape} | {mesh} | {t:.0f} | "
+                             f"{a['cost_mode']} | {mem:.1f} | {cs} |")
+    lines.append("")
+    lines.append("### Roofline table (generated; single-pod 16x16; seconds/step/device)\n")
+    lines.append("| arch | shape | compute_s | memory_s | collective_s | dominant | MODEL/HLO flops | one-line bottleneck note |")
+    lines.append("|---|---|---|---|---|---|---|---|")
+    notes = {
+        "compute_s": "matmul-bound; larger per-device batch or lower remat would help",
+        "memory_s": "HBM-bound; fuse/shard the dominant tensor traffic",
+        "collective_s": "ICI-bound; reshard or restructure the dominant collective",
+    }
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            a = arts.get((arch, shape, "16x16", ""))
+            if a is None:
+                continue
+            rl = a["roofline"]
+            ratio = rl["useful_flop_ratio"]
+            lines.append(
+                f"| {arch} | {shape} | {fmt(rl['compute_s'])} | "
+                f"{fmt(rl['memory_s'])} | {fmt(rl['collective_s'])} | "
+                f"{rl['dominant'].replace('_s','')} | "
+                f"{fmt(ratio, 3) if ratio else 'n/a'} | "
+                f"{notes[rl['dominant']]} |")
+    lines.append("")
+    lines.append("### Perf-iteration artifacts (opt-tagged cells)\n")
+    lines.append("| arch | shape | opts | compute_s | memory_s | collective_s | dominant |")
+    lines.append("|---|---|---|---|---|---|---|")
+    for (arch, shape, mesh, tag), a in sorted(arts.items()):
+        if not tag or mesh != "16x16":
+            continue
+        rl = a["roofline"]
+        lines.append(f"| {arch} | {shape} | {tag} | {fmt(rl['compute_s'])} | "
+                     f"{fmt(rl['memory_s'])} | {fmt(rl['collective_s'])} | "
+                     f"{rl['dominant'].replace('_s','')} |")
+    out = "\n".join(lines) + "\n"
+    (ROOT / "EXPERIMENTS_TABLES.md").write_text(out)
+    print(out[:2000])
+    print(f"... written to EXPERIMENTS_TABLES.md ({len(lines)} lines)")
+
+
+if __name__ == "__main__":
+    main()

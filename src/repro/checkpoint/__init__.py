@@ -1,0 +1,4 @@
+"""Checkpointing: sharded, async, restartable."""
+from .checkpointer import Checkpointer, latest_step, save_pytree, load_pytree
+
+__all__ = ["Checkpointer", "latest_step", "save_pytree", "load_pytree"]

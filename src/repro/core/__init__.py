@@ -1,0 +1,32 @@
+"""Core Taskgraph framework: TDG, record-and-replay, schedules, executors."""
+from .tdg import TDG, Task, Edge, DepKind, EdgeKind, DependencyTable, buffers_signature
+from .schedule import (
+    topo_order,
+    topo_waves,
+    round_robin_assign,
+    wave_placement,
+    critical_path,
+    work,
+    parallelism,
+    list_schedule,
+    ListSchedule,
+    pipeline_tdg,
+    one_f_one_b_order,
+    validate_execution_order,
+)
+from .lower import tdg_as_function, lower_tdg
+from .executor import EagerExecutor, ReplayExecutor, ExecStats
+from .record import taskgraph, TaskGraphRegion, GraphBuilder, registry, reset_registry
+from .serialize import TaskFnRegistry, save_tdg, load_tdg, tdg_to_dict, tdg_from_dict
+
+__all__ = [
+    "TDG", "Task", "Edge", "DepKind", "EdgeKind", "DependencyTable",
+    "buffers_signature",
+    "topo_order", "topo_waves", "round_robin_assign", "wave_placement",
+    "critical_path", "work", "parallelism", "list_schedule", "ListSchedule",
+    "pipeline_tdg", "one_f_one_b_order", "validate_execution_order",
+    "tdg_as_function", "lower_tdg",
+    "EagerExecutor", "ReplayExecutor", "ExecStats",
+    "taskgraph", "TaskGraphRegion", "GraphBuilder", "registry", "reset_registry",
+    "TaskFnRegistry", "save_tdg", "load_tdg", "tdg_to_dict", "tdg_from_dict",
+]

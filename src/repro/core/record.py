@@ -1,0 +1,211 @@
+"""Record-and-replay + static TDG construction (the `taskgraph` directive).
+
+``@taskgraph`` marks a *fully-taskified region*: a Python builder function
+``fn(g, **buffers)`` whose only effects are ``g.task(...)`` spawns over named
+buffer slots (plus deterministic, task-free control flow — the paper's
+conformance requirements §4.1). The framework then chooses, exactly like
+Algorithm 4.1 of the paper:
+
+  * **static TDG** (``build_static``): if the region's control flow is
+    computable from configuration alone, the TDG is built ahead of time by
+    abstract evaluation (``jax.eval_shape`` stand-ins; no data touched) —
+    the compile-time TDG of paper Fig. 4b/4d. Constants already bound in the
+    tasks' closures play the role of "known data" (4d); everything else is
+    ``fill_data`` at call time (4b).
+  * **record** (first call): the region executes eagerly *while being
+    recorded* — every task spawn resolves its depend clauses against the
+    last-writer/readers table once, and runs.
+  * **replay** (subsequent calls): the cached TDG is lowered to one fused
+    executable and re-executed with zero per-task orchestration.
+
+Regions are registered by *source location* (file, line) exactly as the
+paper keys TDGs (§4.3.3). Instances of one region are sequentialized unless
+``nowait=True`` (the paper's default semantics).
+"""
+from __future__ import annotations
+
+import functools
+import threading
+from typing import Any, Callable, Mapping
+
+import jax
+
+from . import lower as _lower
+from . import schedule as _schedule
+from .tdg import TDG, Task, buffers_signature
+
+_REGISTRY: dict[tuple, "TaskGraphRegion"] = {}
+_registry_lock = threading.Lock()
+
+
+def registry() -> dict[tuple, "TaskGraphRegion"]:
+    return dict(_REGISTRY)
+
+
+def reset_registry() -> None:
+    with _registry_lock:
+        _REGISTRY.clear()
+
+
+class GraphBuilder:
+    """The ``g`` handle passed to region builder functions."""
+
+    def __init__(self, tdg: TDG, env: dict | None, abstract: bool):
+        self._tdg = tdg
+        self._env = env
+        self._abstract = abstract
+
+    @property
+    def tdg(self) -> TDG:
+        return self._tdg
+
+    def task(self, fn: Callable, ins=(), outs=(), inouts=(), name: str = "",
+             cost_hint: float = 1.0, **metadata) -> Task:
+        """Spawn a task (``#pragma omp task depend(...)``)."""
+        task = self._tdg.add_task(fn, ins=ins, outs=outs, inouts=inouts,
+                                  name=name, cost_hint=cost_hint, **metadata)
+        if self._env is not None:
+            args = [self._env[s] for s in task.ins]
+            if self._abstract:
+                out = jax.eval_shape(fn, *args)
+            else:
+                out = fn(*args)
+            if len(task.outs) == 1:
+                self._env[task.outs[0]] = out
+            elif len(task.outs) > 1:
+                for s, v in zip(task.outs, out):
+                    self._env[s] = v
+        return task
+
+    def slots(self) -> list[str]:
+        return list(self._env) if self._env is not None else []
+
+
+class TaskGraphRegion:
+    """A taskgraph region: static-or-recorded TDG + replay cache."""
+
+    def __init__(self, build_fn: Callable, name: str | None = None,
+                 nowait: bool = False, donate_slots: tuple[str, ...] = (),
+                 recurrent: bool = True, outputs: tuple[str, ...] | None = None):
+        code = build_fn.__code__
+        self.build_fn = build_fn
+        self.outputs = tuple(outputs) if outputs is not None else None
+        self.name = name or build_fn.__name__
+        # paper §4.3.3: TDGs are identified by source location
+        self.source_location = (code.co_filename, code.co_firstlineno, self.name)
+        self.nowait = nowait
+        self.donate_slots = tuple(donate_slots)
+        self.recurrent = recurrent
+        self.tdg: TDG | None = None
+        self.static = False
+        self._replay_cache: dict[tuple, Callable] = {}
+        self.records = 0
+        self.replays = 0
+        with _registry_lock:
+            if self.source_location in _REGISTRY:
+                raise ValueError(
+                    f"taskgraph region already registered at {self.source_location} "
+                    "(the directive cannot be declared recursively, paper §4.1)")
+            _REGISTRY[self.source_location] = self
+
+    # -- TDG construction ---------------------------------------------------
+    def build_static(self, **buffer_specs) -> TDG:
+        """Compile-time TDG from abstract buffer shapes (paper Fig. 4b/4d)."""
+        tdg = TDG(region=self.name)
+        env = {k: _abstractify(v) for k, v in buffer_specs.items()}
+        self.build_fn(GraphBuilder(tdg, env, abstract=True), **buffer_specs)
+        tdg.validate()
+        self.tdg = tdg
+        self.static = True
+        return tdg
+
+    def record(self, **buffers) -> dict:
+        """First execution: run eagerly while recording (paper §4.3.2)."""
+        tdg = TDG(region=self.name)
+        env = dict(buffers)
+        self.build_fn(GraphBuilder(tdg, env, abstract=False), **buffers)
+        tdg.validate()
+        self.tdg = tdg
+        self.static = False
+        self.records += 1
+        out = {s: env[s] for s in (self.outputs or tdg.output_slots)}
+        if not self.nowait:
+            jax.block_until_ready(out)
+        return out
+
+    # -- execution ------------------------------------------------------------
+    def replay(self, **buffers) -> dict:
+        if self.tdg is None:
+            raise RuntimeError(f"region {self.name!r} has no TDG yet")
+        sig = buffers_signature(buffers)
+        fn = self._replay_cache.get(sig)
+        if fn is None:
+            fn = _lower.lower_tdg(self.tdg, donate_slots=self.donate_slots,
+                                  outputs=self.outputs)
+            self._replay_cache[sig] = fn
+        out = fn(buffers)
+        self.replays += 1
+        if not self.nowait:
+            jax.block_until_ready(out)
+        return out
+
+    def __call__(self, **buffers) -> dict:
+        if self.tdg is None:
+            if self.recurrent:
+                return self.record(**buffers)
+            # non-recurrent region: no point building a TDG (Algorithm 4.1
+            # line 23: fall back to plain task instantiation) — run eagerly.
+            tdg = TDG(region=self.name)
+            env = dict(buffers)
+            self.build_fn(GraphBuilder(tdg, env, abstract=False), **buffers)
+            return {s: env[s] for s in (self.outputs or tdg.output_slots)}
+        return self.replay(**buffers)
+
+    # -- introspection ----------------------------------------------------------
+    def as_function(self) -> Callable[[dict], dict]:
+        """The replayable pure function (for grad / pjit / outer-TDG embedding)."""
+        if self.tdg is None:
+            raise RuntimeError(f"region {self.name!r} has no TDG yet")
+        return _lower.tdg_as_function(self.tdg, outputs=self.outputs)
+
+    def schedule_summary(self, n_workers: int = 8) -> dict:
+        assert self.tdg is not None
+        waves = _schedule.topo_waves(self.tdg)
+        return {
+            "tasks": self.tdg.num_tasks,
+            "edges": self.tdg.num_edges,
+            "roots": len(self.tdg.roots()),
+            "waves": len(waves),
+            "max_wave_width": max((len(w) for w in waves), default=0),
+            "parallelism": _schedule.parallelism(self.tdg),
+            "dep_lookups_at_record": self.tdg.dep_lookups(),
+        }
+
+
+def taskgraph(fn: Callable | None = None, *, name: str | None = None,
+              nowait: bool = False, donate_slots: tuple[str, ...] = (),
+              recurrent: bool = True, outputs: tuple[str, ...] | None = None):
+    """Decorator form: ``@taskgraph`` / ``@taskgraph(nowait=True)``."""
+
+    def wrap(f: Callable) -> TaskGraphRegion:
+        return TaskGraphRegion(f, name=name, nowait=nowait,
+                               donate_slots=donate_slots, recurrent=recurrent,
+                               outputs=outputs)
+
+    if fn is not None:
+        return wrap(fn)
+    return wrap
+
+
+def _abstractify(x: Any):
+    def leaf(v):
+        if isinstance(v, jax.ShapeDtypeStruct):
+            return v
+        if hasattr(v, "shape") and hasattr(v, "dtype"):
+            return jax.ShapeDtypeStruct(v.shape, v.dtype)
+        import numpy as np
+
+        arr = np.asarray(v)
+        return jax.ShapeDtypeStruct(arr.shape, arr.dtype)
+
+    return jax.tree_util.tree_map(leaf, x)

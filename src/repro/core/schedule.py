@@ -1,0 +1,241 @@
+"""Schedules over a TDG.
+
+The paper's replay executor needs exactly two scheduling artifacts, both
+computed once per TDG and reused on every replay:
+
+  * a *wave decomposition* (topological levels) — tasks in one wave are
+    mutually independent, so they can run in any order / in parallel; and
+  * a *static placement* of each wave's tasks onto workers, with the paper's
+    round-robin policy for root tasks (§4.3.1/§4.3.2) generalized to every
+    wave (zero-coordination work placement).
+
+It also provides a list scheduler (HEFT-lite) used for load-balanced
+placement when cost hints exist, a critical-path metric, and the 1F1B /
+GPipe pipeline schedule generators (a pipeline schedule *is* a static TDG
+over (microbatch, stage) tasks).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+from .tdg import TDG, Task
+
+
+def topo_order(tdg: TDG) -> list[int]:
+    """Deterministic topological order (Kahn, tid tie-break = record order)."""
+    indeg = {t.tid: len(tdg.preds[t.tid]) for t in tdg.tasks}
+    import heapq
+
+    ready = [tid for tid, d in indeg.items() if d == 0]
+    heapq.heapify(ready)
+    order: list[int] = []
+    while ready:
+        tid = heapq.heappop(ready)
+        order.append(tid)
+        for s in sorted(tdg.succs[tid]):
+            indeg[s] -= 1
+            if indeg[s] == 0:
+                heapq.heappush(ready, s)
+    if len(order) != tdg.num_tasks:
+        raise ValueError(f"cycle detected in {tdg.region!r}")
+    return order
+
+
+def topo_waves(tdg: TDG) -> list[list[int]]:
+    """Wave k = tasks whose longest pred-path has length k."""
+    depth: dict[int, int] = {}
+    for tid in topo_order(tdg):
+        preds = tdg.preds[tid]
+        depth[tid] = 1 + max((depth[p] for p in preds), default=-1)
+    waves: list[list[int]] = []
+    for tid, d in depth.items():
+        while len(waves) <= d:
+            waves.append([])
+        waves[d].append(tid)
+    for w in waves:
+        w.sort()
+    return waves
+
+
+def round_robin_assign(tids: Sequence[int], n_workers: int, start: int = 0) -> list[list[int]]:
+    """Paper §4.3.2: hand out tasks round-robin to per-worker queues."""
+    queues: list[list[int]] = [[] for _ in range(n_workers)]
+    for i, tid in enumerate(tids):
+        queues[(start + i) % n_workers].append(tid)
+    return queues
+
+
+def wave_placement(tdg: TDG, n_workers: int) -> list[list[list[int]]]:
+    """Static placement: per wave, round-robin its tasks across workers.
+
+    Returned as ``placement[wave][worker] -> [tid, ...]``. Rotating the
+    starting worker between waves avoids systematically over-loading
+    worker 0 with the remainder tasks.
+    """
+    placement = []
+    start = 0
+    for wave in topo_waves(tdg):
+        placement.append(round_robin_assign(wave, n_workers, start=start))
+        start = (start + len(wave)) % max(n_workers, 1)
+    return placement
+
+
+def critical_path(tdg: TDG, cost: Callable[[Task], float] | None = None) -> float:
+    """Length of the longest weighted path (lower bound on makespan)."""
+    cost = cost or (lambda t: t.cost_hint)
+    dist: dict[int, float] = {}
+    best = 0.0
+    for tid in topo_order(tdg):
+        t = tdg.tasks[tid]
+        dist[tid] = cost(t) + max((dist[p] for p in tdg.preds[tid]), default=0.0)
+        best = max(best, dist[tid])
+    return best
+
+
+def work(tdg: TDG, cost: Callable[[Task], float] | None = None) -> float:
+    cost = cost or (lambda t: t.cost_hint)
+    return sum(cost(t) for t in tdg.tasks)
+
+
+def parallelism(tdg: TDG) -> float:
+    """Average parallelism = total work / critical path (unit costs)."""
+    cp = critical_path(tdg, lambda t: 1.0)
+    return tdg.num_tasks / max(cp, 1.0)
+
+
+@dataclasses.dataclass
+class ListSchedule:
+    """Output of the list scheduler: per-worker ordered task lists plus the
+    simulated makespan under the cost model (used for placement decisions
+    and for load-balance assertions in tests)."""
+
+    worker_tasks: list[list[int]]
+    start_time: dict[int, float]
+    finish_time: dict[int, float]
+    makespan: float
+
+    def order(self) -> list[int]:
+        merged = sorted(self.start_time.items(), key=lambda kv: (kv[1], kv[0]))
+        return [tid for tid, _ in merged]
+
+
+def list_schedule(tdg: TDG, n_workers: int,
+                  cost: Callable[[Task], float] | None = None) -> ListSchedule:
+    """HEFT-lite: tasks become ready when preds finish; each ready task goes
+    to the earliest-available worker; ties broken by critical-path priority.
+    Communication costs are zero (shared memory / single executable)."""
+    cost = cost or (lambda t: t.cost_hint)
+    # upward rank (critical-path-to-exit priority)
+    rank: dict[int, float] = {}
+    for tid in reversed(topo_order(tdg)):
+        t = tdg.tasks[tid]
+        rank[tid] = cost(t) + max((rank[s] for s in tdg.succs[tid]), default=0.0)
+
+    import heapq
+
+    indeg = {t.tid: len(tdg.preds[t.tid]) for t in tdg.tasks}
+    ready_at = {t.tid: 0.0 for t in tdg.tasks}
+    # ready heap: (-rank, tid) so higher rank first
+    ready: list[tuple[float, int]] = [(-rank[tid], tid) for tid, d in indeg.items() if d == 0]
+    heapq.heapify(ready)
+    worker_free = [0.0] * n_workers
+    worker_tasks: list[list[int]] = [[] for _ in range(n_workers)]
+    start: dict[int, float] = {}
+    finish: dict[int, float] = {}
+    pending: list[tuple[float, int]] = []  # (ready_time, tid) not yet releasable
+
+    scheduled = 0
+    while scheduled < tdg.num_tasks:
+        if not ready:
+            # advance time: release the earliest pending task
+            pending.sort()
+            t_rel, tid = pending.pop(0)
+            heapq.heappush(ready, (-rank[tid], tid))
+            continue
+        _, tid = heapq.heappop(ready)
+        t = tdg.tasks[tid]
+        w = min(range(n_workers), key=lambda i: (worker_free[i], i))
+        s = max(worker_free[w], ready_at[tid])
+        f = s + cost(t)
+        worker_free[w] = f
+        worker_tasks[w].append(tid)
+        start[tid], finish[tid] = s, f
+        scheduled += 1
+        for sid in sorted(tdg.succs[tid]):
+            indeg[sid] -= 1
+            ready_at[sid] = max(ready_at[sid], f)
+            if indeg[sid] == 0:
+                heapq.heappush(ready, (-rank[sid], sid))
+    return ListSchedule(worker_tasks, start, finish, max(finish.values(), default=0.0))
+
+
+# ---------------------------------------------------------------------------
+# Pipeline schedules as TDGs (microbatch x stage task grids)
+# ---------------------------------------------------------------------------
+
+def pipeline_tdg(n_stages: int, n_microbatches: int,
+                 include_backward: bool = True) -> TDG:
+    """Build the TDG of a synchronous pipeline-parallel step.
+
+    Forward task F(m, s) depends on F(m, s-1) (activation flow) and the
+    previous microbatch on the same stage (in-order stage occupancy).
+    Backward task B(m, s) depends on B(m, s+1) and F(m, s).
+    This graph *is* the static taskgraph that 1F1B/GPipe replay.
+    """
+    tdg = TDG(region=f"pipeline[{n_stages}x{n_microbatches}]")
+
+    def _noop(*xs):  # placeholder payload; lowering substitutes stage fns
+        return xs[0] if len(xs) == 1 else xs
+
+    for m in range(n_microbatches):
+        for s in range(n_stages):
+            ins = []
+            if s > 0:
+                ins.append(f"act[{m},{s - 1}]")
+            if m > 0:
+                ins.append(f"stage{s}.tok")  # serialization token per stage
+            tdg.add_task(_noop, ins=ins, outs=[f"act[{m},{s}]", f"stage{s}.tok"],
+                         name=f"F[{m},{s}]", microbatch=m, stage=s, phase="fwd")
+    if include_backward:
+        for m in range(n_microbatches):
+            for s in reversed(range(n_stages)):
+                ins = [f"act[{m},{s}]"]
+                if s < n_stages - 1:
+                    ins.append(f"grad[{m},{s + 1}]")
+                tdg.add_task(_noop, ins=ins,
+                             outs=[f"grad[{m},{s}]", f"stage{s}.tok"],
+                             name=f"B[{m},{s}]", microbatch=m, stage=s, phase="bwd")
+    tdg.validate()
+    return tdg
+
+
+def one_f_one_b_order(n_stages: int, n_microbatches: int) -> list[list[tuple[str, int]]]:
+    """Per-stage static instruction streams for the 1F1B schedule.
+
+    Returns ``streams[stage] = [("F", m) | ("B", m), ...]`` — the classic
+    1F1B order: warm-up of (n_stages - stage) forwards, then alternate
+    1 forward / 1 backward, then drain. This is the per-worker queue content
+    of the pipeline TDG's list schedule, precomputed exactly.
+    """
+    streams: list[list[tuple[str, int]]] = []
+    for s in range(n_stages):
+        warmup = min(n_stages - s, n_microbatches)
+        stream: list[tuple[str, int]] = [("F", m) for m in range(warmup)]
+        nf, nb = warmup, 0
+        while nb < n_microbatches:
+            stream.append(("B", nb))
+            nb += 1
+            if nf < n_microbatches:
+                stream.append(("F", nf))
+                nf += 1
+        streams.append(stream)
+    return streams
+
+
+def validate_execution_order(tdg: TDG, order: Sequence[int]) -> bool:
+    """True iff ``order`` respects every edge (used by property tests)."""
+    pos = {tid: i for i, tid in enumerate(order)}
+    if len(pos) != tdg.num_tasks:
+        return False
+    return all(pos[e.src] < pos[e.dst] for e in tdg.edges)

@@ -1,0 +1,106 @@
+"""TDG serialization — the compiler→runtime handoff artifact.
+
+In the paper, the compile-time path EMITS a TDG that the runtime later
+loads and executes (Fig. 3: "reading the TDG built by the compiler").
+Here the equivalent artifact is a JSON description of the graph —
+tasks (by *registered payload name*), depend clauses, edges, slots,
+metadata — that can be saved at record time and loaded in a different
+process, re-binding payloads through a task-function registry.
+
+Payload code itself is not serialized (same as the paper: the TDG file
+references outlined functions by symbol); the registry plays the linker.
+Round-tripping preserves the graph exactly (same edges, same schedule),
+which the tests assert via topo-wave equality and replay equivalence.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Callable
+
+from .tdg import TDG, Edge, EdgeKind
+
+
+class TaskFnRegistry:
+    """Name -> payload function registry (the 'symbol table')."""
+
+    def __init__(self) -> None:
+        self._fns: dict[str, Callable] = {}
+
+    def register(self, name: str | None = None):
+        def deco(fn: Callable) -> Callable:
+            key = name or fn.__name__
+            if key in self._fns and self._fns[key] is not fn:
+                raise ValueError(f"payload {key!r} already registered")
+            self._fns[key] = fn
+            fn.__taskfn_name__ = key
+            return fn
+        return deco
+
+    def get(self, name: str) -> Callable:
+        if name not in self._fns:
+            raise KeyError(f"unknown task payload {name!r}; "
+                           f"registered: {sorted(self._fns)}")
+        return self._fns[name]
+
+    def name_of(self, fn: Callable) -> str:
+        key = getattr(fn, "__taskfn_name__", None)
+        if key is None:
+            raise ValueError(
+                f"payload {fn!r} is not registered (decorate with "
+                "@registry.register()) — cannot serialize this TDG")
+        return key
+
+
+def tdg_to_dict(tdg: TDG, registry: TaskFnRegistry) -> dict:
+    return {
+        "version": 1,
+        "region": tdg.region,
+        "tasks": [
+            {"tid": t.tid, "fn": registry.name_of(t.fn),
+             "ins": list(t.ins), "outs": list(t.outs), "name": t.name,
+             "cost_hint": t.cost_hint, "metadata": t.metadata}
+            for t in tdg.tasks
+        ],
+        "edges": [
+            {"src": e.src, "dst": e.dst, "kind": e.kind.value, "slot": e.slot}
+            for e in tdg.edges
+        ],
+        "input_slots": list(tdg.input_slots),
+        "output_slots": list(tdg.output_slots),
+    }
+
+
+def tdg_from_dict(data: dict, registry: TaskFnRegistry) -> TDG:
+    if data.get("version") != 1:
+        raise ValueError(f"unsupported TDG version {data.get('version')}")
+    tdg = TDG(region=data["region"])
+    # rebuild tasks WITHOUT re-resolving deps (edges are authoritative)
+    from .tdg import Task
+
+    for td in data["tasks"]:
+        t = Task(td["tid"], registry.get(td["fn"]), tuple(td["ins"]),
+                 tuple(td["outs"]), name=td["name"],
+                 cost_hint=td["cost_hint"], metadata=dict(td["metadata"]))
+        tdg.tasks.append(t)
+        tdg.preds[t.tid] = set()
+        tdg.succs[t.tid] = set()
+    for ed in data["edges"]:
+        e = Edge(ed["src"], ed["dst"], EdgeKind(ed["kind"]), ed["slot"])
+        tdg.edges.append(e)
+        tdg.preds[e.dst].add(e.src)
+        tdg.succs[e.src].add(e.dst)
+    tdg.input_slots = list(data["input_slots"])
+    tdg.output_slots = list(data["output_slots"])
+    tdg._written = set(tdg.output_slots)
+    tdg.validate()
+    return tdg
+
+
+def save_tdg(tdg: TDG, path, registry: TaskFnRegistry) -> None:
+    with open(path, "w") as f:
+        json.dump(tdg_to_dict(tdg, registry), f, indent=1)
+
+
+def load_tdg(path, registry: TaskFnRegistry) -> TDG:
+    with open(path) as f:
+        return tdg_from_dict(json.load(f), registry)

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels (with jnp oracles) for the performance-critical ops."""
+from . import ops, ref
+from .flash_attention import flash_attention
+from .moe_gmm import grouped_matmul
+from .rmsnorm import rmsnorm
+from .ssd_scan import ssd
+
+__all__ = ["ops", "ref", "flash_attention", "grouped_matmul", "rmsnorm", "ssd"]

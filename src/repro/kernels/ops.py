@@ -1,0 +1,88 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+One switch decides the backend per call site:
+  * on TPU, the Pallas kernels run compiled;
+  * on CPU (this container), model code uses the jnp references — identical
+    numerics, XLA-fused — while kernel *tests* exercise the Pallas bodies
+    via interpret=True.
+
+``set_kernel_mode(...)`` / env ``REPRO_KERNELS={auto,pallas,ref,interpret}``
+override the choice globally (used by tests/benchmarks).
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import moe_gmm as _gmm
+from . import ref as _ref
+from . import rmsnorm as _rms
+from . import ssd_scan as _ssd
+from . import xla_attention as _xla
+
+Mode = Literal["auto", "pallas", "ref", "interpret"]
+_mode: Mode = os.environ.get("REPRO_KERNELS", "auto")  # type: ignore[assignment]
+
+
+def set_kernel_mode(mode: Mode) -> None:
+    global _mode
+    assert mode in ("auto", "pallas", "ref", "interpret"), mode
+    _mode = mode
+
+
+def kernel_mode() -> Mode:
+    return _mode
+
+
+def _resolved() -> str:
+    if _mode != "auto":
+        return _mode
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def attention(q, k, v, *, causal=True, window=None, chunk=None, scale=None,
+              q_offset=0, q_chunk=2048):
+    mode = _resolved()
+    if mode == "ref":
+        # memory-sane pure-XLA paths (exact numerics, bounded live scores)
+        if not causal:
+            return _xla.sdpa_cross(q, k, v, scale=scale)
+        if window:
+            return _xla.sdpa_sliding(q, k, v, window=window, scale=scale)
+        if chunk:
+            return _xla.sdpa_chunked(q, k, v, chunk=chunk, scale=scale)
+        return _xla.sdpa_full(q, k, v, causal=causal, scale=scale,
+                              q_offset=q_offset, chunk=q_chunk)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               chunk=chunk, scale=scale, q_offset=q_offset,
+                               interpret=(mode == "interpret"))
+
+
+def ssd(x, dt, A, Bm, Cm, D=None, init_state=None, *, chunk=128):
+    mode = _resolved()
+    if mode == "ref":
+        return _ref.ssd_chunked_ref(x, dt, A, Bm, Cm, D=D,
+                                    init_state=init_state,
+                                    chunk=min(chunk, x.shape[1]))
+    return _ssd.ssd(x, dt, A, Bm, Cm, D=D, init_state=init_state,
+                    chunk=chunk, interpret=(mode == "interpret"))
+
+
+def grouped_matmul(x, w):
+    mode = _resolved()
+    if mode == "ref":
+        return _ref.grouped_matmul_ref(x, w)
+    return _gmm.grouped_matmul(x, w, interpret=(mode == "interpret"))
+
+
+def rmsnorm(x, w, eps=1e-6, residual=None):
+    mode = _resolved()
+    if mode == "ref":
+        return _ref.rmsnorm_ref(x, w, eps=eps, residual=residual)
+    return _rms.rmsnorm(x, w, eps=eps, residual=residual,
+                        interpret=(mode == "interpret"))

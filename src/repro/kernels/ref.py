@@ -1,0 +1,195 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the numerical ground truth: simple, obviously-correct
+implementations used (a) by kernel tests (``assert_allclose`` against the
+Pallas kernels in interpret mode, sweeping shapes/dtypes) and (b) as the
+default compute path on CPU, where Pallas TPU kernels only run interpreted.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps masked softmax NaN-free
+
+
+# ---------------------------------------------------------------------------
+# Attention (full / causal / sliding-window / chunked-local, GQA)
+# ---------------------------------------------------------------------------
+
+def attention_ref(
+    q: jax.Array,  # (B, Sq, Hq, D)
+    k: jax.Array,  # (B, Sk, Hkv, D)
+    v: jax.Array,  # (B, Sk, Hkv, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,        # sliding window size (keys kept per query)
+    chunk: int | None = None,         # chunked-local attention (llama4 iRoPE style)
+    scale: float | None = None,
+    q_offset: int = 0,                # absolute position of q[0] (decode steps)
+) -> jax.Array:
+    """Reference scaled-dot-product attention with GQA broadcast."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+
+    kf = jnp.repeat(k, group, axis=2)  # (B, Sk, Hq, D)
+    vf = jnp.repeat(v, group, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kf.astype(jnp.float32)) * scale
+
+    qpos = q_offset + jnp.arange(Sq)[:, None]   # (Sq, 1)
+    kpos = jnp.arange(Sk)[None, :]              # (1, Sk)
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    if chunk is not None:
+        mask &= (qpos // chunk) == (kpos // chunk)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vf.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD (state-space dual) — exact sequential-scan oracle
+# ---------------------------------------------------------------------------
+
+def ssd_ref(
+    x: jax.Array,     # (B, S, H, P)
+    dt: jax.Array,    # (B, S, H)      positive step sizes
+    A: jax.Array,     # (H,)           negative decay rates
+    Bm: jax.Array,    # (B, S, G, N)   input projections (G groups)
+    Cm: jax.Array,    # (B, S, G, N)   output projections
+    D: jax.Array | None = None,   # (H,) skip
+    init_state: jax.Array | None = None,  # (B, H, P, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential SSM recurrence: h[t] = exp(dt*A) h[t-1] + dt*B[t] x[t];
+    y[t] = C[t] . h[t] (+ D x[t]). Returns (y, final_state)."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert H % G == 0
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2)  # (B, S, H, N)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf * A[None, None, :])               # (B, S, H)
+    dBx = jnp.einsum("bsh,bshn,bshp->bshpn", dtf, Bh.astype(jnp.float32), xf)
+
+    h0 = (jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(h, inp):
+        dA_t, dBx_t, C_t = inp
+        h = dA_t[..., None, None] * h + dBx_t
+        y_t = jnp.einsum("bhpn,bhn->bhp", h, C_t)
+        return h, y_t
+
+    hT, ys = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(dA, 1, 0), jnp.moveaxis(dBx, 1, 0),
+         jnp.moveaxis(Ch.astype(jnp.float32), 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1)  # (B, S, H, P)
+    if D is not None:
+        y = y + D[None, None, :, None] * xf
+    return y.astype(x.dtype), hT.astype(jnp.float32)
+
+
+def ssd_chunked_ref(x, dt, A, Bm, Cm, D=None, init_state=None, chunk: int = 64):
+    """Chunked (SSD) form of the same recurrence, pure jnp — the blockwise
+    algorithm the Pallas kernel implements; exactly matches ``ssd_ref``."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    if S % chunk != 0:
+        # pad tail with dt=0 steps: dA=1 and dB·x=0, so state and outputs
+        # for real positions are unchanged
+        pad = chunk - S % chunk
+        y, hT = ssd_chunked_ref(
+            jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(dt, ((0, 0), (0, pad), (0, 0))),
+            A,
+            jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            D=D, init_state=init_state, chunk=chunk)
+        return y[:, :S], hT
+    nc, Q = S // chunk, chunk
+
+    Bh = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    lda = dtf * A[None, None, :]                       # log dA  (B, S, H)
+    xs = xf * dtf[..., None]                           # dt * x
+
+    def rs(t, last):  # reshape to chunks
+        return t.reshape((Bsz, nc, Q) + last)
+
+    lda_c = rs(lda, (H,))                              # (B, nc, Q, H)
+    xs_c = rs(xs, (H, P))
+    b_c = rs(Bh, (H, N))
+    c_c = rs(Ch, (H, N))
+
+    cums = jnp.cumsum(lda_c, axis=2)                   # (B, nc, Q, H)
+    # intra-chunk: y[i] += (C[i].B[j]) exp(cums[i]-cums[j]) xs[j], j<=i
+    decay = jnp.exp(cums[:, :, :, None] - cums[:, :, None, :, :])  # (B,nc,Qi,Qj,H)
+    iota = jnp.arange(Q)
+    lmask = (iota[:, None] >= iota[None, :])[None, None, :, :, None]
+    L = jnp.where(lmask, decay, 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", c_c, b_c)
+    y_intra = jnp.einsum("bcijh,bcijh,bcjhp->bcihp", scores, L, xs_c)
+
+    # chunk-local end states
+    decay_to_end = jnp.exp(cums[:, :, -1:, :] - cums)  # (B, nc, Q, H)
+    state_local = jnp.einsum("bcjhn,bcjh,bcjhp->bchpn", b_c, decay_to_end, xs_c)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cums[:, :, -1, :])           # (B, nc, H)
+    h0 = (jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(h, inp):
+        cd, sl = inp
+        h_prev = h
+        h = cd[..., None, None] * h + sl
+        return h, h_prev
+
+    hT, h_prevs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(state_local, 1, 0)))
+    h_prev = jnp.moveaxis(h_prevs, 0, 1)               # (B, nc, H, P, N) state entering chunk
+    y_inter = jnp.einsum("bcihn,bchpn,bcih->bcihp", c_c, h_prev, jnp.exp(cums))
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    if D is not None:
+        y = y + D[None, None, :, None] * xf
+    return y.astype(x.dtype), hT.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Grouped (per-expert) matmul — MoE expert GEMM
+# ---------------------------------------------------------------------------
+
+def grouped_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """(E, C, d) @ (E, d, f) -> (E, C, f), f32 accumulation."""
+    return jax.lax.dot_general(
+        x, w, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fused RMSNorm (+ optional residual add)
+# ---------------------------------------------------------------------------
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-6,
+                residual: jax.Array | None = None) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if residual is not None:
+        xf = xf + residual.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,171 @@
+"""Mamba-2 SSD (state-space duality) chunked scan — Pallas TPU kernel.
+
+The SSD decomposition splits the sequential SSM recurrence into
+  (1) an *intra-chunk* part — dense, attention-like matmuls of size
+      (Q x N) @ (N x Q) and (Q x Q) @ (Q x P) per chunk: MXU work, and
+  (2) an *inter-chunk* state recurrence over n_chunks steps — tiny,
+      sequential, O(S/Q) depth.
+
+Part (1) dominates FLOPs and is the Pallas kernel below, gridded over
+(batch*heads, chunks) with everything for one chunk resident in VMEM
+(Q=chunk, N=state, P=headdim all 64/128-aligned → MXU-shaped matmuls).
+Part (2) plus the cross-chunk output correction stay in jnp (a
+``lax.scan`` over n_chunks elements and one small einsum) — they are
+bandwidth-trivial and XLA fuses them well.
+
+Validated against ``ref.ssd_ref`` (exact sequential oracle) and
+``ref.ssd_chunked_ref`` (blockwise jnp twin of this kernel).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_chunk_kernel(xs_ref, b_ref, c_ref, lda_ref,
+                      y_ref, state_ref, cdecay_ref):
+    """One (batch*head, chunk) cell: intra-chunk output + local end-state.
+
+    xs  : (Q, P)  dt * x
+    b,c : (Q, N)
+    lda : (Q, 1)  log dA = dt * A
+    out y      : (Q, P)   intra-chunk contribution
+    out state  : (N, P)   chunk end-state (before inter-chunk recurrence)
+    out cdecay : (1, 1)   total log-decay across the chunk
+    """
+    xs = xs_ref[0].astype(jnp.float32)
+    b = b_ref[0].astype(jnp.float32)
+    c = c_ref[0].astype(jnp.float32)
+    lda = lda_ref[0].astype(jnp.float32)          # (Q, 1)
+    Q = xs.shape[0]
+
+    cums = jnp.cumsum(lda, axis=0)                # (Q, 1) inclusive
+    # decay(i<-j) = exp(cums[i] - cums[j]) for j <= i
+    diff = cums - cums.reshape(1, Q)              # (Q_i, Q_j)
+    li = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(li >= lj, jnp.exp(diff), 0.0)
+
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (Q, Q)
+    y = jax.lax.dot_general(scores * L, xs, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)       # (Q, P)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    total = cums[Q - 1:Q, :]                      # (1, 1)
+    decay_to_end = jnp.exp(total - cums)          # (Q, 1)
+    state = jax.lax.dot_general(b * decay_to_end, xs,
+                                (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)   # (N, P)
+    state_ref[0] = state.astype(state_ref.dtype)
+    cdecay_ref[0] = total.astype(cdecay_ref.dtype)
+
+
+def ssd_intra_chunk(xs, b, c, lda, *, chunk: int, interpret: bool = False):
+    """Pallas-gridded intra-chunk pass.
+
+    xs: (BH, S, P); b, c: (BH, S, N); lda: (BH, S, 1). S % chunk == 0.
+    Returns (y_intra (BH,S,P), state_local (BH,nc,N,P), cdecay (BH,nc,1,1)).
+    """
+    BH, S, P = xs.shape
+    N = b.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    grid = (BH, nc)
+    seq_map = lambda h, c_: (h, c_, 0)
+    out = pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), seq_map),
+            pl.BlockSpec((1, chunk, N), seq_map),
+            pl.BlockSpec((1, chunk, N), seq_map),
+            pl.BlockSpec((1, chunk, 1), seq_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, P), seq_map),
+            pl.BlockSpec((1, N, P), lambda h, c_: (h * nc + c_, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda h, c_: (h * nc + c_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, P), jnp.float32),
+            jax.ShapeDtypeStruct((BH * nc, N, P), jnp.float32),
+            jax.ShapeDtypeStruct((BH * nc, 1, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+        name="ssd_intra_chunk",
+    )(xs, b, c, lda)
+    y_intra, state_local, cdecay = out
+    return (y_intra,
+            state_local.reshape(BH, nc, N, P),
+            cdecay.reshape(BH, nc, 1, 1))
+
+
+def ssd(
+    x: jax.Array,     # (B, S, H, P)
+    dt: jax.Array,    # (B, S, H)
+    A: jax.Array,     # (H,)
+    Bm: jax.Array,    # (B, S, G, N)
+    Cm: jax.Array,    # (B, S, G, N)
+    D: jax.Array | None = None,
+    init_state: jax.Array | None = None,   # (B, H, P, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Full SSD: Pallas intra-chunk + jnp inter-chunk. Matches ``ref.ssd_ref``."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    # layout: (B, S, H, *) -> (B*H, S, *)
+    def to_bh(t, d):
+        return jnp.moveaxis(t, 2, 1).reshape(Bsz * H, S, d)
+
+    dtf = dt.astype(jnp.float32)
+    xs = to_bh(x.astype(jnp.float32) * dtf[..., None], P)
+    Bh = to_bh(jnp.repeat(Bm, rep, axis=2).astype(jnp.float32), N)
+    Ch = to_bh(jnp.repeat(Cm, rep, axis=2).astype(jnp.float32), N)
+    lda = to_bh((dtf * A[None, None, :])[..., None], 1)
+
+    y_intra, state_local, cdecay = ssd_intra_chunk(
+        xs, Bh, Ch, lda, chunk=chunk, interpret=interpret)
+
+    # inter-chunk recurrence (tiny: nc sequential steps over (BH, N, P))
+    h0 = (jnp.zeros((Bsz * H, N, P), jnp.float32) if init_state is None
+          else jnp.swapaxes(init_state.astype(jnp.float32), 2, 3)
+          .reshape(Bsz * H, N, P))
+    cd = jnp.exp(cdecay[..., 0, 0])                     # (BH, nc)
+
+    def step(h, inp):
+        cd_c, sl_c = inp                                # (BH,), (BH, N, P)
+        h_prev = h
+        h = cd_c[:, None, None] * h + sl_c
+        return h, h_prev
+
+    hT, h_prevs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(cd, 1, 0), jnp.moveaxis(state_local, 1, 0)))
+    h_prev = jnp.moveaxis(h_prevs, 0, 1)                # (BH, nc, N, P)
+
+    # cross-chunk output: y[i] += exp(cums[i]) * C[i] @ h_prev(chunk(i))
+    cums = jnp.cumsum(lda.reshape(Bsz * H, nc, chunk, 1), axis=2)
+    c_c = Ch.reshape(Bsz * H, nc, chunk, N)
+    y_inter = jnp.einsum("zcin,zcnp,zci->zcip", c_c, h_prev,
+                         jnp.exp(cums[..., 0]))
+    y = y_intra + y_inter.reshape(Bsz * H, S, P)
+
+    y = jnp.moveaxis(y.reshape(Bsz, H, S, P), 1, 2)     # (B, S, H, P)
+    if D is not None:
+        y = y + D[None, None, :, None] * x.astype(jnp.float32)
+    hT = jnp.swapaxes(hT.reshape(Bsz, H, N, P), 2, 3)   # (B, H, P, N)
+    return y.astype(x.dtype), hT

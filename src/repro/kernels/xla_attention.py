@@ -1,0 +1,150 @@
+"""Memory-sane pure-XLA attention (the non-Pallas compute path).
+
+The tiny oracle in ``ref.py`` materializes (B,H,S,S) scores and repeats KV
+heads — fine for tests, catastrophic at 32k+. These implementations keep
+the exact numerics but bound memory and (for local patterns) FLOPs:
+
+  * ``sdpa_full``     — lax.scan over query chunks: O(S·chunk) live scores.
+                        FLOPs remain S² (causal masking, no block skip —
+                        the known ~2x overcount vs flash; roofline.py
+                        corrects for it analytically).
+  * ``sdpa_sliding``  — block-banded: each w-block of queries attends its
+                        own + previous key block: exact O(S·2w) flops+mem.
+  * ``sdpa_chunked``  — block-diagonal (llama4 iRoPE local layers):
+                        exact O(S·c).
+
+All use grouped-GQA einsums (no KV repeat) and f32 softmax.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def _group(q, k):
+    """(B,S,Hq,D),(B,S,Hkv,D) -> q as (B,S,Hkv,G,D)."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    return q.reshape(B, S, Hkv, Hq // Hkv, D)
+
+
+def sdpa_full(q, k, v, *, causal: bool = True, scale: float | None = None,
+              q_offset: int = 0, chunk: int = 2048) -> jax.Array:
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    scale = (D ** -0.5) if scale is None else scale
+    qg = _group(q, k).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    chunk = min(chunk, Sq)
+    if Sq % chunk != 0:
+        return _sdpa_full_once(qg, kf, vf, causal, scale, q_offset, 0, Sq).astype(q.dtype)
+
+    # python loop over q chunks (not lax.scan): bounded live scores, exact
+    # dry-run cost accounting; XLA reuses the chunk buffers across steps.
+    nq = Sq // chunk
+    outs = []
+    for i in range(nq):
+        qc = qg[:, i * chunk:(i + 1) * chunk]
+        outs.append(_sdpa_full_once(qc, kf, vf, causal, scale, q_offset,
+                                    i * chunk, chunk))
+    out = jnp.concatenate(outs, axis=1).reshape(B, Sq, Hq, D)
+    return out.astype(q.dtype)
+
+
+def _sdpa_full_once(qg, kf, vf, causal, scale, q_offset, chunk_start, chunk_len):
+    B, Sq = qg.shape[0], qg.shape[1]
+    Sk = kf.shape[1]
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kf) * scale
+    qpos = q_offset + chunk_start + jnp.arange(chunk_len)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    if causal:
+        s = jnp.where((qpos >= kpos)[None, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return out.reshape(out.shape[:2] + (-1, out.shape[-1]))
+
+
+def sdpa_sliding(q, k, v, *, window: int, scale: float | None = None) -> jax.Array:
+    """Causal sliding-window attention, block-banded (exact O(S·2w))."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    scale = (D ** -0.5) if scale is None else scale
+    w = window
+    if S % w != 0 or S <= w:
+        # small/ragged: single band via full path with window mask
+        return _sdpa_masked_small(q, k, v, scale, window=w)
+    nb = S // w
+    qg = _group(q, k).astype(jnp.float32).reshape(B, nb, w, Hkv, Hq // Hkv, D)
+    kb = k.astype(jnp.float32).reshape(B, nb, w, Hkv, D)
+    vb = v.astype(jnp.float32).reshape(B, nb, w, Hkv, D)
+    kprev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([kprev, kb], axis=2)           # (B, nb, 2w, Hkv, D)
+    v2 = jnp.concatenate([vprev, vb], axis=2)
+
+    s = jnp.einsum("bnqhgd,bnkhd->bnhgqk", qg, k2) * scale
+    qpos = jnp.arange(w)[:, None] + w                   # within the 2w frame
+    kpos = jnp.arange(2 * w)[None, :]
+    base = (qpos >= kpos) & ((qpos - kpos) < w)         # (w, 2w)
+    first = base & (kpos >= w)                          # block 0 has no prev
+    mask = jnp.where((jnp.arange(nb) == 0)[:, None, None],
+                     first[None], base[None])           # (nb, w, 2w)
+    s = jnp.where(mask[None, :, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bnhgqk,bnkhd->bnqhgd", p, v2)
+    return out.reshape(B, S, Hq, D).astype(q.dtype)
+
+
+def sdpa_chunked(q, k, v, *, chunk: int, scale: float | None = None) -> jax.Array:
+    """Causal block-diagonal (chunked-local) attention: exact O(S·c)."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    scale = (D ** -0.5) if scale is None else scale
+    c = chunk
+    if S % c != 0 or S <= c:
+        return _sdpa_masked_small(q, k, v, scale, chunk=c)
+    nb = S // c
+    qg = _group(q, k).astype(jnp.float32).reshape(B, nb, c, Hkv, Hq // Hkv, D)
+    kb = k.astype(jnp.float32).reshape(B, nb, c, Hkv, D)
+    vb = v.astype(jnp.float32).reshape(B, nb, c, Hkv, D)
+    s = jnp.einsum("bnqhgd,bnkhd->bnhgqk", qg, kb) * scale
+    i = jnp.arange(c)
+    mask = i[:, None] >= i[None, :]
+    s = jnp.where(mask[None, None, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bnhgqk,bnkhd->bnqhgd", p, vb)
+    return out.reshape(B, S, Hq, D).astype(q.dtype)
+
+
+def _sdpa_masked_small(q, k, v, scale, window: int | None = None,
+                       chunk: int | None = None):
+    B, Sq, Hq, D = q.shape
+    Sk = k.shape[1]
+    qg = _group(q, k).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = qpos >= kpos
+    if window:
+        mask &= (qpos - kpos) < window
+    if chunk:
+        mask &= (qpos // chunk) == (kpos // chunk)
+    s = jnp.where(mask[None, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def sdpa_cross(q, k, v, *, scale: float | None = None) -> jax.Array:
+    """Non-causal (encoder / cross) attention, grouped-GQA."""
+    B, Sq, Hq, D = q.shape
+    scale = (D ** -0.5) if scale is None else scale
+    qg = _group(q, k).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32)) * scale
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)

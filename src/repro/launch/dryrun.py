@@ -1,0 +1,375 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any jax import (jax locks the
+# device count at first init), which is why the docstring sits below them.
+DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces a JSON artifact under ``dryrun_artifacts/`` with
+  * memory_analysis  (per-device bytes: argument/output/temp/peak)
+  * cost_analysis    (HLO FLOPs / bytes accessed)
+  * collective bytes (parsed from the post-SPMD HLO: all-gather,
+    all-reduce, reduce-scatter, all-to-all, collective-permute)
+  * derived roofline terms (compute / memory / collective seconds)
+
+Run:  PYTHONPATH=src python -m repro.launch.dryrun --arch mamba2-370m \
+          --shape train_4k [--multi-pod] [--all] [--opt key=val ...]
+"""
+
+import argparse
+import functools
+import json
+import re
+import time
+import dataclasses
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS, SHAPES, get_config, shape_applicable
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import model as M
+from ..optim.adamw import adamw as _adamw
+from ..sharding import partition as P_
+from ..training.step import make_train_step, make_serve_step
+from . import specs as SP
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
+
+ART_DIR = pathlib.Path(__file__).resolve().parents[3] / "dryrun_artifacts"
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in the partitioned HLO.
+
+    Per-op link-byte factors (ring algorithms, (n-1)/n ~ 1):
+      all-reduce ~ 2x payload (reduce-scatter + all-gather phases);
+      others ~ 1x.
+    """
+    stats = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    link_bytes = 0
+    for line in hlo_text.splitlines():
+        if " = " not in line:
+            continue
+        _lhs, rhs = line.strip().split(" = ", 1)
+        m = _COLL_RE.search(rhs)
+        if not m or m.start() == 0:
+            continue  # opcode must follow the output shape
+        base = m.group(1)
+        out_bytes = _shape_bytes(rhs[:m.start()])
+        stats[base]["count"] += 1
+        stats[base]["bytes"] += out_bytes
+        link_bytes += out_bytes * (2 if base == "all-reduce" else 1)
+    stats["link_bytes"] = link_bytes
+    return stats
+
+
+def _mem_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _cost_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and (
+                k in ("flops", "transcendentals", "bytes accessed")
+                or k.startswith("bytes accessed"))}
+
+
+def apply_overrides(cfg: ModelConfig, opts: dict) -> ModelConfig:
+    if not opts:
+        return cfg
+    coerced = {}
+    for k, v in opts.items():
+        cur = getattr(cfg, k)
+        if isinstance(cur, bool):
+            coerced[k] = v in ("1", "true", "True")
+        elif isinstance(cur, int):
+            coerced[k] = int(v)
+        elif isinstance(cur, float):
+            coerced[k] = float(v)
+        else:
+            coerced[k] = v
+    return dataclasses.replace(cfg, **coerced)
+
+
+def _lower_and_compile(cfg: ModelConfig, shape: ShapeConfig, mesh, rules=None):
+    """One lower+compile of the given config/shape on the mesh. Returns
+    (lowered, compiled, timings)."""
+    t0 = time.time()
+    with P_.use_mesh(mesh, rules):
+        if shape.kind == "train":
+            optimizer = _adamw(1e-4)
+            sp = SP.input_specs(cfg, shape, mesh, optimizer)
+            step = make_train_step(cfg, optimizer)
+            jitted = jax.jit(
+                step,
+                in_shardings=(sp["params_sharding"], sp["opt_sharding"],
+                              jax.tree_util.tree_map(lambda x: x.sharding,
+                                                     sp["batch"])),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(sp["params"], sp["opt_state"], sp["batch"])
+        elif shape.kind == "prefill":
+            sp = SP.input_specs(cfg, shape, mesh)
+
+            def prefill_fn(params, batch):
+                logits, caches, pos = M.prefill(params, cfg, batch,
+                                                max_len=shape.seq_len)
+                return logits, caches, pos
+
+            jitted = jax.jit(
+                prefill_fn,
+                in_shardings=(sp["params_sharding"],
+                              jax.tree_util.tree_map(lambda x: x.sharding,
+                                                     sp["batch"])))
+            lowered = jitted.lower(sp["params"], sp["batch"])
+        else:  # decode
+            sp = SP.input_specs(cfg, shape, mesh)
+            serve = make_serve_step(cfg)
+            jitted = jax.jit(
+                serve,
+                in_shardings=(sp["params_sharding"],
+                              sp["tokens"].sharding, sp["pos"].sharding,
+                              jax.tree_util.tree_map(lambda x: x.sharding,
+                                                     sp["caches"])),
+                donate_argnums=(3,))
+            lowered = jitted.lower(sp["params"], sp["tokens"], sp["pos"],
+                                   sp["caches"])
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    return lowered, compiled, {"lower_s": round(t_lower, 2),
+                               "compile_s": round(t_compile, 2)}
+
+
+def _measure(compiled) -> dict:
+    mem = _mem_dict(compiled)
+    cost = _cost_dict(compiled)
+    coll = collective_stats(compiled.as_text())
+    return {"memory": mem, "cost": cost, "collectives": coll,
+            "flops": cost.get("flops", 0.0),
+            "bytes": cost.get("bytes accessed", 0.0),
+            "link_bytes": coll["link_bytes"]}
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               opts: dict | None = None, mesh=None, save: bool = True,
+               rules=None) -> dict:
+    """Dry-run one (arch, shape, mesh) cell.
+
+    Train cells: (a) full-depth scan-mode compile — proves the production
+    config lowers/compiles and gives full-depth memory analysis; (b) two
+    reduced-depth UNROLLED compiles (L=g and L=2g layers) whose cost delta
+    gives the exact per-layer FLOPs/bytes/collective bytes (lax.scan bodies
+    are counted once by XLA cost analysis, so scan-mode numbers undercount);
+    costs are linearly extrapolated to full depth. Prefill/decode cells are
+    fully unrolled already -> exact without extrapolation.
+    """
+    opts = dict(opts or {})
+    rules_tag = opts.pop("_rules", None)
+    cfg = apply_overrides(get_config(arch), opts)
+    if rules_tag is not None:
+        opts["_rules"] = rules_tag   # keep in artifact tag/record
+    shape = SHAPES[shape_name]
+    if shape.kind == "prefill":
+        # larger q-chunks at 32k keep the unrolled HLO compact (compile time;
+        # total FLOPs/bytes are chunking-invariant, only live temps grow)
+        cfg = dataclasses.replace(
+            cfg, attn_q_chunk=max(cfg.attn_q_chunk, 8192))
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    mesh_name = "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+
+    timings: dict = {}
+    if shape.kind == "train":
+        full_cfg = dataclasses.replace(cfg, scan_layers=True)
+        _, compiled, t = _lower_and_compile(full_cfg, shape, mesh, rules)
+        timings["full_scan"] = t
+        m_full = _measure(compiled)
+        del compiled
+        g = max(cfg.global_attn_every, 1)
+        if cfg.family == "encdec":
+            small = lambda L: dataclasses.replace(
+                cfg, scan_layers=False, num_layers=L, encoder_layers=L)
+        else:
+            small = lambda L: dataclasses.replace(
+                cfg, scan_layers=False, num_layers=L)
+        _, c1, t1 = _lower_and_compile(small(g), shape, mesh, rules)
+        timings["unroll_g"] = t1
+        m1 = _measure(c1)
+        del c1
+        _, c2, t2 = _lower_and_compile(small(2 * g), shape, mesh, rules)
+        timings["unroll_2g"] = t2
+        m2 = _measure(c2)
+        del c2
+        L = cfg.num_layers
+        def extrap(key):
+            slope = (m2[key] - m1[key]) / g          # per layer
+            return m2[key] + (L - 2 * g) * slope
+        flops_total = extrap("flops")
+        bytes_total = extrap("bytes")
+        link_bytes = extrap("link_bytes")
+        mem = m_full["memory"]
+        cost_mode = "extrapolated_exact"
+        coll = {"scan_mode": m_full["collectives"],
+                "unrolled_2g": m2["collectives"]}
+    else:
+        _, compiled, t = _lower_and_compile(cfg, shape, mesh, rules)
+        timings["full_unrolled"] = t
+        m = _measure(compiled)
+        del compiled
+        flops_total, bytes_total, link_bytes = m["flops"], m["bytes"], m["link_bytes"]
+        mem = m["memory"]
+        coll = m["collectives"]
+        cost_mode = "exact"
+
+    compute_s = flops_total / PEAK_FLOPS_BF16
+    memory_s = bytes_total / HBM_BW
+    collective_s = link_bytes / ICI_BW
+
+    training = shape.kind == "train"
+    decode = shape.kind == "decode"
+    model_flops = (cfg.model_flops_per_token(shape.seq_len, training=training,
+                                             decode=decode)
+                   * shape.tokens_per_step)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "chips": n_chips,
+        "opts": opts or {},
+        "timings": timings,
+        "cost_mode": cost_mode,
+        "memory": mem,
+        "collectives": coll,
+        "roofline": {
+            **{k: float(v) for k, v in terms.items()},
+            "dominant": dominant,
+            "hlo_flops_per_device": flops_total,
+            "hlo_bytes_per_device": bytes_total,
+            "link_bytes_per_device": link_bytes,
+            "model_flops_global": model_flops,
+            "model_flops_per_device": model_flops / n_chips,
+            "useful_flop_ratio": (model_flops / n_chips) / flops_total
+            if flops_total else None,
+        },
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    if save:
+        ART_DIR.mkdir(exist_ok=True)
+        tag = "" if not opts else "_opt-" + "-".join(
+            f"{k}={v}" for k, v in sorted((opts or {}).items()))
+        fname = ART_DIR / f"{arch}__{shape_name}__{mesh_name}{tag}.json"
+        fname.write_text(json.dumps(result, indent=1))
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCHS), default=None)
+    ap.add_argument("--shape", choices=list(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true", help="every applicable cell")
+    ap.add_argument("--opt", action="append", default=[],
+                    help="config override key=value (perf iterations)")
+    ap.add_argument("--rules", choices=["default", "no_ssm_fsdp",
+                                        "ssm_dp_only"],
+                    default="default",
+                    help="partition rule table (perf iterations)")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+
+    rules = {"default": None,
+             "no_ssm_fsdp": P_.NO_SSM_FSDP_RULES,
+             "ssm_dp_only": P_.SSM_DP_ONLY_RULES}[args.rules]
+    opts = dict(kv.split("=", 1) for kv in args.opt)
+    if args.rules != "default":
+        opts["_rules"] = args.rules  # lands in the artifact tag
+    archs = list(ARCHS) if args.all or args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.all or args.shape is None else [args.shape]
+    pods = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+
+    meshes = {mp: make_production_mesh(multi_pod=mp) for mp in set(pods)}
+    failures = 0
+    for mp in pods:
+        for arch in archs:
+            for shape in shapes:
+                mesh = meshes[mp]
+                mesh_name = "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+                out = ART_DIR / f"{arch}__{shape}__{mesh_name}.json"
+                if args.skip_existing and out.exists() and not opts:
+                    print(f"[skip-existing] {arch} {shape} {mesh_name}")
+                    continue
+                try:
+                    r = lower_cell(arch, shape, multi_pod=mp, opts=opts,
+                                   mesh=mesh, rules=rules)
+                except Exception as e:
+                    failures += 1
+                    print(f"[FAIL] {arch} {shape} multi_pod={mp}: {type(e).__name__}: {e}",
+                          flush=True)
+                    continue
+                if "skipped" in r:
+                    print(f"[skip] {arch} {shape}: {r['skipped']}", flush=True)
+                    continue
+                rl = r["roofline"]
+                tsum = sum(t["compile_s"] for t in r["timings"].values())
+                print(f"[ok] {arch} {shape} {r['mesh']} "
+                      f"compile={tsum:.0f}s dom={rl['dominant']} "
+                      f"comp={rl['compute_s']:.4f}s mem={rl['memory_s']:.4f}s "
+                      f"coll={rl['collective_s']:.4f}s "
+                      f"useful={rl['useful_flop_ratio'] and round(rl['useful_flop_ratio'], 3)}",
+                      flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

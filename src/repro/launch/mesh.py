@@ -1,0 +1,40 @@
+"""Production meshes.
+
+Target hardware: TPU v5e pods — 16x16 = 256 chips per pod; multi-pod runs
+add a leading "pod" axis (2 pods = 512 chips for the dry-run; the axis
+generalizes to any pod count). Defined as FUNCTIONS so importing this
+module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "the dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before any jax import")
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_small_mesh(n_data: int = 2, n_model: int = 2) -> jax.sharding.Mesh:
+    """CPU-test mesh (uses however many host devices exist)."""
+    n = n_data * n_model
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    return jax.make_mesh((n_data, n_model), ("data", "model"), devices=devices)
+
+
+# TPU v5e per-chip hardware constants (roofline denominators)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link (~4 links usable per chip)

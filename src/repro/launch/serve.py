@@ -1,0 +1,70 @@
+"""Serving driver: batched prefill + decode with KV/SSM caches.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
+        --batch 4 --prompt-len 64 --gen 32
+
+The decode step is a recurrent taskgraph region in the paper's sense:
+recorded (compiled) once, replayed per generated token with donated caches.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS, get_config, reduced
+from ..models import init_params, prefill
+from ..training import make_serve_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCHS), default="qwen2.5-3b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+
+    key = jax.random.PRNGKey(args.seed + 1)
+    batch = {"tokens": jax.random.randint(
+        key, (args.batch, args.prompt_len), 2, cfg.vocab_size)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            key, (args.batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+
+    max_len = args.prompt_len + args.gen
+    t0 = time.time()
+    logits, caches, pos = prefill(params, cfg, batch, max_len=max_len)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+
+    serve_step = jax.jit(make_serve_step(cfg), donate_argnums=(3,))
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    outs = [tok]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        tok, caches = serve_step(params, tok[:, None], pos, caches)
+        pos = pos + 1
+        outs.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+    gen = jnp.stack(outs, axis=1)
+    tput = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
+    print(f"prefill: {t_prefill*1e3:.1f} ms for {args.batch}x{args.prompt_len}")
+    print(f"decode:  {t_decode*1e3:.1f} ms for {args.gen-1} steps "
+          f"({tput:.1f} tok/s)")
+    print("sample token ids:", gen[0, :16].tolist())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

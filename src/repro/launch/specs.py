@@ -1,0 +1,155 @@
+"""ShapeDtypeStruct stand-ins + shardings for every model input.
+
+Nothing here allocates: params/opt-state/caches/batches are built with
+``jax.eval_shape`` and annotated with NamedShardings so ``jit(...).lower()``
+sees the exact production layout.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import model as M
+from ..optim.adamw import Optimizer
+from ..sharding import partition as P_
+
+
+def _dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _dp_size(mesh: Mesh) -> int:
+    s = 1
+    for a in _dp_axes(mesh):
+        s *= mesh.shape[a]
+    return s
+
+
+def _model_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def batch_sharding(mesh: Mesh, batch: int, extra_dims: int) -> NamedSharding:
+    dp = _dp_axes(mesh)
+    if batch % max(_dp_size(mesh), 1) != 0:
+        dp = ()
+    spec = P(dp if dp else None, *([None] * extra_dims))
+    return NamedSharding(mesh, spec)
+
+
+def with_sharding(tree, shardings):
+    return jax.tree_util.tree_map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh),
+        tree, shardings)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh):
+    """(abstract params, shardings) without allocating."""
+    sds = jax.eval_shape(functools.partial(M.init_params, cfg),
+                         jax.random.PRNGKey(0))
+    sh = P_.param_shardings(sds, mesh)
+    return with_sharding(sds, sh), sh
+
+
+def opt_specs(cfg: ModelConfig, mesh: Mesh, optimizer: Optimizer, params_sds):
+    sds = jax.eval_shape(optimizer.init, params_sds)
+    sh = P_.param_shardings(sds, mesh)
+    return with_sharding(sds, sh), sh
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    B, S = shape.global_batch, shape.seq_len
+    toks = jax.ShapeDtypeStruct((B, S), jnp.int32,
+                                sharding=batch_sharding(mesh, B, 1))
+    batch = {"tokens": toks}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype),
+            sharding=batch_sharding(mesh, B, 2))
+    return batch
+
+
+def _cache_sharding(mesh: Mesh, shape: tuple, batch: int,
+                    shard_dims: dict[int, str]) -> NamedSharding:
+    """Shard dim0 (batch) over dp when divisible; named dims over model
+    when divisible (first divisible one wins — one use per mesh axis)."""
+    axes: list = [None] * len(shape)
+    dp = _dp_axes(mesh)
+    if dp and batch % _dp_size(mesh) == 0:
+        axes[0] = dp if len(dp) > 1 else dp[0]
+    msize = _model_size(mesh)
+    for dim, _name in shard_dims.items():
+        if ("model" in mesh.axis_names and shape[dim] % msize == 0
+                and "model" not in axes):
+            axes[dim] = "model"
+    return NamedSharding(mesh, P(*axes))
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """Abstract per-layer caches with shardings (decode shapes).
+
+    Default: shard kv-heads over "model" when divisible. With
+    ``cfg.shard_kv_seq`` (beyond-paper §Perf iteration 2), the cache
+    LENGTH dim is sharded over "model" instead — for MHA-style archs whose
+    head count doesn't divide the TP axis, this turns the per-step cache
+    read from fully-replicated into 1/TP per device.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    msize = _model_size(mesh)
+    sds = jax.eval_shape(lambda: M.init_caches(cfg, B, S))
+
+    def shard_leaf(path, leaf):
+        names = P_._path_names(path)
+        if names[-1] in ("k", "v"):
+            dims = {2: "kv_heads"}
+            if cfg.shard_kv_seq and leaf.shape[2] % msize != 0:
+                dims = {1: "kv_seq"}
+            sh = _cache_sharding(mesh, leaf.shape, B, dims)
+        elif names[-1] == "pos":
+            dims = {}
+            if cfg.shard_kv_seq and cfg.num_kv_heads % msize != 0:
+                dims = {1: "kv_seq"}
+            sh = _cache_sharding(mesh, leaf.shape, B, dims)
+        elif names[-1] == "ssd":
+            sh = _cache_sharding(mesh, leaf.shape, B, {1: "heads"})
+        elif names[-1] == "conv":
+            sh = _cache_sharding(mesh, leaf.shape, B, {2: "ch"})
+        else:
+            sh = _cache_sharding(mesh, leaf.shape, B, {})
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=sh)
+
+    return jax.tree_util.tree_map_with_path(shard_leaf, sds)
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    B = shape.global_batch
+    toks = jax.ShapeDtypeStruct((B, 1), jnp.int32,
+                                sharding=batch_sharding(mesh, B, 1))
+    pos = jax.ShapeDtypeStruct((B,), jnp.int32,
+                               sharding=batch_sharding(mesh, B, 0))
+    return toks, pos, cache_specs(cfg, shape, mesh)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                optimizer: Optimizer | None = None) -> dict[str, Any]:
+    """Everything ``dryrun`` needs for one (arch, shape, mesh) cell."""
+    params_sds, params_sh = param_specs(cfg, mesh)
+    out = {"params": params_sds, "params_sharding": params_sh}
+    if shape.kind == "train":
+        assert optimizer is not None
+        opt_sds, opt_sh = opt_specs(cfg, mesh, optimizer, params_sds)
+        out.update(opt_state=opt_sds, opt_sharding=opt_sh,
+                   batch=train_batch_specs(cfg, shape, mesh))
+    elif shape.kind == "prefill":
+        out.update(batch=train_batch_specs(cfg, shape, mesh))
+    else:  # decode
+        toks, pos, caches = decode_input_specs(cfg, shape, mesh)
+        out.update(tokens=toks, pos=pos, caches=caches)
+        if cfg.family == "encdec":
+            out["batch"] = train_batch_specs(cfg, shape, mesh)
+    return out

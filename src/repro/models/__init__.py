@@ -1,0 +1,9 @@
+"""Model zoo: functional layers, blocks and the model API."""
+from . import layers, model, moe, ssm, transformer
+from .model import (decode_step, forward, greedy_decode, hidden_states,
+                    init_caches, init_params, loss_fn, param_count, prefill)
+
+__all__ = ["layers", "model", "moe", "ssm", "transformer",
+           "init_params", "forward", "loss_fn", "hidden_states",
+           "init_caches", "prefill", "decode_step", "greedy_decode",
+           "param_count"]

@@ -1,0 +1,46 @@
+"""Gradient compression (int8 + error feedback) — a distributed-optimization
+building block for bandwidth-constrained cross-pod gradient sync.
+
+``compress``/``decompress`` quantize per-leaf to int8 with a per-leaf scale;
+``ef_step`` wraps a gradient tree with error feedback (residual carried in
+the optimizer-adjacent state) so the quantization error is re-injected on
+the next step — the standard convergence-preserving trick (1-bit Adam /
+EF-SGD lineage). On a real multi-pod run this halves-to-quarters the
+inter-pod reduce bytes; on CPU we validate numerics + convergence only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_leaf(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_leaf(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def ef_step(grads, ef_state):
+    """Returns (decompressed grads actually applied, new ef_state)."""
+
+    def leaf(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = compress_leaf(corrected)
+        dq = decompress_leaf(q, s)
+        return dq.astype(g.dtype), corrected - dq
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = tdef.flatten_up_to(ef_state)
+    out = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]))

@@ -1,0 +1,33 @@
+"""LR schedules: linear-warmup cosine and WSD (warmup-stable-decay, MiniCPM)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        t = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return lr
+
+
+def wsd(peak_lr: float, warmup_steps: int, stable_steps: int,
+        decay_steps: int, final_frac: float = 0.01):
+    """Warmup-Stable-Decay (MiniCPM, arXiv:2404.06395): linear warmup,
+    long constant plateau, short exponential-ish decay tail."""
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        t = (step - warmup_steps - stable_steps) / jnp.maximum(decay_steps, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        decay = peak_lr * jnp.power(final_frac, t)
+        return jnp.where(step < warmup_steps, warm,
+                         jnp.where(step < warmup_steps + stable_steps,
+                                   peak_lr, decay))
+    return lr

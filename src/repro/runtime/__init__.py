@@ -1,0 +1,7 @@
+"""Distributed runtime: fault tolerance, elasticity, straggler mitigation."""
+from .fault_tolerance import (RunState, run_with_recovery, StepTimer,
+                              StragglerPolicy)
+from .elastic import reshard_checkpoint, elastic_restart_plan
+
+__all__ = ["RunState", "run_with_recovery", "StepTimer", "StragglerPolicy",
+           "reshard_checkpoint", "elastic_restart_plan"]

@@ -1,0 +1,41 @@
+"""Elastic scaling: restart on a different device count.
+
+Checkpoints are host-sharded numpy trees (device-agnostic); re-meshing is
+therefore: load -> device_put with the NEW mesh's shardings. The plan
+helper validates that the new mesh divides the model's partitionable dims
+and falls back per-leaf to replication where it does not (same sanitize
+rule as launch-time sharding).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from ..sharding import partition as P_
+
+
+def elastic_restart_plan(old_chips: int, new_chips: int,
+                         global_batch: int) -> dict:
+    """Batch/mesh bookkeeping when the pod shrinks or grows."""
+    if new_chips <= 0:
+        raise ValueError("new_chips must be positive")
+    plan = {"old_chips": old_chips, "new_chips": new_chips}
+    # keep global batch fixed (training semantics unchanged); adjust
+    # per-device microbatch, dropping to grad-accumulation if needed
+    if global_batch % new_chips == 0:
+        plan["per_device_batch"] = global_batch // new_chips
+        plan["grad_accum"] = 1
+    else:
+        accum = 1
+        while global_batch % (new_chips * accum) and accum < 64:
+            accum += 1
+        plan["per_device_batch"] = max(1, global_batch // (new_chips * accum))
+        plan["grad_accum"] = accum
+    return plan
+
+
+def reshard_checkpoint(tree: Any, mesh: jax.sharding.Mesh, rules=None):
+    """Place a host-resident checkpoint tree onto a (new) mesh."""
+    shardings = P_.param_shardings(tree, mesh, rules)
+    return jax.tree_util.tree_map(jax.device_put, tree, shardings)

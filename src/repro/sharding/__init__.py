@@ -1,0 +1,16 @@
+"""Distribution: logical-axis partitioning rules over pod/data/model meshes."""
+from . import partition
+from .partition import (
+    DEFAULT_RULES,
+    use_mesh,
+    active_mesh,
+    constrain,
+    to_pspec,
+    param_pspecs,
+    param_shardings,
+    batch_pspec,
+)
+
+__all__ = ["partition", "DEFAULT_RULES", "use_mesh", "active_mesh",
+           "constrain", "to_pspec", "param_pspecs", "param_shardings",
+           "batch_pspec"]

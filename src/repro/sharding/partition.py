@@ -1,0 +1,225 @@
+"""Logical-axis partitioning: one rule table maps model-space axis names to
+mesh axes (pod/data/model). Model code only ever names LOGICAL axes
+("batch", "embed", "heads", "ff", "experts", "vocab", "seq"); the mesh
+shape and the parallelism strategy (DP+FSDP over "data", TP/EP/SP over
+"model", DP over "pod") are decided here and can be swapped per run —
+the paper's "scheduling is decided once, outside the tasks" principle
+applied to distribution.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> candidate mesh axes (first all present are used, in order)
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),     # data parallel
+    "embed": ("data",),           # FSDP / ZeRO-3 weight sharding
+    "vocab": ("model",),          # tensor parallel over vocab
+    "heads": ("model",),          # tensor parallel over attention heads
+    "kv_heads": ("model",),
+    "ff": ("model",),             # tensor parallel over MLP hidden
+    "experts": ("model",),        # expert parallel
+    "ssm_inner": ("model",),
+    "ssm_embed": ("data",),      # FSDP for SSM projections (see §Perf it.3b:
+    #                              NO_SSM_FSDP_RULES replicates them instead)
+    "seq": (),                    # sequence parallel (off by default)
+    "kv_seq": (),                 # shard KV-cache length (long-context decode)
+}
+
+
+# §Perf iteration 3b: replicate SSM projection weights over "data" —
+# GSPMD otherwise contracts over the FSDP-sharded dim with per-layer
+# activation all-reduces (measured: dominant AR bytes for mamba2).
+NO_SSM_FSDP_RULES = {**DEFAULT_RULES, "ssm_embed": ()}
+
+# §Perf iterations 3c/3d: small SSM models should not be tensor-parallel at
+# all — TP of d_model=1024 over 16 chips costs an (B,S,d) fwd+bwd
+# all-reduce pair per layer (measured dominant). Instead: 256-way pure DP
+# (batch over data AND model), FSDP over data, no vocab TP. Weights fit
+# replicated trivially (~0.4 GB/device fp32+Adam with FSDP/16).
+SSM_DP_ONLY_RULES = {**DEFAULT_RULES,
+                     "batch": ("pod", "data", "model"),
+                     "ssm_inner": (), "ssm_embed": ("data",),
+                     "vocab": ()}
+
+
+class _Active(threading.local):
+    mesh: Mesh | None = None
+    rules: dict[str, tuple[str, ...]] | None = None
+
+
+_ACTIVE = _Active()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh | None, rules: Mapping[str, tuple[str, ...]] | None = None):
+    """Activate a mesh + rule table for ``constrain`` and spec resolution."""
+    prev = (_ACTIVE.mesh, _ACTIVE.rules)
+    _ACTIVE.mesh = mesh
+    _ACTIVE.rules = dict(rules or DEFAULT_RULES)
+    try:
+        yield
+    finally:
+        _ACTIVE.mesh, _ACTIVE.rules = prev
+
+
+def active_mesh() -> Mesh | None:
+    return _ACTIVE.mesh
+
+
+def resolve_axis(logical: str | None,
+                 mesh: Mesh | None = None,
+                 rules: Mapping[str, tuple[str, ...]] | None = None):
+    if logical is None:
+        return None
+    mesh = mesh or _ACTIVE.mesh
+    rules = rules or _ACTIVE.rules or DEFAULT_RULES
+    if mesh is None:
+        return None
+    axes = [a for a in rules.get(logical, ()) if a in mesh.axis_names]
+    if not axes:
+        return None
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def to_pspec(logical_axes: Sequence[str | None],
+             mesh: Mesh | None = None,
+             rules: Mapping[str, tuple[str, ...]] | None = None) -> P:
+    return P(*(resolve_axis(a, mesh, rules) for a in logical_axes))
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[str | None]) -> jax.Array:
+    """with_sharding_constraint against the active mesh (no-op if none)."""
+    mesh = _ACTIVE.mesh
+    if mesh is None:
+        return x
+    spec = to_pspec(logical_axes, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter / state partition specs (by leaf path)
+# ---------------------------------------------------------------------------
+
+_LEAF_LOGICAL: list[tuple[tuple[str, ...], tuple[str | None, ...]]] = [
+    (("table",), ("vocab", "embed")),
+    (("wq", "w"), ("embed", "heads")),
+    (("wk", "w"), ("embed", "heads")),
+    (("wv", "w"), ("embed", "heads")),
+    (("wo", "w"), ("heads", "embed")),
+    (("wq", "b"), ("heads",)),
+    (("wk", "b"), ("heads",)),
+    (("wv", "b"), ("heads",)),
+    (("up", "w"), ("embed", "ff")),
+    (("gate", "w"), ("embed", "ff")),
+    (("down", "w"), ("ff", "embed")),
+    (("router", "w"), ("embed", None)),
+    (("in_proj", "w"), ("ssm_embed", "ssm_inner")),
+    (("out_proj", "w"), ("ssm_inner", "ssm_embed")),
+    (("conv", "w"), (None, "ssm_inner")),
+    (("conv", "b"), ("ssm_inner",)),
+    # split-proj SSM layout (§Perf): z/x TP-sharded, B/C/dt replicated
+    (("z_proj", "w"), ("ssm_embed", "ssm_inner")),
+    (("x_proj", "w"), ("ssm_embed", "ssm_inner")),
+    (("b_proj", "w"), ("ssm_embed", None)),
+    (("c_proj", "w"), ("ssm_embed", None)),
+    (("dt_proj", "w"), ("ssm_embed", None)),
+    (("xconv", "w"), (None, "ssm_inner")),
+    (("xconv", "b"), ("ssm_inner",)),
+    (("bconv", "w"), (None, None)),
+    (("cconv", "w"), (None, None)),
+    (("A_log",), ("ssm_inner",)),
+    (("D",), ("ssm_inner",)),
+    (("dt_bias",), ("ssm_inner",)),
+]
+
+
+def _path_names(path) -> tuple[str, ...]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+        else:
+            names.append(str(k))
+    return tuple(names)
+
+
+def logical_axes_for_path(names: tuple[str, ...], ndim: int) -> tuple[str | None, ...]:
+    # per-expert weights: EP owns the mesh "model" axis, expert-internal
+    # dims stay unsharded (each expert lives wholly on its EP shard)
+    if "experts" in names and names[-1] == "w":
+        if names[-2] in ("up", "gate"):
+            logical: tuple[str | None, ...] = ("experts", "embed", None)
+        elif names[-2] == "down":
+            logical = ("experts", None, "embed")
+        else:
+            logical = ("experts",) + (None,) * max(ndim - 1, 0)
+        while len(logical) < ndim:
+            logical = (None,) + logical
+        return logical[-ndim:] if len(logical) > ndim else logical
+
+    logical = None
+    for suffix, axes in _LEAF_LOGICAL:
+        if names[-len(suffix):] == suffix:
+            logical = axes
+            break
+    if logical is None:
+        logical = (None,) * ndim           # norms, scalars: replicated
+    while len(logical) < ndim:             # leading L (stacked layers) etc.
+        logical = (None,) + logical
+    return logical[-ndim:] if len(logical) > ndim else logical
+
+
+def param_pspecs(params: Any, mesh: Mesh | None = None,
+                 rules: Mapping[str, tuple[str, ...]] | None = None):
+    """PartitionSpec tree matching ``params`` (works on shapes or arrays)."""
+
+    def leaf(path, x):
+        names = _path_names(path)
+        ndim = len(getattr(x, "shape", ()))
+        return to_pspec(logical_axes_for_path(names, ndim), mesh, rules)
+
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return mesh.shape[entry]
+    n = 1
+    for a in entry:
+        n *= mesh.shape[a]
+    return n
+
+
+def sanitize_spec(shape: tuple, spec: P, mesh: Mesh) -> P:
+    """Drop mesh axes on dims they don't divide (pjit argument rule)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        out.append(entry if dim % _axis_size(mesh, entry) == 0 else None)
+    return P(*out)
+
+
+def param_shardings(params: Any, mesh: Mesh,
+                    rules: Mapping[str, tuple[str, ...]] | None = None):
+    specs = param_pspecs(params, mesh, rules)
+
+    def leaf(x, s):
+        return NamedSharding(mesh, sanitize_spec(tuple(x.shape), s, mesh))
+
+    return jax.tree_util.tree_map(leaf, params, specs)
+
+
+def batch_pspec(mesh: Mesh | None = None, extra: int = 1,
+                rules: Mapping[str, tuple[str, ...]] | None = None) -> P:
+    """(batch, ...) inputs: shard the leading batch dim."""
+    return to_pspec(("batch",) + (None,) * extra, mesh, rules)

@@ -1,0 +1,4 @@
+"""Training steps: plain fused step + TDG-granular step (record/replay)."""
+from .step import make_train_step, make_tdg_train_region, make_serve_step
+
+__all__ = ["make_train_step", "make_tdg_train_region", "make_serve_step"]

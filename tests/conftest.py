@@ -1,0 +1,18 @@
+import numpy as np
+import pytest
+
+# Tests must see the real single-device CPU (the 512-device override is
+# dryrun-only). Nothing here sets XLA_FLAGS.
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(42)
+
+
+@pytest.fixture(autouse=True)
+def _reset_taskgraph_registry():
+    from repro.core import reset_registry
+    reset_registry()
+    yield
+    reset_registry()

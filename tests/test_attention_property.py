@@ -1,0 +1,72 @@
+"""Property-based attention invariants (hypothesis over shapes/patterns)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels import xla_attention as X
+
+
+@st.composite
+def attn_case(draw):
+    B = draw(st.integers(1, 2))
+    Sq = draw(st.integers(1, 96))
+    Sk = draw(st.integers(1, 96))
+    Hkv = draw(st.sampled_from([1, 2]))
+    G = draw(st.sampled_from([1, 2, 4]))
+    D = draw(st.sampled_from([8, 16]))
+    seed = draw(st.integers(0, 2 ** 16))
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((B, Sq, Hkv * G, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Sk, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Sk, Hkv, D)), jnp.float32)
+    return q, k, v
+
+
+@given(attn_case())
+@settings(max_examples=25, deadline=None)
+def test_cross_matches_oracle(case):
+    q, k, v = case
+    np.testing.assert_allclose(X.sdpa_cross(q, k, v),
+                               ref.attention_ref(q, k, v, causal=False),
+                               atol=3e-5, rtol=3e-5)
+
+
+@given(attn_case(), st.sampled_from([16, 32, 48]))
+@settings(max_examples=25, deadline=None)
+def test_sliding_matches_oracle(case, window):
+    q, k, v = case
+    S = min(q.shape[1], k.shape[1])
+    q, k, v = q[:, :S], k[:, :S], v[:, :S]
+    np.testing.assert_allclose(
+        X.sdpa_sliding(q, k, v, window=window),
+        ref.attention_ref(q, k, v, causal=True, window=window),
+        atol=3e-5, rtol=3e-5)
+
+
+@given(attn_case(), st.sampled_from([8, 16, 64]))
+@settings(max_examples=25, deadline=None)
+def test_full_qchunk_invariance(case, chunk):
+    q, k, v = case
+    S = min(q.shape[1], k.shape[1])
+    q, k, v = q[:, :S], k[:, :S], v[:, :S]
+    a = X.sdpa_full(q, k, v, chunk=chunk)
+    b = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(a, b, atol=3e-5, rtol=3e-5)
+
+
+@given(attn_case())
+@settings(max_examples=15, deadline=None)
+def test_softmax_rows_convex(case):
+    """Output rows lie in the convex hull of V rows (softmax property)."""
+    q, k, v = case
+    S = min(q.shape[1], k.shape[1])
+    q, k, v = q[:, :S], k[:, :S], v[:, :S]
+    out = np.asarray(X.sdpa_full(q, k, v))
+    vmax = np.asarray(v).max(axis=1, keepdims=True)   # (B,1,Hkv,D)
+    vmin = np.asarray(v).min(axis=1, keepdims=True)
+    G = q.shape[2] // k.shape[2]
+    vmax = np.repeat(vmax, G, axis=2)
+    vmin = np.repeat(vmin, G, axis=2)
+    assert (out <= vmax[:, :1] + 1e-4).all()
+    assert (out >= vmin[:, :1] - 1e-4).all()

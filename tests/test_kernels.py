@@ -1,0 +1,178 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs pure-jnp oracles,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (flash_attention, grouped_matmul, ref, rmsnorm,
+                           ssd)
+from repro.kernels import xla_attention as X
+
+ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _arr(rng, *shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("seq,hq,hkv,d", [
+        (128, 4, 4, 64),       # MHA
+        (256, 8, 2, 64),       # GQA
+        (256, 4, 1, 128),      # MQA
+        (100, 4, 2, 64),       # ragged tail
+    ])
+    def test_causal(self, rng, seq, hq, hkv, d, dtype):
+        q = _arr(rng, 2, seq, hq, d, dtype=dtype)
+        k = _arr(rng, 2, seq, hkv, d, dtype=dtype)
+        v = _arr(rng, 2, seq, hkv, d, dtype=dtype)
+        out = flash_attention(q, k, v, causal=True, interpret=True)
+        want = ref.attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32),
+                                   atol=ATOL[dtype], rtol=ATOL[dtype])
+
+    @pytest.mark.parametrize("window", [32, 64, 100])
+    def test_sliding_window(self, rng, window):
+        q = _arr(rng, 1, 256, 4, 64)
+        k = _arr(rng, 1, 256, 2, 64)
+        v = _arr(rng, 1, 256, 2, 64)
+        out = flash_attention(q, k, v, causal=True, window=window,
+                              interpret=True)
+        want = ref.attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+    @pytest.mark.parametrize("chunk", [64, 128])
+    def test_chunked_local(self, rng, chunk):
+        q = _arr(rng, 1, 256, 4, 64)
+        k = _arr(rng, 1, 256, 2, 64)
+        v = _arr(rng, 1, 256, 2, 64)
+        out = flash_attention(q, k, v, causal=True, chunk=chunk,
+                              interpret=True)
+        want = ref.attention_ref(q, k, v, causal=True, chunk=chunk)
+        np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+    def test_cross_attention(self, rng):
+        q = _arr(rng, 2, 64, 4, 64)
+        k = _arr(rng, 2, 200, 2, 64)
+        v = _arr(rng, 2, 200, 2, 64)
+        out = flash_attention(q, k, v, causal=False, interpret=True)
+        want = ref.attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+    def test_decode_offset(self, rng):
+        S = 128
+        q = _arr(rng, 2, 1, 4, 64)
+        k = _arr(rng, 2, S, 2, 64)
+        v = _arr(rng, 2, S, 2, 64)
+        out = flash_attention(q, k, v, causal=True, q_offset=S - 1,
+                              interpret=True)
+        want = ref.attention_ref(q, k, v, causal=True, q_offset=S - 1)
+        np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+    def test_block_skip_equals_masked(self, rng):
+        """Block-skipping (pl.when) must not change results vs full mask."""
+        q = _arr(rng, 1, 512, 2, 64)
+        k = _arr(rng, 1, 512, 2, 64)
+        v = _arr(rng, 1, 512, 2, 64)
+        a = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                            interpret=True)
+        b = flash_attention(q, k, v, causal=True, block_q=256, block_k=256,
+                            interpret=True)
+        np.testing.assert_allclose(a, b, atol=3e-5, rtol=3e-5)
+
+
+class TestXLAAttention:
+    @pytest.mark.parametrize("fn,kw", [
+        (X.sdpa_full, {}),
+        (X.sdpa_sliding, {"window": 64}),
+        (X.sdpa_chunked, {"chunk": 64}),
+    ])
+    def test_matches_oracle(self, rng, fn, kw):
+        q = _arr(rng, 2, 256, 4, 32)
+        k = _arr(rng, 2, 256, 2, 32)
+        v = _arr(rng, 2, 256, 2, 32)
+        out = fn(q, k, v, **kw)
+        want = ref.attention_ref(q, k, v, causal=True, **kw)
+        np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+    def test_qchunk_invariance(self, rng):
+        q = _arr(rng, 1, 256, 2, 32)
+        k = _arr(rng, 1, 256, 1, 32)
+        v = _arr(rng, 1, 256, 1, 32)
+        a = X.sdpa_full(q, k, v, chunk=32)
+        b = X.sdpa_full(q, k, v, chunk=256)
+        np.testing.assert_allclose(a, b, atol=2e-5, rtol=2e-5)
+
+
+class TestSSD:
+    @pytest.mark.parametrize("S,H,P,G,N,chunk", [
+        (128, 2, 32, 1, 16, 32),
+        (256, 4, 64, 2, 32, 64),
+        (64, 2, 16, 1, 64, 64),    # single chunk
+    ])
+    def test_chunked_matches_sequential(self, rng, S, H, P, G, N, chunk):
+        x = _arr(rng, 2, S, H, P)
+        dt = jnp.abs(_arr(rng, 2, S, H)) * 0.1 + 0.01
+        A = -jnp.abs(_arr(rng, H)) - 0.1
+        Bm = _arr(rng, 2, S, G, N, scale=0.5)
+        Cm = _arr(rng, 2, S, G, N, scale=0.5)
+        D = _arr(rng, H)
+        y_ref, h_ref = ref.ssd_ref(x, dt, A, Bm, Cm, D=D)
+        y_c, h_c = ref.ssd_chunked_ref(x, dt, A, Bm, Cm, D=D, chunk=chunk)
+        np.testing.assert_allclose(y_c, y_ref, atol=1e-3, rtol=1e-3)
+        np.testing.assert_allclose(h_c, h_ref, atol=1e-3, rtol=1e-3)
+        y_p, h_p = ssd(x, dt, A, Bm, Cm, D=D, chunk=chunk, interpret=True)
+        np.testing.assert_allclose(y_p, y_ref, atol=1e-3, rtol=1e-3)
+        np.testing.assert_allclose(h_p, h_ref, atol=1e-3, rtol=1e-3)
+
+    def test_state_chaining_matches_decode(self, rng):
+        """Chunked prefill state -> sequential decode == one long pass."""
+        S, H, P, G, N = 96, 2, 16, 1, 8
+        x = _arr(rng, 1, S, H, P)
+        dt = jnp.abs(_arr(rng, 1, S, H)) * 0.1 + 0.01
+        A = -jnp.abs(_arr(rng, H)) - 0.1
+        Bm = _arr(rng, 1, S, G, N, scale=0.5)
+        Cm = _arr(rng, 1, S, G, N, scale=0.5)
+        y_all, h_all = ref.ssd_ref(x, dt, A, Bm, Cm)
+        cut = 64
+        _, h1 = ssd(x[:, :cut], dt[:, :cut], A, Bm[:, :cut], Cm[:, :cut],
+                    chunk=32, interpret=True)
+        ys = []
+        h = h1
+        for t in range(cut, S):
+            y_t, h = ref.ssd_ref(x[:, t:t + 1], dt[:, t:t + 1], A,
+                                 Bm[:, t:t + 1], Cm[:, t:t + 1],
+                                 init_state=h)
+            ys.append(y_t)
+        np.testing.assert_allclose(jnp.concatenate(ys, 1), y_all[:, cut:],
+                                   atol=1e-3, rtol=1e-3)
+
+
+class TestGroupedMatmul:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("E,C,d,f", [
+        (4, 64, 128, 128), (2, 100, 256, 128), (8, 32, 128, 256),
+    ])
+    def test_matches_einsum(self, rng, E, C, d, f, dtype):
+        x = _arr(rng, E, C, d, dtype=dtype, scale=0.3)
+        w = _arr(rng, E, d, f, dtype=dtype, scale=0.3)
+        out = grouped_matmul(x, w, interpret=True)
+        want = ref.grouped_matmul_ref(x, w)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32),
+                                   atol=ATOL[dtype] * d, rtol=ATOL[dtype])
+
+
+class TestRMSNorm:
+    @pytest.mark.parametrize("shape", [(4, 17, 64), (1, 8, 512), (128, 256)])
+    @pytest.mark.parametrize("residual", [False, True])
+    def test_matches_oracle(self, rng, shape, residual):
+        x = _arr(rng, *shape)
+        w = _arr(rng, shape[-1])
+        r = _arr(rng, *shape) if residual else None
+        out = rmsnorm(x, w, residual=r, interpret=True)
+        want = ref.rmsnorm_ref(x, w, residual=r)
+        np.testing.assert_allclose(out, want, atol=1e-5, rtol=1e-5)

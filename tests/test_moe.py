@@ -1,0 +1,100 @@
+"""MoE layer: routing/dispatch invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import moe as MoE
+from repro.models import layers as L
+
+KEY = jax.random.PRNGKey(3)
+
+
+def _cfg(**kw):
+    base = reduced(get_config("qwen3-moe-30b-a3b"))
+    return dataclasses.replace(base, **kw)
+
+
+def test_capacity_formula():
+    cfg = _cfg(num_experts=4, top_k=2, capacity_factor=1.0)
+    c = MoE.capacity(cfg, 64)
+    assert c == 32 and c % 8 == 0
+
+
+def test_output_shape_and_finite():
+    cfg = _cfg()
+    p = MoE.moe_init(KEY, cfg)
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (2, 16, cfg.d_model),
+                          jnp.float32)
+    out, aux = MoE.moe_apply(p, cfg, x)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+    assert float(aux) >= 0
+
+
+def test_huge_capacity_recovers_all_tokens():
+    """With capacity >> tokens, dispatch+combine must not drop anything:
+    the combined output equals the dense mixture-of-experts computation."""
+    cfg = _cfg(num_experts=4, top_k=2, capacity_factor=8.0)
+    p = MoE.moe_init(KEY, cfg)
+    x = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 8, cfg.d_model),
+                          jnp.float32)
+    out, _ = MoE.moe_apply(p, cfg, x)
+
+    # dense reference: every token through its top-k experts
+    xt = x.reshape(-1, cfg.d_model)
+    logits = xt @ p["router"]["w"]
+    probs = jax.nn.softmax(logits, -1)
+    gv, ei = jax.lax.top_k(probs, cfg.top_k)
+    gv = gv / gv.sum(-1, keepdims=True)
+    ref = np.zeros_like(np.asarray(xt))
+    eup = np.asarray(p["experts"]["up"]["w"])
+    egate = np.asarray(p["experts"]["gate"]["w"])
+    edown = np.asarray(p["experts"]["down"]["w"])
+    for t in range(xt.shape[0]):
+        for j in range(cfg.top_k):
+            e = int(ei[t, j])
+            h = np.asarray(xt[t]) @ eup[e]
+            g = np.asarray(xt[t]) @ egate[e]
+            act = g / (1 + np.exp(-g)) * h
+            ref[t] += float(gv[t, j]) * (act @ edown[e])
+    np.testing.assert_allclose(np.asarray(out).reshape(-1, cfg.d_model), ref,
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_capacity_one_drops_tokens_gracefully():
+    cfg = _cfg(num_experts=2, top_k=1, capacity_factor=0.05)
+    p = MoE.moe_init(KEY, cfg)
+    x = jax.random.normal(KEY, (1, 64, cfg.d_model), jnp.float32)
+    out, _ = MoE.moe_apply(p, cfg, x)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_aux_loss_balanced_vs_collapsed():
+    cfg = _cfg(num_experts=4, top_k=1, router_aux_weight=1.0)
+    T, E = 256, 4
+    # balanced: uniform probabilities
+    probs = jnp.full((T, E), 0.25)
+    me, ce = probs.mean(0), jnp.full((E,), 0.25)
+    balanced = E * jnp.sum(me * ce)
+    # collapsed: all mass on expert 0
+    probs_c = jnp.eye(E)[jnp.zeros(T, int)]
+    collapsed = E * jnp.sum(probs_c.mean(0) * jnp.eye(E)[0])
+    assert float(collapsed) > float(balanced)
+
+
+def test_grad_flows_to_router_and_experts():
+    cfg = _cfg()
+    p = MoE.moe_init(KEY, cfg)
+    x = jax.random.normal(KEY, (1, 16, cfg.d_model), jnp.float32)
+
+    def loss(p):
+        out, aux = MoE.moe_apply(p, cfg, x)
+        return (out ** 2).sum() + aux
+
+    g = jax.grad(loss)(p)
+    assert float(jnp.abs(g["router"]["w"]).sum()) > 0
+    assert float(jnp.abs(g["experts"]["up"]["w"]).sum()) > 0

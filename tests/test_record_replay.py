@@ -1,0 +1,99 @@
+"""Record-and-replay region semantics (paper §4.2/4.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import TaskGraphRegion, registry, taskgraph
+
+
+def _mk_region(nowait=False):
+    @taskgraph(nowait=nowait)
+    def region(g, x, a):
+        g.task(lambda x, a: x * a, ins=["x", "a"], outs=["y"], name="scale")
+        g.task(lambda y: y + 1.0, ins=["y"], outs=["z"], name="shift")
+        g.task(lambda y, z: (y * z).sum(), ins=["y", "z"], outs=["w"], name="dot")
+    return region
+
+
+def test_first_call_records_then_replays():
+    region = _mk_region()
+    x = jnp.arange(4.0)
+    o1 = region(x=x, a=jnp.float32(3.0))
+    assert region.records == 1 and region.replays == 0
+    o2 = region(x=x, a=jnp.float32(3.0))
+    assert region.replays == 1
+    for k in o1:
+        np.testing.assert_allclose(o1[k], o2[k], rtol=1e-6)
+
+
+def test_replay_new_data_changes_result():
+    region = _mk_region()
+    region(x=jnp.arange(4.0), a=jnp.float32(1.0))
+    o = region(x=jnp.arange(4.0), a=jnp.float32(2.0))  # fill_data path
+    np.testing.assert_allclose(o["y"], 2.0 * jnp.arange(4.0))
+
+
+def test_replay_cache_per_signature():
+    region = _mk_region()
+    region(x=jnp.arange(4.0), a=jnp.float32(1.0))
+    region(x=jnp.arange(4.0), a=jnp.float32(1.0))
+    region(x=jnp.arange(8.0), a=jnp.float32(1.0))   # new shape -> new exec
+    assert len(region._replay_cache) == 2
+
+
+def test_static_build_matches_recorded_shape():
+    rec = _mk_region()
+    rec(x=jnp.arange(4.0), a=jnp.float32(1.0))
+
+    @taskgraph(name="static_twin")
+    def twin(g, x, a):
+        g.task(lambda x, a: x * a, ins=["x", "a"], outs=["y"])
+        g.task(lambda y: y + 1.0, ins=["y"], outs=["z"])
+        g.task(lambda y, z: (y * z).sum(), ins=["y", "z"], outs=["w"])
+
+    twin.build_static(x=jax.ShapeDtypeStruct((4,), jnp.float32),
+                      a=jax.ShapeDtypeStruct((), jnp.float32))
+    assert twin.static
+    assert twin.tdg.num_tasks == rec.tdg.num_tasks
+    assert twin.tdg.num_edges == rec.tdg.num_edges
+    o = twin(x=jnp.arange(4.0), a=jnp.float32(1.0))  # replay w/o recording
+    assert twin.records == 0 and twin.replays == 1
+    np.testing.assert_allclose(o["w"],
+                               (jnp.arange(4.0) * (jnp.arange(4.0) + 1)).sum())
+
+
+def test_source_location_registry():
+    region = _mk_region()
+    assert region.source_location in registry()
+    # same source location twice -> non-conforming (paper §4.1 rule 3)
+    with pytest.raises(ValueError):
+        TaskGraphRegion(region.build_fn, name=region.name)
+
+
+def test_non_recurrent_runs_without_tdg():
+    @taskgraph(recurrent=False)
+    def once(g, x):
+        g.task(lambda x: x + 1, ins=["x"], outs=["y"])
+    o = once(x=jnp.zeros(()))
+    assert once.tdg is None            # Algorithm 4.1 line 23 fallback
+    np.testing.assert_allclose(o["y"], 1.0)
+
+
+def test_outputs_restriction():
+    @taskgraph(outputs=("z",))
+    def region(g, x):
+        g.task(lambda x: x * 2, ins=["x"], outs=["y"])
+        g.task(lambda y: y + 1, ins=["y"], outs=["z"])
+    o = region(x=jnp.ones(()))
+    assert set(o) == {"z"}
+    o = region(x=jnp.ones(()))
+    assert set(o) == {"z"}
+
+
+def test_schedule_summary():
+    region = _mk_region()
+    region(x=jnp.arange(4.0), a=jnp.float32(1.0))
+    s = region.schedule_summary()
+    assert s["tasks"] == 3 and s["waves"] == 3 and s["roots"] == 1
+    assert s["dep_lookups_at_record"] > 0

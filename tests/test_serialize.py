@@ -1,0 +1,77 @@
+"""TDG serialization: the compiler->runtime handoff round-trip."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ReplayExecutor, TDG, topo_waves
+from repro.core.serialize import (TaskFnRegistry, load_tdg, save_tdg,
+                                  tdg_from_dict, tdg_to_dict)
+
+REG = TaskFnRegistry()
+
+
+@REG.register()
+def scale2(x):
+    return x * 2.0
+
+
+@REG.register()
+def addone(x):
+    return x + 1.0
+
+
+@REG.register("dotsum")
+def dot(x, y):
+    return (x * y).sum()
+
+
+def _graph():
+    tdg = TDG("ser")
+    tdg.add_task(scale2, ins=["a"], outs=["b"], name="s")
+    tdg.add_task(addone, ins=["b"], outs=["c"], name="p", cost_hint=2.0,
+                 stage=1)
+    tdg.add_task(dot, ins=["b", "c"], outs=["d"], name="d")
+    return tdg
+
+
+def test_roundtrip_structure_and_replay(tmp_path):
+    tdg = _graph()
+    f = tmp_path / "region.tdg.json"
+    save_tdg(tdg, f, REG)
+    tdg2 = load_tdg(f, REG)
+    assert tdg2.num_tasks == tdg.num_tasks
+    assert tdg2.num_edges == tdg.num_edges
+    assert topo_waves(tdg2) == topo_waves(tdg)
+    assert tdg2.tasks[1].metadata == {"stage": 1}
+    assert tdg2.tasks[1].cost_hint == 2.0
+    bufs = {"a": jnp.arange(4.0)}
+    r1 = ReplayExecutor(tdg).run(dict(bufs))
+    r2 = ReplayExecutor(tdg2).run(dict(bufs))
+    for k in r1:
+        np.testing.assert_allclose(r1[k], r2[k], rtol=1e-6)
+
+
+def test_unregistered_payload_rejected():
+    tdg = TDG("bad")
+    tdg.add_task(lambda x: x, ins=["a"], outs=["b"])
+    with pytest.raises(ValueError, match="not registered"):
+        tdg_to_dict(tdg, REG)
+
+
+def test_unknown_symbol_rejected():
+    data = tdg_to_dict(_graph(), REG)
+    data["tasks"][0]["fn"] = "nonexistent"
+    with pytest.raises(KeyError):
+        tdg_from_dict(data, REG)
+
+
+def test_version_gate():
+    data = tdg_to_dict(_graph(), REG)
+    data["version"] = 99
+    with pytest.raises(ValueError, match="version"):
+        tdg_from_dict(data, REG)
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        REG.register("scale2")(lambda x: x)

@@ -1,0 +1,202 @@
+"""Substrate tests: optimizer, schedules, compression, data, checkpoint,
+fault tolerance, elasticity."""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer, latest_step, load_pytree, save_pytree
+from repro.data import DataConfig, MixtureDataset, SyntheticLM, pack_documents
+from repro.optim import adamw, apply_updates, global_norm, warmup_cosine, wsd
+from repro.optim.compress import compress_leaf, decompress_leaf, ef_step, init_error_feedback
+from repro.runtime import (RunState, StragglerPolicy, elastic_restart_plan,
+                           run_with_recovery)
+
+
+class TestOptim:
+    def test_adamw_converges_quadratic(self):
+        opt = adamw(0.1, weight_decay=0.0)
+        params = {"w": jnp.ones((4,)) * 5.0}
+        state = opt.init(params)
+        target = jnp.asarray([1.0, -2.0, 3.0, 0.0])
+        for _ in range(200):
+            g = jax.grad(lambda p: ((p["w"] - target) ** 2).sum())(params)
+            upd, state, _ = opt.update(g, state, params)
+            params = apply_updates(params, upd)
+        np.testing.assert_allclose(params["w"], target, atol=1e-2)
+
+    def test_grad_clip(self):
+        opt = adamw(0.1, grad_clip=1.0)
+        params = {"w": jnp.zeros((3,))}
+        state = opt.init(params)
+        g = {"w": jnp.full((3,), 100.0)}
+        _, _, m = opt.update(g, state, params)
+        assert float(m["grad_norm"]) > 100
+
+    def test_cosine_schedule(self):
+        lr = warmup_cosine(1.0, 10, 100)
+        assert float(lr(0)) == 0.0
+        assert float(lr(10)) == pytest.approx(1.0)
+        assert float(lr(100)) == pytest.approx(0.1, abs=1e-6)
+
+    def test_wsd_schedule(self):
+        lr = wsd(1.0, 10, 50, 20)
+        assert float(lr(5)) == pytest.approx(0.5)
+        assert float(lr(30)) == pytest.approx(1.0)   # stable plateau
+        assert float(lr(59)) == pytest.approx(1.0)
+        assert float(lr(80)) == pytest.approx(0.01, rel=0.2)
+
+    def test_compression_roundtrip_small_error(self):
+        g = jnp.asarray(np.random.default_rng(0).standard_normal(1000),
+                        jnp.float32)
+        q, s = compress_leaf(g)
+        assert q.dtype == jnp.int8
+        err = float(jnp.abs(decompress_leaf(q, s) - g).max())
+        assert err <= float(s) * 0.5 + 1e-6
+
+    def test_error_feedback_unbiased_over_steps(self):
+        """EF accumulates quantization error -> mean applied grad ~ true."""
+        true_g = {"w": jnp.full((64,), 0.003)}   # tiny grads: worst case
+        ef = init_error_feedback(true_g)
+        applied = jnp.zeros((64,))
+        for _ in range(50):
+            dq, ef = ef_step(true_g, ef)
+            applied = applied + dq["w"]
+        np.testing.assert_allclose(applied / 50, true_g["w"], rtol=0.2)
+
+
+class TestData:
+    def test_deterministic_addressing(self):
+        cfg = DataConfig(vocab_size=100, seq_len=64, global_batch=4)
+        ds = SyntheticLM(cfg)
+        b1, b2 = ds.batch(7), ds.batch(7)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        assert not np.array_equal(ds.batch(8)["tokens"], b1["tokens"])
+
+    def test_host_sharding_disjoint(self):
+        k = dict(vocab_size=100, seq_len=32, global_batch=8, num_hosts=2)
+        b0 = SyntheticLM(DataConfig(host_id=0, **k)).batch(0)
+        b1 = SyntheticLM(DataConfig(host_id=1, **k)).batch(0)
+        assert b0["tokens"].shape == (4, 32)
+        assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+    def test_packing(self):
+        docs = [np.arange(2, 12), np.arange(2, 30)]
+        toks, mask = pack_documents(docs, 2, 16, eos_id=1, pad_id=0)
+        assert toks.shape == (2, 16)
+        assert (toks == 1).sum() >= 1            # EOS present
+        assert mask.shape == (2, 16)
+        assert set(np.unique(mask)) <= {0.0, 1.0}
+
+    def test_mixture_deterministic(self):
+        cfg = DataConfig(vocab_size=50, seq_len=16, global_batch=2)
+        mix = MixtureDataset([SyntheticLM(cfg), SyntheticLM(
+            DataConfig(vocab_size=50, seq_len=16, global_batch=2, seed=9))],
+            weights=[0.5, 0.5])
+        np.testing.assert_array_equal(mix.batch(3)["tokens"],
+                                      mix.batch(3)["tokens"])
+
+
+class TestCheckpoint:
+    def test_roundtrip_with_integrity(self, tmp_path):
+        tree = {"a": np.arange(10, dtype=np.float32),
+                "b": {"c": np.ones((3, 3), np.int32)}}
+        save_pytree(tree, tmp_path, 5)
+        out = load_pytree(tree, tmp_path, 5)
+        np.testing.assert_array_equal(out["a"], tree["a"])
+        assert latest_step(tmp_path) == 5
+
+    def test_torn_checkpoint_ignored(self, tmp_path):
+        tree = {"a": np.zeros(3, np.float32)}
+        save_pytree(tree, tmp_path, 1)
+        d = pathlib.Path(tmp_path) / "step_000002"
+        d.mkdir()
+        (d / "host_00000.npz").write_bytes(b"garbage")  # no _COMMITTED
+        assert latest_step(tmp_path) == 1
+
+    def test_corruption_detected(self, tmp_path):
+        tree = {"a": np.arange(100, dtype=np.float32)}
+        d = save_pytree(tree, tmp_path, 3)
+        bad = {"a": np.arange(100, dtype=np.float32) + 1}
+        np.savez(d / "host_00000.npz", a=bad["a"])
+        with pytest.raises(IOError):
+            load_pytree(tree, tmp_path, 3)
+
+    def test_async_checkpointer_gc(self, tmp_path):
+        ck = Checkpointer(tmp_path, keep=2)
+        for s in (1, 2, 3, 4):
+            ck.save({"x": np.full(4, s, np.float32)}, s)
+        ck.wait()
+        ck._gc()
+        assert latest_step(tmp_path) == 4
+        restored, step = ck.restore({"x": np.zeros(4, np.float32)})
+        assert step == 4
+        np.testing.assert_allclose(restored["x"], 4.0)
+
+
+class TestFaultTolerance:
+    def _step(self, state, batch):
+        p = jax.tree_util.tree_map(lambda x: x + 1.0, state.params)
+        return RunState(p, state.opt_state, state.step), {"loss": jnp.ones(())}
+
+    def test_recovery_from_injected_fault(self, tmp_path):
+        ck = Checkpointer(tmp_path)
+        boom = {"armed": True}
+
+        def injector(step):
+            if step == 7 and boom["armed"]:
+                boom["armed"] = False
+                raise RuntimeError("synthetic node failure")
+
+        state = RunState({"w": jnp.zeros(())}, {}, 0)
+        state, report = run_with_recovery(
+            self._step, state, lambda s: iter(lambda: {"x": 0}, None),
+            num_steps=10, checkpointer=ck, checkpoint_every=2,
+            fault_injector=injector)
+        assert report["restarts"] == 1
+        assert state.step == 10
+        # params re-applied from checkpoint: 6 ckpt + 4 more steps
+        assert float(state.params["w"]) == 10.0
+
+    def test_exhausted_restarts_raise(self, tmp_path):
+        ck = Checkpointer(tmp_path)
+
+        def injector(step):
+            raise RuntimeError("always failing")
+
+        with pytest.raises(RuntimeError):
+            run_with_recovery(self._step, RunState({"w": jnp.zeros(())}, {}, 0),
+                              lambda s: iter(lambda: {"x": 0}, None),
+                              num_steps=4, checkpointer=ck, max_restarts=2,
+                              fault_injector=injector)
+
+    def test_straggler_flagging(self):
+        pol = StragglerPolicy(threshold=2.0, warmup_steps=4)
+        from repro.runtime.fault_tolerance import StepTimer
+        t = StepTimer()
+        for _ in range(8):
+            t.record(1.0)
+        assert not pol.check(t, 1.5)
+        assert pol.check(t, 5.0)
+        assert pol.flagged == 1
+
+
+class TestElastic:
+    def test_plan_divisible(self):
+        plan = elastic_restart_plan(256, 128, 256)
+        assert plan["per_device_batch"] == 2 and plan["grad_accum"] == 1
+
+    def test_plan_with_accum(self):
+        plan = elastic_restart_plan(256, 192, 256)
+        assert plan["per_device_batch"] * plan["grad_accum"] * 192 >= 256 \
+            or plan["grad_accum"] > 1
+
+    def test_reshard_checkpoint_roundtrip(self):
+        from repro.runtime import reshard_checkpoint
+        mesh = jax.make_mesh((1, 1), ("data", "model"),
+                             devices=jax.devices()[:1])
+        tree = {"table": np.ones((16, 8), np.float32)}
+        out = reshard_checkpoint(tree, mesh)
+        np.testing.assert_allclose(np.asarray(out["table"]), 1.0)

@@ -1,0 +1,113 @@
+"""Core TDG structure: dependency semantics, graph invariants."""
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (TDG, DependencyTable, EdgeKind, critical_path,
+                        parallelism, topo_order, topo_waves,
+                        round_robin_assign, validate_execution_order)
+
+
+def _noop(*xs):
+    return xs[0] if len(xs) == 1 else xs
+
+
+class TestDependencySemantics:
+    def test_raw(self):
+        tdg = TDG()
+        a = tdg.add_task(_noop, outs=["x"])
+        b = tdg.add_task(_noop, ins=["x"], outs=["y"])
+        assert tdg.preds[b.tid] == {a.tid}
+        assert tdg.edges[0].kind == EdgeKind.RAW
+
+    def test_war(self):
+        tdg = TDG()
+        r = tdg.add_task(_noop, ins=["x"], outs=["y"])
+        w = tdg.add_task(_noop, outs=["x"])             # pure anti-dep on x
+        kinds = {(e.src, e.dst): e.kind for e in tdg.edges}
+        assert kinds[(r.tid, w.tid)] == EdgeKind.WAR
+
+    def test_edge_dedup_one_edge_per_pair(self):
+        tdg = TDG()
+        a = tdg.add_task(_noop, outs=["x", "y"])
+        b = tdg.add_task(_noop, ins=["x", "y"], outs=["x"])  # RAW+RAW+WAW
+        assert len([e for e in tdg.edges
+                    if (e.src, e.dst) == (a.tid, b.tid)]) == 1
+
+    def test_waw(self):
+        tdg = TDG()
+        a = tdg.add_task(_noop, outs=["x"])
+        b = tdg.add_task(_noop, outs=["x"])
+        kinds = {(e.src, e.dst): e.kind for e in tdg.edges}
+        assert kinds[(a.tid, b.tid)] == EdgeKind.WAW
+
+    def test_inout_chains(self):
+        tdg = TDG()
+        for i in range(5):
+            tdg.add_task(_noop, inouts=["x"])
+        order = topo_order(tdg)
+        assert order == list(range(5))
+        assert len(topo_waves(tdg)) == 5
+
+    def test_independent_tasks_one_wave(self):
+        tdg = TDG()
+        for i in range(8):
+            tdg.add_task(_noop, inouts=[f"x{i}"])
+        waves = topo_waves(tdg)
+        assert len(waves) == 1 and len(waves[0]) == 8
+        assert tdg.roots() == list(range(8))
+
+    def test_dep_table_never_freed(self):
+        # paper 4.3.2: edges to long-finished tasks still resolve
+        t = DependencyTable()
+        t.resolve(0, [], ["x"])
+        for i in range(1, 100):
+            t.resolve(i, [], [f"y{i}"])
+        edges = t.resolve(100, ["x"], [])
+        assert edges and edges[0].src == 0
+
+    def test_region_io_slots(self):
+        tdg = TDG()
+        tdg.add_task(_noop, ins=["a"], outs=["b"])
+        tdg.add_task(_noop, ins=["b", "c"], outs=["d"])
+        assert tdg.input_slots == ["a", "c"]
+        assert set(tdg.output_slots) == {"b", "d"}
+
+
+class TestSchedules:
+    def _diamond(self):
+        tdg = TDG()
+        tdg.add_task(_noop, outs=["a"])                    # 0
+        tdg.add_task(_noop, ins=["a"], outs=["b"])         # 1
+        tdg.add_task(_noop, ins=["a"], outs=["c"])         # 2
+        tdg.add_task(_noop, ins=["b", "c"], outs=["d"])    # 3
+        return tdg
+
+    def test_diamond_waves(self):
+        waves = topo_waves(self._diamond())
+        assert waves == [[0], [1, 2], [3]]
+
+    def test_critical_path_and_parallelism(self):
+        tdg = self._diamond()
+        assert critical_path(tdg) == 3.0
+        assert parallelism(tdg) == pytest.approx(4 / 3)
+
+    def test_round_robin(self):
+        q = round_robin_assign(list(range(10)), 4)
+        assert [len(x) for x in q] == [3, 3, 2, 2]
+        assert sorted(sum(q, [])) == list(range(10))
+
+    def test_order_validation(self):
+        tdg = self._diamond()
+        assert validate_execution_order(tdg, [0, 1, 2, 3])
+        assert validate_execution_order(tdg, [0, 2, 1, 3])
+        assert not validate_execution_order(tdg, [1, 0, 2, 3])
+        assert not validate_execution_order(tdg, [0, 1, 2])
+
+    def test_cycle_rejected(self):
+        tdg = self._diamond()
+        from repro.core.tdg import Edge
+        tdg.edges.append(Edge(3, 0, EdgeKind.RAW, "d"))
+        tdg.preds[0].add(3)
+        tdg.succs[3].add(0)
+        with pytest.raises(ValueError):
+            topo_order(tdg)
