@@ -1,6 +1,10 @@
 """The paper's application kernels as taskgraph regions, parameterized by
 block count (task granularity): Cholesky, Heat (Gauss-Seidel), N-body,
-AXPY, DOTP. Each returns (TDG, buffers, verify_fn)."""
+AXPY, DOTP — plus kernel-substrate workloads (RMSNorm, attention) whose
+task bodies dispatch through ``repro.kernels.registry``, so a single flag
+(``--kernels`` on ``benchmarks.run`` / ``REPRO_KERNELS``) sweeps them over
+the pallas | ref | interpret substrates. Each returns
+(TDG, buffers, verify_fn)."""
 from __future__ import annotations
 
 import jax
@@ -8,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import TDG
+from repro.kernels import ops, ref as kref
 
 
 def cholesky(n: int = 512, nb: int = 8):
@@ -156,10 +161,88 @@ def dotp(n: int = 1 << 22, nb: int = 8):
     return tdg, bufs, verify
 
 
+def rmsnorm_blocks(n_tokens: int = 8192, d: int = 512, nb: int = 8,
+                   depth: int = 2):
+    """Chains of fused RMSNorm over token blocks — registry-dispatched.
+
+    Each task calls ``ops.rmsnorm`` so the executing substrate (compiled
+    Pallas / jnp ref / interpreted Pallas) is whatever the kernel registry
+    resolves at trace time; replay pins it once, eager pays it per task.
+    """
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal((n_tokens, d)).astype(np.float32)
+    w = rng.standard_normal(d).astype(np.float32) * 0.1 + 1.0
+    bs = n_tokens // nb
+
+    def norm(xb, wv):
+        return ops.rmsnorm(xb, wv)
+
+    tdg = TDG(f"rmsnorm[{nb}]x{depth}")
+    for it in range(depth):
+        for b in range(nb):
+            tdg.add_task(norm, ins=[f"x{b}" if it == 0 else f"h{it-1}.{b}",
+                                    "w"],
+                         outs=[f"h{it}.{b}"], name=f"norm{it}.{b}")
+    bufs = {f"x{b}": jnp.asarray(x[b*bs:(b+1)*bs]) for b in range(nb)}
+    bufs["w"] = jnp.asarray(w)
+
+    def verify(out):
+        h = x
+        for _ in range(depth):
+            h = np.asarray(kref.rmsnorm_ref(jnp.asarray(h), jnp.asarray(w)))
+        got = np.concatenate([np.asarray(out[f"h{depth-1}.{b}"])
+                              for b in range(nb)])
+        np.testing.assert_allclose(got, h, atol=1e-4, rtol=1e-4)
+
+    return tdg, bufs, verify
+
+
+def attention_blocks(n_seqs: int = 16, seq: int = 128, heads: int = 4,
+                     head_dim: int = 64, nb: int = 4):
+    """Causal attention over a fixed pool of sequences — registry-dispatched.
+
+    Total work is constant (``n_seqs`` sequences); ``nb`` only sets the task
+    granularity (sequences-per-task = n_seqs/nb), matching the
+    fixed-work/varying-blocks convention of the other workloads. Each task
+    calls ``ops.attention``: with ``--kernels interpret`` it replays the real
+    flash-attention Pallas body, with ``ref`` the XLA oracle — same TDG,
+    same buffers.
+    """
+    assert n_seqs % nb == 0, (n_seqs, nb)
+    per = n_seqs // nb
+    rng = np.random.default_rng(6)
+    mk = lambda: rng.standard_normal((per, seq, heads, head_dim)).astype(np.float32)
+    qs, ks, vs = [mk() for _ in range(nb)], [mk() for _ in range(nb)], \
+                 [mk() for _ in range(nb)]
+
+    def attn(q, k, v):
+        return ops.attention(q, k, v, causal=True)
+
+    tdg = TDG(f"attention[{nb}]")
+    for b in range(nb):
+        tdg.add_task(attn, ins=[f"q{b}", f"k{b}", f"v{b}"], outs=[f"o{b}"],
+                     name=f"attn{b}")
+    bufs = {}
+    for b in range(nb):
+        bufs[f"q{b}"], bufs[f"k{b}"], bufs[f"v{b}"] = (
+            jnp.asarray(qs[b]), jnp.asarray(ks[b]), jnp.asarray(vs[b]))
+
+    def verify(out):
+        for b in range(nb):
+            want = kref.attention_ref(jnp.asarray(qs[b]), jnp.asarray(ks[b]),
+                                      jnp.asarray(vs[b]), causal=True)
+            np.testing.assert_allclose(np.asarray(out[f"o{b}"]),
+                                       np.asarray(want), atol=2e-3, rtol=2e-3)
+
+    return tdg, bufs, verify
+
+
 WORKLOADS = {
     "cholesky": cholesky,
     "heat": heat,
     "nbody": nbody,
     "axpy": axpy,
     "dotp": dotp,
+    "rmsnorm": rmsnorm_blocks,
+    "attention": attention_blocks,
 }

@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Tier-1 verification — the single source of truth for the test invocation,
+# so local runs and CI cannot drift. Usage:
+#   scripts/ci.sh               # default tier-1 run (slow sweeps excluded)
+#   scripts/ci.sh -m slow       # opt into the slow interpret-mode sweeps
+#   scripts/ci.sh tests/test_registry.py -q
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

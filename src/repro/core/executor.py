@@ -11,6 +11,10 @@ per-worker-deque mode reproduces LLVM libomp's distributed queues.
 
 ``ReplayExecutor`` runs the single fused executable produced by
 ``lower.lower_tdg`` (the paper's execute_TDG) with per-signature caching.
+The kernel *substrate* (pallas | ref | interpret, see
+``repro.kernels.registry``) is resolved once at construction and pinned for
+every lowering/trace: a replayed executable never flips substrate mid-flight
+even if the global kernel mode changes between calls.
 """
 from __future__ import annotations
 
@@ -24,6 +28,7 @@ import jax
 from . import lower as _lower
 from . import schedule as _schedule
 from .tdg import TDG, buffers_signature
+from ..kernels import registry as _kreg
 
 
 @dataclasses.dataclass
@@ -134,29 +139,44 @@ class EagerExecutor:
 
 
 class ReplayExecutor:
-    """Cached fused execution of a TDG (the paper's execute_TDG)."""
+    """Cached fused execution of a TDG (the paper's execute_TDG).
+
+    ``kernel_mode`` selects the kernel substrate for every task body in the
+    replayed executable (``None`` = the global mode at construction time;
+    ``"auto"`` resolves per platform). The choice is made ONCE, here, and
+    entered as a ``kernel_mode_scope`` around lowering and tracing — per-call
+    dispatch never consults the global switch again, so the fused executable
+    is substrate-stable and per-signature cache entries are keyed by mode.
+    """
 
     def __init__(self, tdg: TDG, donate_slots: tuple[str, ...] = (),
-                 order: list[int] | None = None):
+                 order: list[int] | None = None,
+                 kernel_mode: str | None = None):
         tdg.validate()
         self.tdg = tdg
         self.donate_slots = tuple(donate_slots)
         self.order = order
+        self.kernel_mode = _kreg.resolved_mode(kernel_mode)
         self._cache: dict[tuple, Callable] = {}
         self.replays = 0
 
     def _compiled_for(self, buffers: Mapping[str, Any]) -> Callable:
-        sig = buffers_signature(buffers)
+        sig = (buffers_signature(buffers), self.kernel_mode)
         fn = self._cache.get(sig)
         if fn is None:
-            fn = _lower.lower_tdg(self.tdg, order=self.order,
-                                  donate_slots=self.donate_slots)
+            with _kreg.kernel_mode_scope(self.kernel_mode):
+                fn = _lower.lower_tdg(self.tdg, order=self.order,
+                                      donate_slots=self.donate_slots)
             self._cache[sig] = fn
         return fn
 
     def run(self, buffers: Mapping[str, Any], block: bool = True) -> dict:
         fn = self._compiled_for(buffers)
-        out = fn(dict(buffers))
+        # jax.jit traces lazily on first invocation: keep the pinned mode in
+        # scope around the call so that trace bakes in this executor's
+        # substrate, not whatever the global flag says at the time.
+        with _kreg.kernel_mode_scope(self.kernel_mode):
+            out = fn(dict(buffers))
         self.replays += 1
         if block:
             jax.block_until_ready(out)

@@ -24,8 +24,8 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
+from . import compat
 from . import ref as _ref
 
 DEFAULT_BLOCK_Q = 128
@@ -149,7 +149,7 @@ def flash_attention(
         _fa_kernel, scale=scale, causal=causal, window=window, chunk=chunk,
         block_q=block_q, block_k=block_k, kv_len=Sk, q_offset=q_offset)
 
-    out = pl.pallas_call(
+    out = compat.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -160,11 +160,11 @@ def flash_attention(
         out_specs=pl.BlockSpec((1, block_q, D), q_map),
         out_shape=jax.ShapeDtypeStruct((B * Hq, sq_pad, D), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((block_q, _LANES), jnp.float32),   # m
-            pltpu.VMEM((block_q, _LANES), jnp.float32),   # l
-            pltpu.VMEM((block_q, D), jnp.float32),        # acc
+            compat.vmem((block_q, _LANES), jnp.float32),  # m
+            compat.vmem((block_q, _LANES), jnp.float32),  # l
+            compat.vmem((block_q, D), jnp.float32),       # acc
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="flash_attention",

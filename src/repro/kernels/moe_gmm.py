@@ -16,7 +16,8 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from . import compat
 
 
 def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref):
@@ -57,7 +58,7 @@ def grouped_matmul(
         x = jnp.pad(x, ((0, 0), (0, c_pad - C), (0, 0)))
 
     grid = (E, c_pad // block_c, f // block_f, d // block_d)
-    out = pl.pallas_call(
+    out = compat.pallas_call(
         _gmm_kernel,
         grid=grid,
         in_specs=[
@@ -67,8 +68,8 @@ def grouped_matmul(
         out_specs=pl.BlockSpec((1, block_c, block_f),
                                lambda e, i, j, k: (e, i, j)),
         out_shape=jax.ShapeDtypeStruct((E, c_pad, f), x.dtype),
-        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=[compat.vmem((block_c, block_f), jnp.float32)],
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

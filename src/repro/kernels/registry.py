@@ -1,0 +1,200 @@
+"""Kernel substrate registry: ``(op, backend, mode)`` -> implementation.
+
+The dispatch point for every performance-critical op in this package. Before
+this module, each function in ``ops.py`` carried its own hand-rolled if/elif
+over the substrate choice, so adding a backend (GPU/Triton, a new ref path)
+meant editing every op. Mirroring how worksharing-task runtimes centralize
+backend-specific orchestration behind one dispatch table, all of that now
+lives here:
+
+* **op** — the logical kernel name (``"attention"``, ``"rmsnorm"``,
+  ``"grouped_matmul"``, ``"ssd"``).
+* **backend** — the device platform the implementation targets (``"tpu"``,
+  ``"gpu"``, ``"cpu"``) or the wildcard ``"*"`` for platform-agnostic
+  implementations (the jnp references, interpret-mode Pallas).
+* **mode** — the substrate family: ``"pallas"`` (compiled kernels),
+  ``"ref"`` (pure-jnp oracles), ``"interpret"`` (Pallas bodies on the
+  interpreter; CPU-debuggable bit-twins of the compiled kernels).
+
+Resolution prefers an exact ``(op, backend, mode)`` entry and falls back to
+``(op, "*", mode)``. The global *kernel mode* (``"auto"`` resolves to
+``pallas`` on TPU and ``ref`` elsewhere) is owned here too: the env override
+``REPRO_KERNELS`` is validated eagerly at import so a typo fails at process
+start with a clear message, not deep inside a jit trace. Executors that
+record-and-replay a task graph pin the resolved mode once at lowering time
+via :func:`kernel_mode_scope`, so a replayed executable never flips
+substrate mid-flight.
+
+This registry is the extension point for future backends: a GPU/Triton PR
+registers ``(op, "gpu", "pallas")`` implementations and every caller —
+models, executors, benchmarks — picks them up with no dispatch edits.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import threading
+from typing import Any, Callable, Iterator
+
+import jax
+
+MODES = ("auto", "pallas", "ref", "interpret")
+SUBSTRATES = ("pallas", "ref", "interpret")   # concrete (non-auto) modes
+WILDCARD = "*"
+_ENV_VAR = "REPRO_KERNELS"
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelImpl:
+    """One registered kernel implementation."""
+    op: str
+    backend: str
+    mode: str
+    fn: Callable[..., Any]
+    doc: str = ""
+
+    def __call__(self, *args: Any, **kwargs: Any) -> Any:
+        return self.fn(*args, **kwargs)
+
+
+_lock = threading.Lock()
+_impls: dict[tuple[str, str, str], KernelImpl] = {}
+
+
+# ---------------------------------------------------------------- mode state
+
+def validate_mode(mode: str) -> str:
+    """Return ``mode`` if legal, else raise with the full legal set."""
+    if mode not in MODES:
+        raise ValueError(
+            f"invalid kernel mode {mode!r}: expected one of {MODES} "
+            f"(set via set_kernel_mode() or the {_ENV_VAR} env var)")
+    return mode
+
+
+def _env_mode() -> str:
+    raw = os.environ.get(_ENV_VAR, "auto")
+    try:
+        return validate_mode(raw)
+    except ValueError as e:
+        raise ValueError(f"bad {_ENV_VAR} environment variable: {e}") from None
+
+
+# Validated eagerly at import: a bogus REPRO_KERNELS fails here, at process
+# start, instead of exploding later inside dispatch.
+_mode: str = _env_mode()
+
+# Scope overrides are per-thread: two executors pinned to different
+# substrates can trace concurrently from different threads without racing
+# each other's mode (the process-wide base set by set_kernel_mode stays
+# shared; only the dynamic-extent override is thread-local).
+_scope = threading.local()
+
+
+def set_kernel_mode(mode: str) -> None:
+    """Set the process-wide substrate mode (validated immediately)."""
+    global _mode
+    _mode = validate_mode(mode)
+
+
+def kernel_mode() -> str:
+    """The currently effective mode, possibly ``"auto"``.
+
+    A ``kernel_mode_scope`` override active on THIS thread wins over the
+    process-wide mode.
+    """
+    return getattr(_scope, "mode", None) or _mode
+
+
+def resolved_mode(mode: str | None = None) -> str:
+    """Resolve ``mode`` (default: the effective mode) to a concrete substrate.
+
+    ``"auto"`` means: compiled Pallas on TPU, jnp references elsewhere.
+    """
+    mode = kernel_mode() if mode is None else validate_mode(mode)
+    if mode != "auto":
+        return mode
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+@contextlib.contextmanager
+def kernel_mode_scope(mode: str) -> Iterator[None]:
+    """Pin the mode for a dynamic extent on this thread (always restores).
+
+    Replay executors enter this scope around lowering/tracing so the
+    substrate choice is baked into the compiled executable exactly once —
+    and, being thread-local, concurrent executors pinned to different
+    substrates cannot race each other's choice.
+    """
+    prev = getattr(_scope, "mode", None)
+    _scope.mode = validate_mode(mode)
+    try:
+        yield
+    finally:
+        _scope.mode = prev
+
+
+# ----------------------------------------------------------------- registry
+
+def register(op: str, mode: str, backend: str = WILDCARD,
+             fn: Callable[..., Any] | None = None, doc: str = ""):
+    """Register an implementation for ``(op, backend, mode)``.
+
+    Usable directly (``register("rmsnorm", "ref", fn=impl)``) or as a
+    decorator. Re-registration of the same key replaces the entry (latest
+    wins), so downstream packages can override a substrate.
+    """
+    if mode not in SUBSTRATES:
+        raise ValueError(
+            f"cannot register mode {mode!r} for op {op!r}: expected one of "
+            f"{SUBSTRATES} ('auto' is a resolution rule, not a substrate)")
+
+    def _do(f: Callable[..., Any]) -> Callable[..., Any]:
+        impl = KernelImpl(op=op, backend=backend, mode=mode, fn=f,
+                          doc=doc or (f.__doc__ or "").strip().split("\n")[0])
+        with _lock:
+            _impls[(op, backend, mode)] = impl
+        return f
+
+    return _do(fn) if fn is not None else _do
+
+
+def resolve(op: str, mode: str | None = None,
+            backend: str | None = None) -> KernelImpl:
+    """Look up the implementation for ``op`` under ``mode`` on ``backend``.
+
+    ``mode=None`` uses the global mode; ``"auto"`` resolves per platform.
+    Exact ``(op, backend, mode)`` entries win over ``(op, "*", mode)``.
+    """
+    concrete = resolved_mode(mode)
+    backend = backend or jax.default_backend()
+    with _lock:
+        impl = (_impls.get((op, backend, concrete))
+                or _impls.get((op, WILDCARD, concrete)))
+        if impl is not None:
+            return impl
+        known_ops = sorted({k[0] for k in _impls})
+        alts = sorted(f"{k[1]}/{k[2]}" for k in _impls if k[0] == op)
+    if not alts:
+        raise KeyError(f"unknown kernel op {op!r}; registered ops: {known_ops}")
+    raise KeyError(
+        f"no implementation of {op!r} for backend={backend!r} "
+        f"mode={concrete!r}; available (backend/mode): {alts}")
+
+
+def dispatch(op: str, *args: Any, mode: str | None = None, **kwargs: Any) -> Any:
+    """Resolve and call in one step — the hot-path entry used by ``ops``."""
+    return resolve(op, mode=mode)(*args, **kwargs)
+
+
+def ops() -> list[str]:
+    """Sorted list of registered op names."""
+    with _lock:
+        return sorted({k[0] for k in _impls})
+
+
+def substrates(op: str) -> list[tuple[str, str]]:
+    """Sorted ``(backend, mode)`` pairs registered for ``op``."""
+    with _lock:
+        return sorted((k[1], k[2]) for k in _impls if k[0] == op)

@@ -12,7 +12,8 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from . import compat
 
 
 def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
@@ -47,13 +48,13 @@ def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6,
         grid=(n_pad // block_rows,),
         out_specs=pl.BlockSpec((block_rows, d), row_map),
         out_shape=jax.ShapeDtypeStruct((n_pad, d), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
         name="rmsnorm",
     )
     if residual is None:
-        out = pl.pallas_call(
+        out = compat.pallas_call(
             functools.partial(_rmsnorm_kernel, eps=eps),
             in_specs=[pl.BlockSpec((block_rows, d), row_map),
                       pl.BlockSpec((1, d), w_map)],
@@ -63,7 +64,7 @@ def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6,
         rf = residual.reshape(-1, d)
         if pad:
             rf = jnp.pad(rf, ((0, pad), (0, 0)))
-        out = pl.pallas_call(
+        out = compat.pallas_call(
             functools.partial(_rmsnorm_res_kernel, eps=eps),
             in_specs=[pl.BlockSpec((block_rows, d), row_map),
                       pl.BlockSpec((block_rows, d), row_map),

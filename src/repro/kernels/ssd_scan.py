@@ -23,7 +23,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from . import compat
 
 
 def _ssd_chunk_kernel(xs_ref, b_ref, c_ref, lda_ref,
@@ -78,7 +79,7 @@ def ssd_intra_chunk(xs, b, c, lda, *, chunk: int, interpret: bool = False):
 
     grid = (BH, nc)
     seq_map = lambda h, c_: (h, c_, 0)
-    out = pl.pallas_call(
+    out = compat.pallas_call(
         _ssd_chunk_kernel,
         grid=grid,
         in_specs=[
@@ -97,7 +98,7 @@ def ssd_intra_chunk(xs, b, c, lda, *, chunk: int, interpret: bool = False):
             jax.ShapeDtypeStruct((BH * nc, N, P), jnp.float32),
             jax.ShapeDtypeStruct((BH * nc, 1, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
         name="ssd_intra_chunk",

@@ -1,7 +1,10 @@
 """Property-based attention invariants (hypothesis over shapes/patterns)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="install via requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.kernels import ref
 from repro.kernels import xla_attention as X

@@ -94,8 +94,12 @@ print("OK")
 """)
 
 
+@pytest.mark.slow
 def test_dryrun_single_cell_small_mesh():
-    """The dry-run machinery end-to-end on a tiny in-process mesh."""
+    """The dry-run machinery end-to-end on a tiny in-process mesh.
+
+    Heaviest single test in the suite (~35s: two full model lowerings in a
+    subprocess) — behind the ``slow`` marker; run with ``-m slow``."""
     _run("""
 import jax
 from repro.launch.dryrun import lower_cell

@@ -1,5 +1,9 @@
 """Per-kernel correctness: Pallas (interpret=True) vs pure-jnp oracles,
-swept over shapes and dtypes."""
+swept over shapes and dtypes.
+
+The broad shape/dtype sweeps carry the ``slow`` marker (deselected from the
+default tier-1 run; opt in with ``-m slow``) — fast single-case coverage of
+every kernel stays here and in tests/test_registry.py::TestParityFast."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -17,6 +21,7 @@ def _arr(rng, *shape, dtype=jnp.float32, scale=1.0):
 
 
 class TestFlashAttention:
+    @pytest.mark.slow
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
     @pytest.mark.parametrize("seq,hq,hkv,d", [
         (128, 4, 4, 64),       # MHA
@@ -34,6 +39,7 @@ class TestFlashAttention:
                                    np.asarray(want, np.float32),
                                    atol=ATOL[dtype], rtol=ATOL[dtype])
 
+    @pytest.mark.slow
     @pytest.mark.parametrize("window", [32, 64, 100])
     def test_sliding_window(self, rng, window):
         q = _arr(rng, 1, 256, 4, 64)
@@ -44,6 +50,7 @@ class TestFlashAttention:
         want = ref.attention_ref(q, k, v, causal=True, window=window)
         np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
 
+    @pytest.mark.slow
     @pytest.mark.parametrize("chunk", [64, 128])
     def test_chunked_local(self, rng, chunk):
         q = _arr(rng, 1, 256, 4, 64)
@@ -72,6 +79,7 @@ class TestFlashAttention:
         want = ref.attention_ref(q, k, v, causal=True, q_offset=S - 1)
         np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
 
+    @pytest.mark.slow
     def test_block_skip_equals_masked(self, rng):
         """Block-skipping (pl.when) must not change results vs full mask."""
         q = _arr(rng, 1, 512, 2, 64)
@@ -108,6 +116,7 @@ class TestXLAAttention:
 
 
 class TestSSD:
+    @pytest.mark.slow
     @pytest.mark.parametrize("S,H,P,G,N,chunk", [
         (128, 2, 32, 1, 16, 32),
         (256, 4, 64, 2, 32, 64),
@@ -152,6 +161,7 @@ class TestSSD:
 
 
 class TestGroupedMatmul:
+    @pytest.mark.slow
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
     @pytest.mark.parametrize("E,C,d,f", [
         (4, 64, 128, 128), (2, 100, 256, 128), (8, 32, 128, 256),
@@ -167,6 +177,7 @@ class TestGroupedMatmul:
 
 
 class TestRMSNorm:
+    @pytest.mark.slow
     @pytest.mark.parametrize("shape", [(4, 17, 64), (1, 8, 512), (128, 256)])
     @pytest.mark.parametrize("residual", [False, True])
     def test_matches_oracle(self, rng, shape, residual):

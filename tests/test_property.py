@@ -1,7 +1,10 @@
 """Property-based tests (hypothesis) for system invariants."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="install via requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (TDG, EagerExecutor, ReplayExecutor, list_schedule,
                         one_f_one_b_order, pipeline_tdg, round_robin_assign,
