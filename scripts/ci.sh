@@ -1,10 +1,17 @@
 #!/usr/bin/env bash
 # Tier-1 verification — the single source of truth for the test invocation,
 # so local runs and CI cannot drift. Usage:
-#   scripts/ci.sh               # default tier-1 run (slow sweeps excluded)
-#   scripts/ci.sh -m slow       # opt into the slow interpret-mode sweeps
+#   scripts/ci.sh                 # default tier-1 run (slow sweeps excluded)
+#   scripts/ci.sh -m slow         # opt into the slow interpret-mode sweeps
+#   scripts/ci.sh --bench-smoke   # fusion benchmark smoke (+ tier-1 run)
 #   scripts/ci.sh tests/test_registry.py -q
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [[ "${1:-}" == "--bench-smoke" ]]; then
+  shift
+  # CI-sized wave-fusion benchmark: asserts fused/unfused parity and that
+  # the fused lowering shrinks the traced program (full run: benchmarks.fusion)
+  python -m benchmarks.fusion --smoke --out /tmp/BENCH_fusion_smoke.json
+fi
 exec python -m pytest -x -q "$@"

@@ -1,5 +1,9 @@
-"""Core Taskgraph framework: TDG, record-and-replay, schedules, executors."""
-from .tdg import TDG, Task, Edge, DepKind, EdgeKind, DependencyTable, buffers_signature
+"""Core Taskgraph framework: TDG, record-and-replay, schedules, executors,
+wave-fused lowering, structural executable interning and AOT compilation."""
+from .tdg import (TDG, Task, Edge, DepKind, EdgeKind, DependencyTable,
+                  buffers_signature, structure_signature)
+from .fuse import (FusionPlan, WaveClass, classify_wave, fused_tdg_as_function,
+                   plan as fusion_plan)
 from .schedule import (
     topo_order,
     topo_waves,
@@ -14,19 +18,28 @@ from .schedule import (
     one_f_one_b_order,
     validate_execution_order,
 )
-from .lower import tdg_as_function, lower_tdg
+from .lower import (tdg_as_function, lower_tdg, aot_compile_tdg, AotExecutable,
+                    intern_stats, clear_intern_cache, fuse_enabled)
 from .executor import EagerExecutor, ReplayExecutor, ExecStats
 from .record import taskgraph, TaskGraphRegion, GraphBuilder, registry, reset_registry
-from .serialize import TaskFnRegistry, save_tdg, load_tdg, tdg_to_dict, tdg_from_dict
+from .serialize import (TaskFnRegistry, save_tdg, load_tdg, tdg_to_dict,
+                        tdg_from_dict, save_executable, load_executable,
+                        executable_serialization_available, warmup_and_save,
+                        load_warm)
 
 __all__ = [
     "TDG", "Task", "Edge", "DepKind", "EdgeKind", "DependencyTable",
-    "buffers_signature",
+    "buffers_signature", "structure_signature",
+    "FusionPlan", "WaveClass", "classify_wave", "fused_tdg_as_function",
+    "fusion_plan",
     "topo_order", "topo_waves", "round_robin_assign", "wave_placement",
     "critical_path", "work", "parallelism", "list_schedule", "ListSchedule",
     "pipeline_tdg", "one_f_one_b_order", "validate_execution_order",
-    "tdg_as_function", "lower_tdg",
+    "tdg_as_function", "lower_tdg", "aot_compile_tdg", "AotExecutable",
+    "intern_stats", "clear_intern_cache", "fuse_enabled",
     "EagerExecutor", "ReplayExecutor", "ExecStats",
     "taskgraph", "TaskGraphRegion", "GraphBuilder", "registry", "reset_registry",
     "TaskFnRegistry", "save_tdg", "load_tdg", "tdg_to_dict", "tdg_from_dict",
+    "save_executable", "load_executable",
+    "executable_serialization_available", "warmup_and_save", "load_warm",
 ]

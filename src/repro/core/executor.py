@@ -147,15 +147,24 @@ class ReplayExecutor:
     entered as a ``kernel_mode_scope`` around lowering and tracing — per-call
     dispatch never consults the global switch again, so the fused executable
     is substrate-stable and per-signature cache entries are keyed by mode.
+
+    Lowering is wave-fused and structurally interned by default (see
+    ``lower.py``): isomorphic tasks in one wave trace as a single batched
+    call, and executors over structurally identical TDGs share one compiled
+    executable. ``fuse=False`` restores fully unrolled lowering;
+    ``aot_compile()`` pays trace+compile eagerly (off the hot path) and
+    returns a serializable ``AotExecutable``.
     """
 
     def __init__(self, tdg: TDG, donate_slots: tuple[str, ...] = (),
                  order: list[int] | None = None,
-                 kernel_mode: str | None = None):
+                 kernel_mode: str | None = None,
+                 fuse: bool | str = "auto"):
         tdg.validate()
         self.tdg = tdg
         self.donate_slots = tuple(donate_slots)
         self.order = order
+        self.fuse = fuse
         self.kernel_mode = _kreg.resolved_mode(kernel_mode)
         self._cache: dict[tuple, Callable] = {}
         self.replays = 0
@@ -166,9 +175,29 @@ class ReplayExecutor:
         if fn is None:
             with _kreg.kernel_mode_scope(self.kernel_mode):
                 fn = _lower.lower_tdg(self.tdg, order=self.order,
-                                      donate_slots=self.donate_slots)
+                                      donate_slots=self.donate_slots,
+                                      fuse=self.fuse)
             self._cache[sig] = fn
         return fn
+
+    def aot_compile(self, buffers: Mapping[str, Any]) -> "_lower.AotExecutable":
+        """Eagerly compile (trace now, not at first run) for these shapes.
+
+        The executable is installed in the per-signature cache under this
+        executor's pinned substrate, so subsequent ``run`` calls with
+        matching buffers execute without any tracing; the returned
+        ``AotExecutable`` carries XLA cost analysis and is serializable via
+        ``serialize.save_executable``. Requires ``order=None`` (AOT lowering
+        is wave-ordered).
+        """
+        if self.order is not None:
+            raise ValueError("aot_compile does not support a custom order")
+        with _kreg.kernel_mode_scope(self.kernel_mode):
+            aot = _lower.aot_compile_tdg(self.tdg, buffers,
+                                         donate_slots=self.donate_slots,
+                                         fuse=self.fuse)
+        self._cache[(buffers_signature(buffers), self.kernel_mode)] = aot
+        return aot
 
     def run(self, buffers: Mapping[str, Any], block: bool = True) -> dict:
         fn = self._compiled_for(buffers)

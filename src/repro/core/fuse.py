@@ -1,0 +1,291 @@
+"""Wave-fused lowering: worksharing-style batching of isomorphic tasks.
+
+The unrolled replay path (``lower.tdg_as_function``) emits every task body
+into the traced program one call at a time, so trace+compile cost — and
+jaxpr size — scale with *task count* even when the graph is just a few
+waves of isomorphic work (a 16x64 pipeline TDG traces 2048 bodies for ~80
+distinct waves). That re-introduces, at the tracing layer, exactly the
+per-task fixed cost the paper eliminates at the orchestration layer.
+
+Following Worksharing Tasks (Maroñas et al., 2020), this module batches
+fine-grained tasks back into coarse dispatches:
+
+* :func:`classify_wave` groups one topo-wave's tasks into **isomorphism
+  classes** — same payload function (by identity), same input arity/shapes/
+  dtypes, same output arity. Tasks in one wave are mutually independent by
+  construction, so any class can execute as a single batched call.
+* :func:`fused_tdg_as_function` lowers each class of size >=
+  ``min_class_size`` as ONE ``jax.vmap``-batched call (or a sequential
+  ``lax.map`` for memory-bound cases, ``batcher="map"``) over arguments
+  stacked along axis 0, with argument positions whose slot is shared by
+  every member broadcast instead of stacked. The traced program shrinks
+  from O(tasks) body instances to O(wave-classes).
+
+Fusion is semantics-preserving and *best-effort*: heterogeneous waves
+degrade to per-task unrolled calls, and any class whose batched trace
+fails (a payload without a batching rule, say) falls back to the unrolled
+form for that class only. Classification happens at trace time, where
+argument shapes are known from the tracers, so one lowered function stays
+shape-polymorphic exactly like the unrolled path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import schedule as _schedule
+from .tdg import TDG, abstract_leaf as _as_spec
+
+STACK_AXIS = 0
+
+
+# ------------------------------------------------------------------ analysis
+
+def value_signature(v: Any) -> tuple:
+    """Abstract (treedef, per-leaf shape/dtype) signature of one value."""
+    leaves, treedef = jax.tree_util.tree_flatten(v)
+    return (treedef,
+            tuple((tuple(getattr(l, "shape", ())),
+                   str(getattr(l, "dtype", type(l).__name__))) for l in leaves))
+
+
+@dataclasses.dataclass(frozen=True)
+class WaveClass:
+    """One isomorphism class inside one wave."""
+
+    wave: int
+    tids: tuple[int, ...]
+    fused: bool                      # lowered as one batched call?
+    shared: tuple[bool, ...]         # arg position uses one slot for all tids
+
+    @property
+    def size(self) -> int:
+        return len(self.tids)
+
+
+@dataclasses.dataclass
+class FusionPlan:
+    """Result of the wave analysis pass over a whole TDG."""
+
+    region: str
+    num_tasks: int
+    classes: list[WaveClass]
+    min_class_size: int
+
+    @property
+    def num_waves(self) -> int:
+        return 1 + max((c.wave for c in self.classes), default=-1)
+
+    @property
+    def num_classes(self) -> int:
+        return len(self.classes)
+
+    @property
+    def fused_classes(self) -> int:
+        return sum(1 for c in self.classes if c.fused)
+
+    @property
+    def fused_tasks(self) -> int:
+        return sum(c.size for c in self.classes if c.fused)
+
+    @property
+    def fused_fraction(self) -> float:
+        return self.fused_tasks / max(self.num_tasks, 1)
+
+    def summary(self) -> dict:
+        return {
+            "region": self.region,
+            "tasks": self.num_tasks,
+            "waves": self.num_waves,
+            "classes": self.num_classes,
+            "fused_classes": self.fused_classes,
+            "fused_tasks": self.fused_tasks,
+            "fused_fraction": round(self.fused_fraction, 4),
+        }
+
+
+def classify_wave(tdg: TDG, wave_index: int, wave: Sequence[int],
+                  sig_of: Callable[[str], Any] | None,
+                  min_class_size: int = 2) -> list[WaveClass]:
+    """Group one wave's tasks into isomorphism classes.
+
+    ``sig_of`` maps a slot name to an abstract value signature (or ``None``
+    for purely structural grouping by payload identity + arity, used when no
+    shape information is available yet). Classes are returned in order of
+    first member, members in tid order — deterministic for a given TDG.
+    """
+    groups: dict[tuple, list[int]] = {}
+    for tid in sorted(wave):
+        t = tdg.tasks[tid]
+        key: tuple = (id(t.fn), len(t.ins), len(t.outs))
+        if sig_of is not None:
+            key += tuple(sig_of(s) for s in t.ins)
+        groups.setdefault(key, []).append(tid)
+    classes = []
+    for tids in groups.values():
+        arity = len(tdg.tasks[tids[0]].ins)
+        shared = tuple(
+            all(tdg.tasks[t].ins[i] == tdg.tasks[tids[0]].ins[i] for t in tids)
+            for i in range(arity))
+        classes.append(WaveClass(wave=wave_index, tids=tuple(tids),
+                                 fused=len(tids) >= min_class_size,
+                                 shared=shared))
+    return classes
+
+
+def plan(tdg: TDG, buffers: Mapping[str, Any] | None = None,
+         min_class_size: int = 2) -> FusionPlan:
+    """Offline wave analysis (for stats, tests and benchmark reporting).
+
+    With ``buffers`` (arrays or ``ShapeDtypeStruct`` trees for the region's
+    input slots), slot shapes are propagated through the graph by abstract
+    evaluation so classes match exactly what trace-time fusion will do;
+    without them, grouping is structural (payload identity + arity) — an
+    upper bound on fusion opportunity.
+    """
+    sig_of = None
+    if buffers is not None:
+        env: dict[str, Any] = {
+            k: jax.tree_util.tree_map(_as_spec, v) for k, v in buffers.items()}
+        for tid in _schedule.topo_order(tdg):
+            t = tdg.tasks[tid]
+            out = jax.eval_shape(t.fn, *[env[s] for s in t.ins])
+            _bind_outs(t, out, env)
+        sig_of = lambda s: value_signature(env[s])  # noqa: E731
+    classes: list[WaveClass] = []
+    for wi, wave in enumerate(_schedule.topo_waves(tdg)):
+        classes.extend(classify_wave(tdg, wi, wave, sig_of, min_class_size))
+    return FusionPlan(region=tdg.region, num_tasks=tdg.num_tasks,
+                      classes=classes, min_class_size=min_class_size)
+
+
+# ----------------------------------------------------------------- execution
+
+def _bind_outs(task, out, env: dict) -> None:
+    """Write one task's return value into the env (same rules as lower)."""
+    if len(task.outs) == 1:
+        env[task.outs[0]] = out
+    elif len(task.outs) > 1:
+        if not isinstance(out, (tuple, list)) or len(out) != len(task.outs):
+            raise ValueError(
+                f"task {task.label()} declared {len(task.outs)} outputs, "
+                f"returned {type(out).__name__}")
+        for s, v in zip(task.outs, out):
+            env[s] = v
+
+
+def _run_unrolled(tdg: TDG, tids: Sequence[int], env: dict) -> None:
+    for tid in tids:
+        t = tdg.tasks[tid]
+        try:
+            args = [env[s] for s in t.ins]
+        except KeyError as e:  # pragma: no cover - defensive
+            raise KeyError(f"task {t.label()} reads unbound slot {e} "
+                           f"(region inputs: {tdg.input_slots})") from None
+        _bind_outs(t, t.fn(*args), env)
+
+
+def _run_fused_class(tdg: TDG, cls: WaveClass, env: dict, batcher: str) -> None:
+    """Execute one isomorphism class as a single batched call."""
+    tasks = [tdg.tasks[t] for t in cls.tids]
+    fn = tasks[0].fn
+    arity = len(tasks[0].ins)
+    varying = [i for i in range(arity) if not cls.shared[i]]
+
+    if not varying:
+        # Every member reads identical slots: one evaluation serves all
+        # (distinct out slots are guaranteed — a WAW pair cannot share a wave).
+        out = fn(*[env[tasks[0].ins[i]] for i in range(arity)])
+        for t in tasks:
+            _bind_outs(t, out, env)
+        return
+
+    shared_args = {i: env[tasks[0].ins[i]] for i in range(arity)
+                   if cls.shared[i]}
+    stacked = {
+        i: jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs, STACK_AXIS),
+            *[env[t.ins[i]] for t in tasks])
+        for i in varying}
+
+    if batcher == "vmap":
+        in_axes = tuple(None if cls.shared[i] else STACK_AXIS
+                        for i in range(arity))
+        args = [shared_args[i] if cls.shared[i] else stacked[i]
+                for i in range(arity)]
+        out = jax.vmap(fn, in_axes=in_axes)(*args)
+    elif batcher == "map":
+        def body(var_args):
+            it = iter(var_args)
+            return fn(*[shared_args[i] if cls.shared[i] else next(it)
+                        for i in range(arity)])
+        out = jax.lax.map(body, tuple(stacked[i] for i in varying))
+    else:
+        raise ValueError(f"unknown batcher {batcher!r} (vmap | map)")
+
+    n_outs = len(tasks[0].outs)
+    for j, t in enumerate(tasks):
+        take = lambda x: jax.lax.index_in_dim(  # noqa: E731
+            x, j, axis=STACK_AXIS, keepdims=False)
+        if n_outs == 1:
+            env[t.outs[0]] = jax.tree_util.tree_map(take, out)
+        else:
+            if not isinstance(out, (tuple, list)) or len(out) != n_outs:
+                raise ValueError(
+                    f"task {t.label()} declared {n_outs} outputs, "
+                    f"returned {type(out).__name__}")
+            for oi, s in enumerate(t.outs):
+                env[s] = jax.tree_util.tree_map(take, out[oi])
+
+
+def fused_tdg_as_function(tdg: TDG, outputs: Sequence[str] | None = None,
+                          min_class_size: int = 2,
+                          batcher: str = "vmap") -> Callable[[dict], dict]:
+    """Return ``f(buffers) -> {slot: value}`` with wave-fused task dispatch.
+
+    Drop-in replacement for ``lower.tdg_as_function`` (pure, traceable,
+    jittable, differentiable); tasks execute in wave order, which refines
+    the same partial order as any topological order. After each call (or
+    trace), ``f.last_plan`` holds the :class:`FusionPlan` actually applied,
+    including trace-time fallbacks.
+    """
+    waves = _schedule.topo_waves(tdg)
+    outputs = list(outputs) if outputs is not None else list(tdg.output_slots)
+
+    def run(buffers: Mapping[str, Any]) -> dict:
+        env = dict(buffers)
+        applied: list[WaveClass] = []
+        for wi, wave in enumerate(waves):
+            def sig_of(s):
+                try:
+                    return value_signature(env[s])
+                except KeyError:
+                    raise KeyError(
+                        f"unbound slot {s!r} (region inputs: "
+                        f"{tdg.input_slots})") from None
+            for cls in classify_wave(tdg, wi, wave, sig_of, min_class_size):
+                if not cls.fused:
+                    _run_unrolled(tdg, cls.tids, env)
+                    applied.append(cls)
+                    continue
+                try:
+                    _run_fused_class(tdg, cls, env, batcher)
+                    applied.append(cls)
+                except Exception:
+                    # Payload not batchable (no vmap rule, data-dependent
+                    # control flow, ...): this class only degrades to the
+                    # unrolled form. A payload broken under tracing per se
+                    # re-raises from here with its real error.
+                    _run_unrolled(tdg, cls.tids, env)
+                    applied.append(dataclasses.replace(cls, fused=False))
+        run.last_plan = FusionPlan(region=tdg.region, num_tasks=tdg.num_tasks,
+                                   classes=applied,
+                                   min_class_size=min_class_size)
+        return {s: env[s] for s in outputs}
+
+    run.last_plan = None
+    run.__name__ = f"tdg_fused_{tdg.region}"
+    return run

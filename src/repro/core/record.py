@@ -21,10 +21,21 @@ Algorithm 4.1 of the paper:
 Regions are registered by *source location* (file, line) exactly as the
 paper keys TDGs (§4.3.3). Instances of one region are sequentialized unless
 ``nowait=True`` (the paper's default semantics).
+
+Replay executables are produced by ``lower.lower_tdg`` with wave fusion on
+by default (``fuse`` parameter; see ``fuse.py``) and are *interned by
+structure*: two regions with identical task/edge/payload structure share
+one compiled executable via the global cache in ``lower.py``, so the
+source-location registry keys region *identity* (instance sequencing,
+stats) but no longer implies per-location recompilation. The per-region
+``_replay_cache`` is keyed by ``(buffers_signature, resolved kernel
+mode)`` — flipping ``REPRO_KERNELS`` between replays re-lowers instead of
+returning a stale-substrate executable. ``warmup()`` AOT-compiles a
+signature off the critical path (and is what ``serialize.save_executable``
+persists for cross-process no-retrace replay).
 """
 from __future__ import annotations
 
-import functools
 import threading
 from typing import Any, Callable, Mapping
 
@@ -33,6 +44,7 @@ import jax
 from . import lower as _lower
 from . import schedule as _schedule
 from .tdg import TDG, Task, buffers_signature
+from ..kernels import registry as _kreg
 
 _REGISTRY: dict[tuple, "TaskGraphRegion"] = {}
 _registry_lock = threading.Lock()
@@ -86,10 +98,12 @@ class TaskGraphRegion:
 
     def __init__(self, build_fn: Callable, name: str | None = None,
                  nowait: bool = False, donate_slots: tuple[str, ...] = (),
-                 recurrent: bool = True, outputs: tuple[str, ...] | None = None):
+                 recurrent: bool = True, outputs: tuple[str, ...] | None = None,
+                 fuse: bool | str = "auto"):
         code = build_fn.__code__
         self.build_fn = build_fn
         self.outputs = tuple(outputs) if outputs is not None else None
+        self.fuse = fuse
         self.name = name or build_fn.__name__
         # paper §4.3.3: TDGs are identified by source location
         self.source_location = (code.co_filename, code.co_firstlineno, self.name)
@@ -137,17 +151,45 @@ class TaskGraphRegion:
     def replay(self, **buffers) -> dict:
         if self.tdg is None:
             raise RuntimeError(f"region {self.name!r} has no TDG yet")
-        sig = buffers_signature(buffers)
+        # Pin the kernel substrate per executable: the cache key carries the
+        # resolved mode (like ReplayExecutor), so flipping REPRO_KERNELS
+        # between replays re-lowers instead of serving a stale substrate.
+        mode = _kreg.resolved_mode()
+        sig = (buffers_signature(buffers), mode)
         fn = self._replay_cache.get(sig)
-        if fn is None:
-            fn = _lower.lower_tdg(self.tdg, donate_slots=self.donate_slots,
-                                  outputs=self.outputs)
-            self._replay_cache[sig] = fn
-        out = fn(buffers)
+        with _kreg.kernel_mode_scope(mode):
+            if fn is None:
+                fn = _lower.lower_tdg(self.tdg, donate_slots=self.donate_slots,
+                                      outputs=self.outputs, fuse=self.fuse)
+                self._replay_cache[sig] = fn
+            out = fn(buffers)
         self.replays += 1
         if not self.nowait:
             jax.block_until_ready(out)
         return out
+
+    def warmup(self, **buffers) -> _lower.AotExecutable:
+        """AOT-compile the replay executable for these buffer shapes.
+
+        ``buffers`` may be real arrays or ``ShapeDtypeStruct`` specs (pair
+        with ``build_static`` for a fully data-free warmup). The compiled
+        executable is installed in the replay cache, so the next matching
+        call replays without tracing or compiling anything — and the
+        returned ``AotExecutable`` can be persisted for other processes via
+        ``serialize.save_executable``.
+        """
+        if self.tdg is None:
+            raise RuntimeError(
+                f"region {self.name!r} has no TDG yet — call build_static() "
+                "or record once before warming up")
+        mode = _kreg.resolved_mode()
+        with _kreg.kernel_mode_scope(mode):
+            aot = _lower.aot_compile_tdg(self.tdg, buffers,
+                                         outputs=self.outputs,
+                                         donate_slots=self.donate_slots,
+                                         fuse=self.fuse)
+        self._replay_cache[(buffers_signature(buffers), mode)] = aot
+        return aot
 
     def __call__(self, **buffers) -> dict:
         if self.tdg is None:
@@ -170,8 +212,11 @@ class TaskGraphRegion:
 
     def schedule_summary(self, n_workers: int = 8) -> dict:
         assert self.tdg is not None
+        from . import fuse as _fuse
+
         waves = _schedule.topo_waves(self.tdg)
         return {
+            "fusion": _fuse.plan(self.tdg).summary(),
             "tasks": self.tdg.num_tasks,
             "edges": self.tdg.num_edges,
             "roots": len(self.tdg.roots()),
@@ -184,13 +229,14 @@ class TaskGraphRegion:
 
 def taskgraph(fn: Callable | None = None, *, name: str | None = None,
               nowait: bool = False, donate_slots: tuple[str, ...] = (),
-              recurrent: bool = True, outputs: tuple[str, ...] | None = None):
+              recurrent: bool = True, outputs: tuple[str, ...] | None = None,
+              fuse: bool | str = "auto"):
     """Decorator form: ``@taskgraph`` / ``@taskgraph(nowait=True)``."""
 
     def wrap(f: Callable) -> TaskGraphRegion:
         return TaskGraphRegion(f, name=name, nowait=nowait,
                                donate_slots=donate_slots, recurrent=recurrent,
-                               outputs=outputs)
+                               outputs=outputs, fuse=fuse)
 
     if fn is not None:
         return wrap(fn)
@@ -198,14 +244,6 @@ def taskgraph(fn: Callable | None = None, *, name: str | None = None,
 
 
 def _abstractify(x: Any):
-    def leaf(v):
-        if isinstance(v, jax.ShapeDtypeStruct):
-            return v
-        if hasattr(v, "shape") and hasattr(v, "dtype"):
-            return jax.ShapeDtypeStruct(v.shape, v.dtype)
-        import numpy as np
+    from .tdg import abstract_leaf
 
-        arr = np.asarray(v)
-        return jax.ShapeDtypeStruct(arr.shape, arr.dtype)
-
-    return jax.tree_util.tree_map(leaf, x)
+    return jax.tree_util.tree_map(abstract_leaf, x)

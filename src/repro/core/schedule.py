@@ -143,16 +143,16 @@ def list_schedule(tdg: TDG, n_workers: int,
     worker_tasks: list[list[int]] = [[] for _ in range(n_workers)]
     start: dict[int, float] = {}
     finish: dict[int, float] = {}
-    pending: list[tuple[float, int]] = []  # (ready_time, tid) not yet releasable
 
     scheduled = 0
     while scheduled < tdg.num_tasks:
         if not ready:
-            # advance time: release the earliest pending task
-            pending.sort()
-            t_rel, tid = pending.pop(0)
-            heapq.heappush(ready, (-rank[tid], tid))
-            continue
+            # Cannot happen for a valid DAG: every unscheduled task either
+            # has indegree 0 (it was pushed) or a scheduled-pred chain that
+            # pushed it on the last decrement.
+            raise RuntimeError(
+                f"list_schedule stalled with {tdg.num_tasks - scheduled} "
+                f"unscheduled tasks in {tdg.region!r} (cyclic TDG?)")
         _, tid = heapq.heappop(ready)
         t = tdg.tasks[tid]
         w = min(range(n_workers), key=lambda i: (worker_free[i], i))

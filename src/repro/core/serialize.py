@@ -9,13 +9,26 @@ process, re-binding payloads through a task-function registry.
 
 Payload code itself is not serialized (same as the paper: the TDG file
 references outlined functions by symbol); the registry plays the linker.
-Round-tripping preserves the graph exactly (same edges, same schedule),
-which the tests assert via topo-wave equality and replay equivalence.
+Round-tripping preserves the graph exactly (same edges, same schedule, and
+a rebuilt dependency table so ``add_task`` after a load keeps resolving
+correctly), which the tests assert via topo-wave equality and replay
+equivalence.
+
+Beyond the graph, the opt-in **warmup artifact** persists the *compiled*
+replay executable: :func:`save_executable` pickles the XLA binary produced
+by ``lower.aot_compile_tdg`` (via ``jax.experimental.serialize_executable``
+when available — see :func:`executable_serialization_available`), and
+:func:`warmup_and_save` writes it as a ``<path>.aot`` sidecar next to the
+TDG JSON, so a TDG recorded in one process replays in another without
+retracing or recompiling anything.
 """
 from __future__ import annotations
 
 import json
+import pickle
 from typing import Any, Callable
+
+import jax
 
 from .tdg import TDG, Edge, EdgeKind
 
@@ -92,6 +105,13 @@ def tdg_from_dict(data: dict, registry: TaskFnRegistry) -> TDG:
     tdg.input_slots = list(data["input_slots"])
     tdg.output_slots = list(data["output_slots"])
     tdg._written = set(tdg.output_slots)
+    # Rebuild the last-writer/readers table by replaying the depend clauses
+    # (resolution is deterministic, so this reproduces the record-time table
+    # exactly); without it, add_task on a loaded TDG would silently
+    # mis-resolve every dependency against an empty table.
+    for t in tdg.tasks:
+        tdg._dep_table.resolve(t.tid, t.ins, t.outs)
+    tdg._dep_table.lookups = 0  # instrumentation counts post-load use only
     tdg.validate()
     return tdg
 
@@ -104,3 +124,129 @@ def save_tdg(tdg: TDG, path, registry: TaskFnRegistry) -> None:
 def load_tdg(path, registry: TaskFnRegistry) -> TDG:
     with open(path) as f:
         return tdg_from_dict(json.load(f), registry)
+
+
+# ---------------------------------------------------------------------------
+# AOT executable persistence (opt-in warmup artifact)
+# ---------------------------------------------------------------------------
+
+def _serialize_executable_module():
+    try:
+        from jax.experimental import serialize_executable as se
+        return se
+    except ImportError:  # pragma: no cover - version-dependent
+        return None
+
+
+def executable_serialization_available() -> bool:
+    """True iff this jax build can pickle compiled executables."""
+    return _serialize_executable_module() is not None
+
+
+def save_executable(aot, path) -> None:
+    """Persist an ``lower.AotExecutable``'s compiled XLA binary to ``path``.
+
+    The payload is device/topology-specific (same constraint as the paper's
+    compiler-emitted TDG object code): load it on a matching platform.
+    """
+    se = _serialize_executable_module()
+    if se is None:
+        raise RuntimeError(
+            "this jax build lacks jax.experimental.serialize_executable; "
+            "cannot persist compiled executables "
+            "(check executable_serialization_available() first)")
+    payload, in_tree, out_tree = se.serialize(aot.compiled)
+    blob = {
+        "version": 1,
+        "payload": payload,
+        "in_tree": in_tree,
+        "out_tree": out_tree,
+        "input_specs": {k: jax.tree_util.tree_map(
+            lambda s: (tuple(s.shape), str(s.dtype)), v)
+            for k, v in aot.input_specs.items()},
+        "fused": aot.fused,
+        "donate_slots": list(aot.donate_slots),
+        "cost_analysis": aot.cost_analysis,
+    }
+    with open(path, "wb") as f:
+        pickle.dump(blob, f)
+
+
+def load_executable(path):
+    """Load a compiled replay executable saved by :func:`save_executable`.
+
+    Returns an ``lower.AotExecutable``: call it on a buffer dict with the
+    shapes it was compiled for — no retracing, no recompilation.
+    """
+    se = _serialize_executable_module()
+    if se is None:
+        raise RuntimeError(
+            "this jax build lacks jax.experimental.serialize_executable; "
+            "cannot load compiled executables")
+    from . import lower as _lower
+
+    with open(path, "rb") as f:
+        blob = pickle.load(f)
+    if blob.get("version") != 1:
+        raise ValueError(f"unsupported executable version {blob.get('version')}")
+    compiled = se.deserialize_and_load(blob["payload"], blob["in_tree"],
+                                       blob["out_tree"])
+    specs = {k: jax.tree_util.tree_map(
+        lambda sd: jax.ShapeDtypeStruct(sd[0], sd[1]), v,
+        is_leaf=lambda x: isinstance(x, (tuple, list)) and len(x) == 2
+        and isinstance(x[1], str))
+        for k, v in blob["input_specs"].items()}
+    return _lower.AotExecutable(compiled=compiled, input_specs=specs,
+                                fused=blob["fused"],
+                                donate_slots=tuple(blob["donate_slots"]),
+                                cost_analysis=blob["cost_analysis"])
+
+
+def warmup_and_save(tdg: TDG, buffers, path, registry: TaskFnRegistry,
+                    fuse: bool | str = "auto") -> dict:
+    """Save the TDG JSON *and* AOT-compile + persist its replay executable.
+
+    The graph goes to ``path`` (portable, payloads by symbol) and the
+    compiled binary to ``path + ".aot"`` (platform-specific fast path).
+    Returns an info dict with both paths, the captured cost analysis and
+    trace/compile seconds. The consumer side is :func:`load_warm`.
+    """
+    from . import lower as _lower
+
+    if not executable_serialization_available():
+        # fail BEFORE writing anything or paying trace+compile, not after
+        raise RuntimeError(
+            "this jax build lacks jax.experimental.serialize_executable; "
+            "use save_tdg() for the graph-only artifact")
+    save_tdg(tdg, path, registry)
+    aot = _lower.aot_compile_tdg(tdg, buffers, fuse=fuse)
+    aot_path = str(path) + ".aot"
+    save_executable(aot, aot_path)
+    return {
+        "tdg_path": str(path),
+        "aot_path": aot_path,
+        "fused": aot.fused,
+        "cost_analysis": aot.cost_analysis,
+        "trace_seconds": aot.trace_seconds,
+        "compile_seconds": aot.compile_seconds,
+    }
+
+
+def load_warm(path, registry: TaskFnRegistry):
+    """Load ``(tdg, aot_executable | None)`` saved by :func:`warmup_and_save`.
+
+    The executable comes back ``None`` when the sidecar is missing or this
+    jax build cannot deserialize it — callers fall back to the ordinary
+    (lazily traced) replay path in that case.
+    """
+    import os
+
+    tdg = load_tdg(path, registry)
+    aot_path = str(path) + ".aot"
+    aot = None
+    if os.path.exists(aot_path) and executable_serialization_available():
+        try:
+            aot = load_executable(aot_path)
+        except Exception:  # incompatible platform / jax version: soft-fail
+            aot = None
+    return tdg, aot

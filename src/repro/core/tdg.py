@@ -213,6 +213,69 @@ def chain_series(tdg: TDG, fns: Iterable[Callable], slot: str = "x") -> None:
         tdg.add_task(fn, inouts=[slot], name=f"{slot}.{i}")
 
 
+def abstract_leaf(v: Any):
+    """One value leaf -> ``jax.ShapeDtypeStruct`` (no data touched).
+
+    The single source of truth for value abstraction, shared by
+    ``record._abstractify``, ``fuse`` and the AOT path in ``lower``.
+    """
+    import jax
+
+    if isinstance(v, jax.ShapeDtypeStruct):
+        return v
+    if hasattr(v, "shape") and hasattr(v, "dtype"):
+        return jax.ShapeDtypeStruct(v.shape, v.dtype)
+    import numpy as np
+
+    arr = np.asarray(v)
+    return jax.ShapeDtypeStruct(arr.shape, arr.dtype)
+
+
+def structure_signature(tdg: TDG, outputs: Sequence[str] | None = None
+                        ) -> tuple[tuple, dict[str, str], tuple]:
+    """Canonical structural signature of a TDG, for executable interning.
+
+    Two TDGs with the same signature AND the same payload functions compute
+    the same program modulo slot *names*: slots are renamed ``s0, s1, ...``
+    by first appearance (scanning tasks in tid order, ins before outs) and
+    payloads are numbered by first appearance, so structurally identical
+    regions built at different source locations — or two instances of one
+    region — canonicalize to one key.
+
+    Returns ``(sig, slot_map, payloads)`` where ``sig`` is a hashable
+    structure key (tasks, edges, canonical output order), ``slot_map`` maps
+    actual slot name -> canonical name, and ``payloads`` is the tuple of
+    distinct payload functions in first-appearance order. ``sig`` carries
+    payload *indices* only; an interning cache must additionally key on the
+    identities in ``payloads`` (and keep them alive) because two graphs of
+    identical shape over different payloads are different programs.
+    """
+    slot_map: dict[str, str] = {}
+    payload_index: dict[int, int] = {}
+    payloads: list[Callable] = []
+
+    def canon(slot: str) -> str:
+        if slot not in slot_map:
+            slot_map[slot] = f"s{len(slot_map)}"
+        return slot_map[slot]
+
+    task_rows = []
+    for t in tdg.tasks:
+        fid = id(t.fn)
+        if fid not in payload_index:
+            payload_index[fid] = len(payloads)
+            payloads.append(t.fn)
+        task_rows.append((payload_index[fid],
+                          tuple(canon(s) for s in t.ins),
+                          tuple(canon(s) for s in t.outs)))
+    edge_rows = tuple(sorted(
+        (e.src, e.dst, e.kind.value, slot_map[e.slot]) for e in tdg.edges))
+    out_slots = list(outputs) if outputs is not None else list(tdg.output_slots)
+    sig = ("tdg-structure-v1", len(tdg.tasks), tuple(task_rows), edge_rows,
+           tuple(canon(s) for s in out_slots))
+    return sig, slot_map, tuple(payloads)
+
+
 def buffers_signature(buffers: Mapping[str, Any]) -> tuple:
     """Abstract signature of a buffer dict (for replay-cache keying)."""
     import jax

@@ -42,6 +42,22 @@ def test_replay_cache_per_signature():
     assert len(region._replay_cache) == 2
 
 
+def test_replay_cache_keyed_by_kernel_mode():
+    """Flipping the global kernel mode between replays must re-lower, not
+    serve a stale-substrate executable (regression: cache was sig-only)."""
+    from repro.kernels import registry as kreg
+
+    region = _mk_region()
+    region(x=jnp.arange(4.0), a=jnp.float32(1.0))      # record
+    with kreg.kernel_mode_scope("ref"):
+        region(x=jnp.arange(4.0), a=jnp.float32(1.0))
+    with kreg.kernel_mode_scope("interpret"):
+        region(x=jnp.arange(4.0), a=jnp.float32(1.0))
+    assert len(region._replay_cache) == 2
+    modes = {mode for _, mode in region._replay_cache}
+    assert modes == {"ref", "interpret"}
+
+
 def test_static_build_matches_recorded_shape():
     rec = _mk_region()
     rec(x=jnp.arange(4.0), a=jnp.float32(1.0))

@@ -51,6 +51,41 @@ def test_roundtrip_structure_and_replay(tmp_path):
         np.testing.assert_allclose(r1[k], r2[k], rtol=1e-6)
 
 
+def test_loaded_tdg_supports_add_task(tmp_path):
+    """Regression: the rebuilt TDG's dependency table was left empty, so
+    add_task after a load silently resolved no edges at all."""
+    tdg = _graph()
+    f = tmp_path / "grow.tdg.json"
+    save_tdg(tdg, f, REG)
+    tdg2 = load_tdg(f, REG)
+
+    before = tdg2.num_edges
+    t = tdg2.add_task(addone, ins=["d"], outs=["e"], name="post-load")
+    # 'd' was written by task 2: the new task must pick up that RAW edge
+    assert tdg2.preds[t.tid] == {2}
+    assert tdg2.num_edges == before + 1
+    # and execution semantics match building the same graph from scratch
+    fresh = _graph()
+    fresh.add_task(addone, ins=["d"], outs=["e"], name="post-load")
+    bufs = {"a": jnp.arange(4.0)}
+    r1 = ReplayExecutor(fresh).run(dict(bufs))
+    r2 = ReplayExecutor(tdg2).run(dict(bufs))
+    np.testing.assert_allclose(r1["e"], r2["e"], rtol=1e-6)
+
+
+def test_loaded_tdg_war_edges_still_resolve(tmp_path):
+    """The rebuilt readers table must also produce WAR (anti) deps."""
+    tdg = _graph()
+    f = tmp_path / "war.tdg.json"
+    save_tdg(tdg, f, REG)
+    tdg2 = load_tdg(f, REG)
+    # task 2 reads 'b' and 'c'; writing 'b' now must order after that read
+    t = tdg2.add_task(scale2, ins=["a"], outs=["b"], name="rewrite-b")
+    kinds = {(e.src, e.kind.value) for e in tdg2.edges if e.dst == t.tid}
+    assert (2, "war") in kinds     # anti dep on the reader of 'b'
+    assert (0, "waw") in kinds     # output dep on the old writer of 'b'
+
+
 def test_unregistered_payload_rejected():
     tdg = TDG("bad")
     tdg.add_task(lambda x: x, ins=["a"], outs=["b"])
