@@ -24,8 +24,23 @@ import argparse
 import time
 
 
+_EPILOG = """\
+benchmark modules in this package (sections marked * run via this driver):
+  contention.py*            orchestration overhead vs #tasks (Fig. 2/Table 1)
+  speedup_grid.py*          granularity x workers heatmaps   (Figs. 6/7)
+  amortization.py*          record-cost amortization          (Figs. 8/9)
+  granularity_stability.py* stability under fine granularity  (Fig. 10)
+  roofline.py*              dry-run roofline terms            (beyond paper)
+  fusion.py                 wave-fused vs unrolled lowering; standalone:
+                            python -m benchmarks.fusion [--smoke]
+  serving.py                multi-tenant batched admission vs serial replay;
+                            standalone: python -m benchmarks.serving [--smoke]
+"""
+
+
 def main(argv=None) -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog=_EPILOG, formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--quick", action="store_true",
                     help="smaller sweeps (CI-sized)")
     ap.add_argument("--only", default=None,

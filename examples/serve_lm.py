@@ -1,7 +1,14 @@
 """Batched serving example: prefill + autoregressive decode with per-layer
 KV/SSM caches, across model families (dense / MoE / SSM / hybrid).
 
+Single-stream by default; pass ``--server`` to drive the decode-step region
+through the multi-tenant ``repro.serving.RegionServer`` instead — N tenants
+with private caches and a shared parameter set, whose structurally identical
+per-token decode requests coalesce into one batched fused replay (queue /
+batch-occupancy / latency metrics are printed at the end).
+
 Run: PYTHONPATH=src python examples/serve_lm.py [--arch mamba2-370m]
+     PYTHONPATH=src python examples/serve_lm.py --server --tenants 4
 """
 import argparse
 
@@ -14,10 +21,15 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--server", action="store_true",
+                    help="multi-tenant RegionServer decode (repro.serving)")
+    ap.add_argument("--tenants", type=int, default=4)
     args = ap.parse_args()
-    raise SystemExit(serve_mod.main(
-        ["--arch", args.arch, "--smoke", "--batch", str(args.batch),
-         "--prompt-len", str(args.prompt_len), "--gen", str(args.gen)]))
+    argv = ["--arch", args.arch, "--smoke", "--batch", str(args.batch),
+            "--prompt-len", str(args.prompt_len), "--gen", str(args.gen)]
+    if args.server:
+        argv += ["--server", "--tenants", str(args.tenants)]
+    raise SystemExit(serve_mod.main(argv))
 
 
 if __name__ == "__main__":

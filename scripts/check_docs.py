@@ -1,0 +1,65 @@
+#!/usr/bin/env python
+"""Docs reference check: every file the docs point at must exist.
+
+Scans README.md and docs/*.md for
+
+  * backticked repo paths (``src/.../*.py``, ``scripts/*.sh``,
+    ``examples/*.py``, ``benchmarks/*.py``, ``tests/*.py``, directories
+    like ``src/repro/serving/``), and
+  * relative markdown links (``[text](docs/architecture.md)``),
+
+and fails if any named file or directory is missing — so the architecture
+docs cannot silently rot as modules move. Run via ``scripts/ci.sh
+--docs-smoke`` or directly:
+
+    python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# Repo-relative paths we expect to find in backticks. Deliberately NOT
+# matching bare module names ("fuse.py") — those are anchored by the
+# module-map tables, which use full src/ paths.
+_PATH_RE = re.compile(
+    r"`((?:src|scripts|examples|benchmarks|tests|docs)/[\w./-]+)`")
+_LINK_RE = re.compile(r"\]\((?!https?://|#)([\w./-]+?)(?:#[\w-]*)?\)")
+
+
+def references(md: pathlib.Path) -> set[str]:
+    text = md.read_text()
+    refs = set(_PATH_RE.findall(text))
+    refs.update(_LINK_RE.findall(text))
+    return refs
+
+
+def main() -> int:
+    docs = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+    missing: list[tuple[str, str]] = []
+    checked = 0
+    for md in docs:
+        if not md.exists():
+            missing.append((str(md.relative_to(ROOT)), "<the doc itself>"))
+            continue
+        for ref in sorted(references(md)):
+            checked += 1
+            # Markdown links resolve relative to the doc; backticked repo
+            # paths are repo-root-relative. Accept either resolution.
+            if not ((ROOT / ref).exists() or (md.parent / ref).exists()):
+                missing.append((str(md.relative_to(ROOT)), ref))
+    if missing:
+        print("docs reference check FAILED — missing targets:")
+        for doc, ref in missing:
+            print(f"  {doc}: {ref}")
+        return 1
+    print(f"docs reference check ok: {checked} references across "
+          f"{len(docs)} docs all resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

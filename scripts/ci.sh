@@ -3,15 +3,26 @@
 # so local runs and CI cannot drift. Usage:
 #   scripts/ci.sh                 # default tier-1 run (slow sweeps excluded)
 #   scripts/ci.sh -m slow         # opt into the slow interpret-mode sweeps
-#   scripts/ci.sh --bench-smoke   # fusion benchmark smoke (+ tier-1 run)
+#   scripts/ci.sh --bench-smoke   # fusion + serving benchmark smokes (+ tier-1 run)
+#   scripts/ci.sh --docs-smoke    # docs-and-examples smoke (+ tier-1 run)
 #   scripts/ci.sh tests/test_registry.py -q
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [[ "${1:-}" == "--bench-smoke" ]]; then
   shift
-  # CI-sized wave-fusion benchmark: asserts fused/unfused parity and that
-  # the fused lowering shrinks the traced program (full run: benchmarks.fusion)
+  # CI-sized benchmark smokes: fusion asserts fused/unfused parity + traced-
+  # program shrink; serving asserts multi-tenant parity + structural sharing
+  # + coalescing (full runs: benchmarks.fusion / benchmarks.serving)
   python -m benchmarks.fusion --smoke --out /tmp/BENCH_fusion_smoke.json
+  python -m benchmarks.serving --smoke --out /tmp/BENCH_serving_smoke.json
+fi
+if [[ "${1:-}" == "--docs-smoke" ]]; then
+  shift
+  # Docs-and-examples smoke: the quickstart must run end to end (it verifies
+  # record/replay against jnp.linalg.cholesky), and every module path the
+  # docs reference must exist.
+  python -m examples.quickstart --n 64 --nb 4 --reps 1
+  python scripts/check_docs.py
 fi
 exec python -m pytest -x -q "$@"

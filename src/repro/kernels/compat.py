@@ -25,7 +25,8 @@ the next rename is absorbed here, in one file:
 
 Kernels in this package must not import ``jax.experimental.pallas.tpu``
 directly for anything this module provides; ``grep pltpu.CompilerParams``
-outside this file should stay empty.
+outside this file should stay empty. See ``docs/kernels.md`` for how this
+shim and the ``(op, backend, mode)`` registry fit together.
 """
 from __future__ import annotations
 

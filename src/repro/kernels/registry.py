@@ -27,7 +27,9 @@ substrate mid-flight.
 
 This registry is the extension point for future backends: a GPU/Triton PR
 registers ``(op, "gpu", "pallas")`` implementations and every caller —
-models, executors, benchmarks — picks them up with no dispatch edits.
+models, executors, benchmarks — picks them up with no dispatch edits. The
+full extension recipe (and how this table relates to the ``compat.py``
+shim) is documented in ``docs/kernels.md``.
 """
 from __future__ import annotations
 
@@ -47,7 +49,12 @@ _ENV_VAR = "REPRO_KERNELS"
 
 @dataclasses.dataclass(frozen=True)
 class KernelImpl:
-    """One registered kernel implementation."""
+    """One registered kernel implementation.
+
+    Calling the instance calls ``fn`` directly — resolution cost is paid in
+    :func:`resolve`, never per invocation. ``doc`` is a one-line human
+    description (defaults to the first docstring line at registration).
+    """
     op: str
     backend: str
     mode: str
@@ -55,6 +62,7 @@ class KernelImpl:
     doc: str = ""
 
     def __call__(self, *args: Any, **kwargs: Any) -> Any:
+        """Invoke the underlying implementation (no further dispatch)."""
         return self.fn(*args, **kwargs)
 
 
@@ -184,7 +192,12 @@ def resolve(op: str, mode: str | None = None,
 
 
 def dispatch(op: str, *args: Any, mode: str | None = None, **kwargs: Any) -> Any:
-    """Resolve and call in one step — the hot-path entry used by ``ops``."""
+    """Resolve and call in one step — the hot-path entry used by ``ops``.
+
+    Equivalent to ``resolve(op, mode=mode)(*args, **kwargs)``; raises
+    ``KeyError`` (with the registered alternatives) when no implementation
+    matches the effective backend/mode.
+    """
     return resolve(op, mode=mode)(*args, **kwargs)
 
 

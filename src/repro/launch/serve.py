@@ -1,14 +1,29 @@
-"""Serving driver: batched prefill + decode with KV/SSM caches.
+"""Serving driver: batched prefill + decode, single-stream or multi-tenant.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
-        --batch 4 --prompt-len 64 --gen 32
+Two modes:
 
-The decode step is a recurrent taskgraph region in the paper's sense:
-recorded (compiled) once, replayed per generated token with donated caches.
+* **Single-stream** (default): one prompt batch, prefill then an
+  autoregressive decode loop. The decode step is a recurrent taskgraph
+  region in the paper's sense: recorded (compiled) once, replayed per
+  generated token with donated caches.
+
+      PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \\
+          --batch 4 --prompt-len 64 --gen 32
+
+* **Multi-tenant server** (``--server``): N tenants each own a decode-step
+  taskgraph region (same structure, same payload, private KV/SSM caches,
+  shared params) and drive it concurrently through
+  ``repro.serving.RegionServer``. Structurally identical decode requests
+  coalesce into one batched fused replay per step; the run prints
+  throughput plus the server's queue/batch/intern/latency metrics.
+
+      PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \\
+          --server --tenants 4 --gen 16
 """
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
 import jax
@@ -19,21 +34,7 @@ from ..models import init_params, prefill
 from ..training import make_serve_step
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=list(ARCHS), default="qwen2.5-3b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = reduced(cfg)
-    params = init_params(cfg, jax.random.PRNGKey(args.seed))
-
+def _run_single_stream(args, cfg, params) -> int:
     key = jax.random.PRNGKey(args.seed + 1)
     batch = {"tokens": jax.random.randint(
         key, (args.batch, args.prompt_len), 2, cfg.vocab_size)}
@@ -64,6 +65,117 @@ def main(argv=None):
           f"({tput:.1f} tok/s)")
     print("sample token ids:", gen[0, :16].tolist())
     return 0
+
+
+def _run_server(args, cfg, params) -> int:
+    from ..core import TDG
+    from ..serving import RegionServer
+
+    decode = make_serve_step(cfg)
+    max_len = args.prompt_len + args.gen
+
+    # Per-tenant prefill: private prompt, caches and positions; params are
+    # shared (same object), so the server broadcasts rather than stacks them
+    # in a coalesced batch.
+    states = []
+    t0 = time.time()
+    for i in range(args.tenants):
+        key = jax.random.PRNGKey(args.seed + 1 + i)
+        batch = {"tokens": jax.random.randint(
+            key, (args.batch, args.prompt_len), 2, cfg.vocab_size)}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.random.normal(
+                key, (args.batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        logits, caches, pos = prefill(params, cfg, batch, max_len=max_len)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        states.append({"tok": tok, "pos": pos, "caches": caches, "out": [tok]})
+    jax.block_until_ready([s["tok"] for s in states])
+    t_prefill = time.time() - t0
+
+    server = RegionServer(max_batch=args.max_batch or args.tenants,
+                          max_wait_ms=args.max_wait_ms, name="decode-server")
+    for i in range(args.tenants):
+        # One decode-step region per tenant — structurally identical across
+        # tenants (same payload object), so they intern to one executable.
+        tdg = TDG(f"decode[{i}]")
+        tdg.add_task(decode, ins=["params", "tokens", "pos", "caches"],
+                     outs=["next", "caches"], name="decode")
+        server.register_tenant(f"tenant{i}", tdg, outputs=("next", "caches"))
+
+    errors: list[BaseException] = []
+
+    def tenant_loop(i: int) -> None:
+        try:
+            st = states[i]
+            for _ in range(args.gen - 1):
+                out = server.serve(f"tenant{i}", {
+                    "params": params, "tokens": st["tok"][:, None],
+                    "pos": st["pos"], "caches": st["caches"]})
+                st["tok"] = out["next"]
+                st["caches"] = out["caches"]
+                st["pos"] = st["pos"] + 1
+                st["out"].append(st["tok"])
+        except BaseException as e:   # surface thread failures, don't exit 0
+            errors.append(e)
+
+    threads = [threading.Thread(target=tenant_loop, args=(i,))
+               for i in range(args.tenants)]
+    t0 = time.time()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    t_decode = time.time() - t0
+    server.close()
+    if errors:
+        raise errors[0]
+
+    stats = server.stats()
+    m = stats["metrics"]
+    toks = args.tenants * args.batch * (args.gen - 1)
+    print(f"prefill: {t_prefill*1e3:.1f} ms for {args.tenants} tenants "
+          f"x {args.batch}x{args.prompt_len}")
+    print(f"decode:  {t_decode*1e3:.1f} ms for {args.gen-1} steps x "
+          f"{args.tenants} tenants ({toks / max(t_decode, 1e-9):.1f} tok/s)")
+    print(f"server:  {m['batches']} batches, occupancy mean "
+          f"{m['batch_occupancy_mean']:.2f} max {m['batch_occupancy_max']}, "
+          f"{m['batch_fallbacks']} fallbacks, queue peak "
+          f"{m['queue_depth_peak']}")
+    print(f"pool:    {stats['pool']}  intern: {stats['intern']}")
+    print(f"latency: p50 {m['latency']['p50_s']*1e3:.2f} ms  "
+          f"p99 {m['latency']['p99_s']*1e3:.2f} ms")
+    for i in (0, args.tenants - 1):
+        gen = jnp.stack(states[i]["out"], axis=1)
+        print(f"tenant{i} sample token ids:", gen[0, :12].tolist())
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCHS), default="qwen2.5-3b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--server", action="store_true",
+                    help="multi-tenant RegionServer mode (see repro.serving)")
+    ap.add_argument("--tenants", type=int, default=4,
+                    help="[--server] number of concurrent decode tenants")
+    ap.add_argument("--max-batch", type=int, default=0,
+                    help="[--server] coalescing ceiling (0 = #tenants)")
+    ap.add_argument("--max-wait-ms", type=float, default=5.0,
+                    help="[--server] admission window for coalescing")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+
+    if args.server:
+        return _run_server(args, cfg, params)
+    return _run_single_stream(args, cfg, params)
 
 
 if __name__ == "__main__":

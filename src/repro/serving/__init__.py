@@ -1,0 +1,17 @@
+"""Multi-tenant replay serving: RegionServer over interned/AOT executables.
+
+The serving tier of the Taskgraph reproduction (see docs/architecture.md):
+an admission queue coalesces concurrent requests against structurally
+identical regions into one batched fused replay, an LRU warm pool shares
+compiled executables across tenants, and metrics expose queue/batch/latency
+behaviour so detrimental execution patterns are observable.
+"""
+from .metrics import LatencyReservoir, ServerMetrics, percentile
+from .pool import PoolEntry, WarmPool
+from .server import RegionServer, Tenant
+
+__all__ = [
+    "RegionServer", "Tenant",
+    "WarmPool", "PoolEntry",
+    "ServerMetrics", "LatencyReservoir", "percentile",
+]

@@ -1,0 +1,149 @@
+"""Serving metrics: queue/batch/latency observability for the RegionServer.
+
+Tuft et al. (arXiv:2406.03077) show that mainstream OpenMP runtimes hide
+detrimental task execution patterns — work sitting in queues, dispatch
+convoys, starved workers — precisely because nothing measures them. The
+serving layer therefore records, per request and per batch:
+
+* **queue depth** at admission (and its peak), so head-of-line pressure on
+  the admission queue is visible rather than silent;
+* **batch occupancy** — how many coalesced requests each fused replay
+  actually carried vs. the configured ``max_batch`` ceiling;
+* **replay latency** (submit → result) in a bounded reservoir, summarized
+  as p50/p99, the standard serving SLO percentiles;
+* executable-pool **hit/miss counters** (surfaced by the server from
+  :class:`~repro.serving.pool.WarmPool`), the serving-level intern hit rate.
+
+Everything here is lock-protected and cheap (O(1) per event, bounded
+memory), so metrics can stay on in production serving paths.
+"""
+from __future__ import annotations
+
+import math
+import threading
+
+
+def percentile(sorted_values: list[float], q: float) -> float:
+    """Nearest-rank percentile of an already-sorted list (0 <= q <= 100).
+
+    Classic nearest-rank: the ``ceil(q/100 * n)``-th smallest value.
+    Returns 0.0 for an empty list: serving dashboards prefer a zero row
+    over an exception when no traffic has arrived yet.
+    """
+    if not sorted_values:
+        return 0.0
+    if q <= 0:
+        return sorted_values[0]
+    if q >= 100:
+        return sorted_values[-1]
+    rank = math.ceil(q / 100.0 * len(sorted_values)) - 1
+    return sorted_values[max(0, min(len(sorted_values) - 1, rank))]
+
+
+class LatencyReservoir:
+    """Bounded sample of per-request latencies (seconds).
+
+    Keeps the most recent ``capacity`` observations (ring buffer): serving
+    percentiles should reflect current behaviour, not the cold-start tail
+    from an hour ago.
+    """
+
+    def __init__(self, capacity: int = 4096):
+        self.capacity = max(1, capacity)
+        self._buf: list[float] = []
+        self._next = 0
+        self.count = 0
+
+    def record(self, seconds: float) -> None:
+        if len(self._buf) < self.capacity:
+            self._buf.append(seconds)
+        else:
+            self._buf[self._next] = seconds
+            self._next = (self._next + 1) % self.capacity
+        self.count += 1
+
+    def summary(self) -> dict:
+        vals = sorted(self._buf)
+        return {
+            "count": self.count,
+            "p50_s": percentile(vals, 50),
+            "p99_s": percentile(vals, 99),
+            "max_s": vals[-1] if vals else 0.0,
+        }
+
+
+class ServerMetrics:
+    """Thread-safe counters + latency reservoir for one RegionServer."""
+
+    def __init__(self, latency_capacity: int = 4096):
+        self._lock = threading.Lock()
+        self.admitted = 0
+        self.completed = 0
+        self.failed = 0
+        self.batches = 0
+        self.coalesced_requests = 0   # requests served by a fused batch >= 2
+        self.batch_fallbacks = 0      # batched replay failed -> serial path
+        self.aot_served = 0           # requests served by a hydrated .aot
+        self.occupancy_sum = 0
+        self.occupancy_max = 0
+        self.queue_depth_peak = 0
+        self.queue_depth_last = 0
+        self.latency = LatencyReservoir(latency_capacity)
+
+    # -- event hooks (called by the server) --------------------------------
+    def on_admit(self, queue_depth: int) -> None:
+        with self._lock:
+            self.admitted += 1
+            self.queue_depth_last = queue_depth
+            self.queue_depth_peak = max(self.queue_depth_peak, queue_depth)
+
+    def on_batch(self, occupancy: int, coalesced: bool = True) -> None:
+        """Record one dispatched admission group.
+
+        ``occupancy`` is the group size the admission queue assembled;
+        ``coalesced`` says whether ONE fused (vmap-batched) replay actually
+        served the group — a batch that degraded to serial per-request
+        replay reports ``coalesced=False`` so ``coalesced_requests`` never
+        overstates real cross-request fusion.
+        """
+        with self._lock:
+            self.batches += 1
+            self.occupancy_sum += occupancy
+            self.occupancy_max = max(self.occupancy_max, occupancy)
+            if coalesced and occupancy >= 2:
+                self.coalesced_requests += occupancy
+
+    def on_done(self, latency_seconds: float, failed: bool = False,
+                aot: bool = False) -> None:
+        with self._lock:
+            if failed:
+                self.failed += 1
+            else:
+                self.completed += 1
+            if aot:
+                self.aot_served += 1
+            self.latency.record(latency_seconds)
+
+    def on_batch_fallback(self) -> None:
+        with self._lock:
+            self.batch_fallbacks += 1
+
+    # -- reporting ---------------------------------------------------------
+    def snapshot(self) -> dict:
+        with self._lock:
+            mean_occ = (self.occupancy_sum / self.batches
+                        if self.batches else 0.0)
+            return {
+                "admitted": self.admitted,
+                "completed": self.completed,
+                "failed": self.failed,
+                "batches": self.batches,
+                "coalesced_requests": self.coalesced_requests,
+                "batch_fallbacks": self.batch_fallbacks,
+                "aot_served": self.aot_served,
+                "batch_occupancy_mean": round(mean_occ, 3),
+                "batch_occupancy_max": self.occupancy_max,
+                "queue_depth_peak": self.queue_depth_peak,
+                "queue_depth_last": self.queue_depth_last,
+                "latency": self.latency.summary(),
+            }

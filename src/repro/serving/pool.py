@@ -1,0 +1,115 @@
+"""Warm-executable pool: the shared, LRU-bounded resource of the server.
+
+The paper's whole point is that a recorded TDG region is orchestrated once
+and replayed many times; at serving scale the scarce resource becomes the
+*compiled executable itself*. This pool holds every executable the server
+has produced or hydrated —
+
+* **cross-request batched** callables (one ``vmap``-batched fused replay
+  serving a whole admission batch — the server's extension of
+  ``fuse._run_fused_class`` semantics from wave-mates to request-mates),
+  keyed by the TDG's canonical structure + payload identities + kernel
+  mode — never by tenant name — so N tenants with structurally identical
+  regions share ONE entry and the first tenant pays for everyone;
+* **AOT executables** hydrated from ``.aot`` sidecars
+  (``serialize.load_warm``) or produced eagerly by
+  ``lower.aot_compile_tdg`` during an explicit warmup. These ARE keyed
+  per tenant: a compiled binary's input specs carry that tenant's
+  concrete slot names and buffer shapes, so it cannot serve a
+  structurally identical neighbour directly.
+
+Single-request replay callables do not live here at all — they are cached
+on the tenant and shared *across* tenants by ``lower.py``'s global
+structural intern cache, whose ``intern_stats()`` the server reports
+alongside this pool's counters.
+
+Entries pin their payload closures (strong refs) exactly like
+``lower._InternEntry``: ``id()``-based keys are only sound while the
+objects they name stay alive. The pool is LRU-bounded for the same reason
+the intern cache is — a server that keeps registering fresh tenants must
+not leak executables forever. Hit/miss/eviction counters are the serving
+layer's intern-hit-rate metric.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+from typing import Any, Callable
+
+
+@dataclasses.dataclass
+class PoolEntry:
+    """One warm executable.
+
+    ``kind`` is ``"single"`` (per-request replay callable), ``"batched"``
+    (stacked/shared-buffer batch callable) or ``"aot"`` (an
+    ``lower.AotExecutable``). ``payloads`` pins the task payload functions
+    whose ``id()``s appear in the pool key.
+    """
+
+    kind: str
+    fn: Callable[..., Any]
+    payloads: tuple = ()
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+class WarmPool:
+    """LRU-bounded map: executable key -> :class:`PoolEntry`."""
+
+    def __init__(self, capacity: int = 64):
+        self.capacity = max(1, capacity)
+        self._lock = threading.Lock()
+        self._entries: collections.OrderedDict[tuple, PoolEntry] = \
+            collections.OrderedDict()
+        self._counters = {"hits": 0, "misses": 0, "evictions": 0,
+                          "hydrations": 0}
+
+    def get(self, key: tuple) -> PoolEntry | None:
+        """Look up ``key``, counting a hit (and refreshing LRU) or a miss."""
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                self._counters["misses"] += 1
+                return None
+            self._counters["hits"] += 1
+            self._entries.move_to_end(key)
+            return entry
+
+    def put(self, key: tuple, entry: PoolEntry,
+            hydrated: bool = False) -> PoolEntry:
+        """Install ``entry`` under ``key`` (first writer wins on a race).
+
+        Returns the entry actually stored, so two threads that compiled the
+        same structure concurrently converge on one executable. Evicts
+        least-recently-used entries beyond ``capacity``.
+        """
+        with self._lock:
+            stored = self._entries.setdefault(key, entry)
+            self._entries.move_to_end(key)
+            if hydrated and stored is entry:
+                self._counters["hydrations"] += 1
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self._counters["evictions"] += 1
+            return stored
+
+    def peek(self, key: tuple) -> PoolEntry | None:
+        """Like :meth:`get` but without touching counters or LRU order."""
+        with self._lock:
+            return self._entries.get(key)
+
+    def stats(self) -> dict:
+        """Hit/miss/eviction/hydration counters + current entry count."""
+        with self._lock:
+            return {**self._counters, "entries": len(self._entries)}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            for k in self._counters:
+                self._counters[k] = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)

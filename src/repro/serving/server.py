@@ -1,0 +1,535 @@
+"""Multi-tenant taskgraph region server (the serving tier over replay).
+
+The record-and-replay model exists so a region is orchestrated once and
+replayed with near-zero management overhead; this module is the step from
+"replay one region fast" to "serve many tenants fast". Following the
+async-manager shape of Bosch et al. (arXiv:2009.03066) — clients enqueue
+work, one manager thread owns dispatch — a :class:`RegionServer` accepts
+requests against registered *tenants* (a named TDG + pinned kernel mode)
+through an **admission queue** and serves them from shared compiled
+executables:
+
+* **Coalescing.** Concurrent requests whose TDGs canonicalize to the same
+  ``tdg.structure_signature`` (and same payload identities, buffer shapes
+  and kernel mode) are batched into ONE fused replay: buffers are stacked
+  along a fresh leading axis and the canonical region function is
+  ``vmap``-ed across *requests* — the same trick ``fuse._run_fused_class``
+  plays across wave-mates, lifted across tenants. Buffers that are the
+  *same object* in every member request (e.g. shared model params) are
+  broadcast, not stacked. A batch whose payloads refuse to vmap falls back
+  to per-request replay for that batch only.
+* **Warm pool.** Batched callables live in an LRU-bounded
+  :class:`~repro.serving.pool.WarmPool` keyed by structure + payload
+  identities + kernel mode — never by tenant name — so N structurally
+  identical tenants share one entry; AOT executables live there too,
+  keyed per tenant (their compiled input specs name that tenant's
+  slots/shapes). Single-request replay goes through
+  ``lower.lower_tdg``'s global structural intern cache, so tenant
+  #2..#N reuse tenant #1's jitted executable (``intern_stats()`` counts
+  the hits). Cold tenants registered with a ``warm_path`` hydrate their
+  compiled binary from the ``.aot`` sidecar (``serialize.load_warm``)
+  instead of retracing.
+* **Isolation.** Payload identities partition the coalescing key: two
+  tenants with same-shaped graphs over *different* payload closures never
+  share an executable or a batch. Each tenant's kernel substrate is
+  resolved once at registration and re-entered as a
+  ``kernel_mode_scope`` around every lowering and call (exactly
+  ``ReplayExecutor``'s pinning), so a global ``REPRO_KERNELS`` flip cannot
+  change what an already-registered tenant executes.
+* **Metrics.** Queue depth, batch occupancy, pool hit rate, p50/p99
+  replay latency — see :mod:`repro.serving.metrics`.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from ..core import lower as _lower
+from ..core import serialize as _serialize
+from ..core.tdg import TDG, buffers_signature, structure_signature
+from ..kernels import registry as _kreg
+from .metrics import ServerMetrics
+from .pool import PoolEntry, WarmPool
+
+
+@dataclasses.dataclass
+class Tenant:
+    """One registered tenant: a region (TDG) plus its pinned substrate.
+
+    ``sig``/``slot_map``/``payloads`` are the canonical structure computed
+    once at registration; ``kernel_mode`` is the *resolved* substrate
+    (never ``"auto"``), chosen at registration exactly like
+    ``ReplayExecutor`` pins it at construction.
+    """
+
+    name: str
+    tdg: TDG
+    outputs: tuple[str, ...] | None
+    kernel_mode: str
+    sig: tuple
+    slot_map: dict[str, str]
+    payloads: tuple
+    warm_path: str | None = None
+    fuse: bool | str = "auto"
+    aot_key: tuple | None = None
+    aot_sig: tuple | None = None
+    requests: int = 0
+
+    def __post_init__(self) -> None:
+        self.payload_ids = tuple(id(p) for p in self.payloads)
+        self.from_canon = {c: a for a, c in self.slot_map.items()}
+        self.input_slots = tuple(s for s in self.tdg.input_slots
+                                 if s in self.slot_map)
+        self._fn: Callable[[dict], dict] | None = None
+        self._fn_lock = threading.Lock()
+
+    def replay_fn(self) -> Callable[[dict], dict]:
+        """The (lazily built) single-request replay callable.
+
+        Built via ``lower.lower_tdg`` under this tenant's pinned mode, so
+        it lands in — or is served from — the global structural intern
+        cache shared with every other structurally identical tenant.
+        """
+        with self._fn_lock:
+            if self._fn is None:
+                with _kreg.kernel_mode_scope(self.kernel_mode):
+                    self._fn = _lower.lower_tdg(
+                        self.tdg, fuse=self.fuse,
+                        outputs=list(self.outputs)
+                        if self.outputs is not None else None)
+            return self._fn
+
+
+class _Request:
+    __slots__ = ("tenant", "buffers", "canon_buffers", "key", "future",
+                 "t_submit", "served_aot")
+
+    def __init__(self, tenant: Tenant, buffers: dict, canon_buffers: dict,
+                 key: tuple):
+        self.tenant = tenant
+        self.buffers = buffers
+        self.canon_buffers = canon_buffers
+        self.key = key
+        self.future: Future = Future()
+        self.t_submit = time.monotonic()
+        self.served_aot = False
+
+
+class RegionServer:
+    """Admission-queued, batch-coalescing server over interned replay.
+
+    Parameters
+    ----------
+    max_batch:
+        Coalescing ceiling — how many structurally identical requests one
+        fused replay may carry. ``1`` disables batching (serial
+        per-request replay; the benchmark baseline).
+    max_wait_ms:
+        Admission window: after the first request of a batch arrives, how
+        long the dispatcher waits for same-structure companions before
+        dispatching a partial batch. Bounded head-of-line latency.
+    pool_capacity:
+        LRU bound on the warm-executable pool.
+    fuse:
+        Wave-fusion policy handed to every lowering this server performs
+        (single-request AND batched paths): ``True`` / ``False`` /
+        ``"auto"`` (honour ``REPRO_FUSE``), as in ``lower.lower_tdg``.
+    autostart:
+        Start the dispatcher thread immediately. Tests pass ``False``,
+        enqueue a known set of requests, then call :meth:`start` for a
+        deterministic first batch.
+    """
+
+    def __init__(self, max_batch: int = 8, max_wait_ms: float = 2.0,
+                 pool_capacity: int = 64, fuse: bool | str = "auto",
+                 name: str = "region-server", autostart: bool = True):
+        self.name = name
+        self.max_batch = max(1, int(max_batch))
+        self.max_wait_s = max(0.0, float(max_wait_ms)) / 1e3
+        self.fuse = fuse
+        self.pool = WarmPool(capacity=pool_capacity)
+        self.metrics = ServerMetrics()
+        self._tenants: dict[str, Tenant] = {}
+        self._queue: collections.deque[_Request] = collections.deque()
+        self._cv = threading.Condition()
+        self._closed = False
+        self._started = False
+        self._thread = threading.Thread(
+            target=self._dispatch_loop, name=f"{name}-dispatch", daemon=True)
+        if autostart:
+            self.start()
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> None:
+        """Start the dispatcher thread (idempotent)."""
+        if not self._started:
+            self._started = True
+            self._thread.start()
+
+    def close(self) -> None:
+        """Drain the admission queue, then stop the dispatcher.
+
+        Holds even for a never-started server (``autostart=False``) with
+        requests already queued: the dispatcher is started just to drain
+        them, so no pending future is ever silently abandoned.
+        """
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+            pending = bool(self._queue)
+        if not self._started and pending:
+            self.start()
+        if self._started:
+            self._thread.join()
+
+    def __enter__(self) -> "RegionServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------- tenants
+    def register_tenant(self, name: str, tdg: TDG | None = None, *,
+                        outputs: tuple[str, ...] | None = None,
+                        kernel_mode: str | None = None,
+                        warm_path: str | None = None,
+                        fn_registry: "_serialize.TaskFnRegistry | None" = None,
+                        ) -> Tenant:
+        """Register a tenant by TDG, or hydrate one from a warm artifact.
+
+        Exactly one of ``tdg`` / ``warm_path`` selects the region source:
+        ``warm_path`` names a TDG JSON written by
+        ``serialize.warmup_and_save`` (payloads re-linked through
+        ``fn_registry``); if its ``.aot`` sidecar is present and loadable,
+        the compiled binary is installed in the warm pool so this tenant's
+        first request replays without any retrace. A missing or corrupt
+        sidecar degrades silently to the ordinary (interned, lazily
+        traced) replay path — hydration is an optimization, never a
+        correctness dependency.
+        """
+        if (tdg is None) == (warm_path is None):
+            raise ValueError("pass exactly one of tdg= or warm_path=")
+        aot = None
+        if warm_path is not None:
+            if fn_registry is None:
+                raise ValueError("warm_path= requires fn_registry= to "
+                                 "re-link task payloads")
+            tdg, aot = _serialize.load_warm(warm_path, fn_registry)
+        tdg.validate()
+        mode = _kreg.resolved_mode(kernel_mode)
+        sig, slot_map, payloads = structure_signature(
+            tdg, list(outputs) if outputs is not None else None)
+        tenant = Tenant(name=name, tdg=tdg,
+                        outputs=tuple(outputs) if outputs is not None else None,
+                        kernel_mode=mode, sig=sig, slot_map=slot_map,
+                        payloads=payloads, warm_path=warm_path,
+                        fuse=self.fuse)
+        with self._cv:
+            if name in self._tenants:
+                raise ValueError(f"tenant {name!r} already registered")
+            self._tenants[name] = tenant
+        if aot is not None:
+            self._install_aot(tenant, aot, hydrated=True)
+        return tenant
+
+    def tenant(self, name: str) -> Tenant:
+        with self._cv:
+            if name not in self._tenants:
+                raise KeyError(f"unknown tenant {name!r}; registered: "
+                               f"{sorted(self._tenants)}")
+            return self._tenants[name]
+
+    def warmup(self, name: str, buffers: Mapping[str, Any]) -> dict:
+        """Eagerly AOT-compile a tenant's replay executable into the pool.
+
+        ``buffers`` may be concrete arrays or ``ShapeDtypeStruct`` specs.
+        Returns the compile report (cost analysis, trace/compile seconds)
+        so callers can budget warmup off the serving critical path.
+        """
+        tenant = self.tenant(name)
+        with _kreg.kernel_mode_scope(tenant.kernel_mode):
+            aot = _lower.aot_compile_tdg(
+                tenant.tdg, buffers, fuse=tenant.fuse,
+                outputs=list(tenant.outputs)
+                if tenant.outputs is not None else None)
+        self._install_aot(tenant, aot)
+        return {"tenant": name, "fused": aot.fused,
+                "cost_analysis": aot.cost_analysis,
+                "trace_seconds": aot.trace_seconds,
+                "compile_seconds": aot.compile_seconds}
+
+    def _install_aot(self, tenant: Tenant, aot: "_lower.AotExecutable",
+                     hydrated: bool = False) -> None:
+        aot_sig = buffers_signature(aot.input_specs)
+        key = ("aot", tenant.name, aot_sig, tenant.kernel_mode)
+        self.pool.put(key, PoolEntry("aot", aot, tenant.payloads),
+                      hydrated=hydrated)
+        tenant.aot_key = key
+        tenant.aot_sig = aot_sig
+
+    # ------------------------------------------------------------ admission
+    def submit(self, tenant_name: str, buffers: Mapping[str, Any]) -> Future:
+        """Enqueue one request; resolves to the region's output dict."""
+        tenant = self.tenant(tenant_name)
+        missing = [s for s in tenant.input_slots if s not in buffers]
+        if missing:
+            raise KeyError(f"request for tenant {tenant_name!r} is missing "
+                           f"input slots {missing}")
+        buffers = dict(buffers)
+        canon = {tenant.slot_map[k]: v for k, v in buffers.items()
+                 if k in tenant.slot_map}
+        key = (tenant.sig, tenant.payload_ids, buffers_signature(canon),
+               tenant.kernel_mode)
+        req = _Request(tenant, buffers, canon, key)
+        with self._cv:
+            if self._closed:
+                raise RuntimeError(f"server {self.name!r} is closed")
+            self._queue.append(req)
+            tenant.requests += 1
+            depth = len(self._queue)
+            self._cv.notify_all()
+        self.metrics.on_admit(depth)
+        return req.future
+
+    def serve(self, tenant_name: str, buffers: Mapping[str, Any],
+              timeout: float | None = 60.0) -> dict:
+        """Synchronous :meth:`submit` — blocks for this request's result."""
+        return self.submit(tenant_name, buffers).result(timeout=timeout)
+
+    def stats(self) -> dict:
+        """Serving metrics + pool counters + the global intern counters."""
+        with self._cv:
+            tenants = {t.name: t.requests for t in self._tenants.values()}
+        return {
+            "server": self.name,
+            "max_batch": self.max_batch,
+            "tenants": tenants,
+            "metrics": self.metrics.snapshot(),
+            "pool": self.pool.stats(),
+            "intern": _lower.intern_stats(),
+        }
+
+    # ------------------------------------------------------------- dispatch
+    def _take_matching(self, group: list[_Request], key: tuple) -> None:
+        """Move queued requests with ``key`` into ``group`` (up to max_batch)."""
+        kept: collections.deque[_Request] = collections.deque()
+        while self._queue:
+            r = self._queue.popleft()
+            if r.key == key and len(group) < self.max_batch:
+                group.append(r)
+            else:
+                kept.append(r)
+        self._queue.extend(kept)
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._queue and not self._closed:
+                    self._cv.wait()
+                if not self._queue:     # closed and drained
+                    return
+                head = self._queue.popleft()
+                group = [head]
+                if self.max_batch > 1:
+                    deadline = time.monotonic() + self.max_wait_s
+                    while len(group) < self.max_batch:
+                        self._take_matching(group, head.key)
+                        if len(group) >= self.max_batch or self._closed:
+                            break
+                        if self._queue:
+                            # Everything still queued is non-matching (all
+                            # matches were just taken): holding the window
+                            # open would head-of-line block other keys for
+                            # up to max_wait for companions that may never
+                            # come. Dispatch now; stragglers form the next
+                            # group.
+                            break
+                        remaining = deadline - time.monotonic()
+                        if remaining <= 0:
+                            break
+                        self._cv.wait(remaining)
+                    self._take_matching(group, head.key)
+            self._execute_group(group)
+
+    # ------------------------------------------------------------- execution
+    def _execute_group(self, group: list[_Request]) -> None:
+        coalesced = False
+        try:
+            if len(group) == 1:
+                # A lone request (no coalescing partner inside the window)
+                # takes the interned single-request path — never a K=1
+                # specialization of the batched program.
+                results = [self._run_single(group[0])]
+            else:
+                results, coalesced = self._run_batched(group)
+            jax.block_until_ready(results)
+        except Exception as exc:
+            now = time.monotonic()
+            for r in group:
+                self.metrics.on_done(now - r.t_submit, failed=True)
+                r.future.set_exception(exc)
+            return
+        self.metrics.on_batch(len(group), coalesced=coalesced)
+        now = time.monotonic()
+        for r, out in zip(group, results):
+            if isinstance(out, Exception):      # per-request fallback failure
+                self.metrics.on_done(now - r.t_submit, failed=True)
+                r.future.set_exception(out)
+            else:
+                self.metrics.on_done(now - r.t_submit, aot=r.served_aot)
+                r.future.set_result(out)
+
+    def _run_single(self, req: _Request) -> dict:
+        tenant = req.tenant
+        aot = self._aot_for(req)
+        if aot is not None:
+            req.served_aot = True
+            with _kreg.kernel_mode_scope(tenant.kernel_mode):
+                return aot(req.buffers)
+        fn = tenant.replay_fn()
+        with _kreg.kernel_mode_scope(tenant.kernel_mode):
+            return fn(dict(req.buffers))
+
+    def _aot_for(self, req: _Request) -> "_lower.AotExecutable | None":
+        """The tenant's warm AOT executable, iff shapes match this request.
+
+        Pool-evicted AOT entries are re-hydrated from the tenant's
+        ``warm_path`` sidecar when possible (cold tenants pay a disk read,
+        not a retrace); irrecoverable sidecars permanently fall back to the
+        interned lazy path.
+        """
+        tenant = req.tenant
+        if tenant.aot_key is None:
+            return None
+        want = buffers_signature(
+            {k: v for k, v in req.buffers.items()
+             if k in self._aot_spec_slots(tenant)})
+        if want != tenant.aot_sig:
+            return None
+        entry = self.pool.get(tenant.aot_key)
+        if entry is not None:
+            return entry.fn
+        if tenant.warm_path is not None:
+            try:
+                aot = _serialize.load_executable(str(tenant.warm_path) + ".aot")
+            except Exception:
+                tenant.aot_key = None       # unrecoverable: stop retrying
+                return None
+            self._install_aot(tenant, aot, hydrated=True)
+            return aot
+        tenant.aot_key = None
+        return None
+
+    def _aot_spec_slots(self, tenant: Tenant) -> tuple:
+        # aot_sig rows are (slot, treedef, leafspec): recover the slot set.
+        return tuple(row[0] for row in (tenant.aot_sig or ()))
+
+    def _run_batched(self, group: list[_Request]) -> tuple[list, bool]:
+        """Serve a coalesced group; returns ``(results, coalesced)``.
+
+        ``coalesced`` is True only when ONE fused vmap-batched call served
+        the whole group, so the metrics never report fallback groups as
+        real cross-request fusion.
+        """
+        try:
+            return self._run_batched_fused(group), True
+        except Exception:
+            # A payload without a batching rule (or any trace-time failure
+            # specific to the vmapped form) degrades THIS batch to serial
+            # per-request replay; single-request bugs still surface from
+            # _run_single with their real error — per request, so one
+            # member's failure cannot poison its siblings' results.
+            self.metrics.on_batch_fallback()
+            results: list[dict | Exception] = []
+            for r in group:
+                try:
+                    results.append(self._run_single(r))
+                except Exception as exc:
+                    results.append(exc)
+            return results, False
+
+    def _run_batched_fused(self, group: list[_Request]) -> list[dict]:
+        tenant0 = group[0].tenant
+        canon = [r.canon_buffers for r in group]
+        slots = sorted(canon[0])
+        shared = frozenset(
+            s for s in slots
+            if all(cb[s] is canon[0][s] for cb in canon[1:]))
+        varying = tuple(s for s in slots if s not in shared)
+        shared_bufs = {s: canon[0][s] for s in shared}
+        if not varying:
+            # Every buffer is literally shared: one single-request replay
+            # serves the whole batch (all members compute the same values).
+            out0 = self._run_single(group[0])
+            canon_out = {group[0].tenant.slot_map[s]: v
+                         for s, v in out0.items()}
+            return [{r.tenant.from_canon[c]: v for c, v in canon_out.items()}
+                    for r in group]
+        key = ("batched", tenant0.sig, tenant0.payload_ids, shared,
+               tenant0.kernel_mode)
+        entry = self.pool.get(key)
+        if entry is None:
+            entry = self.pool.put(key, PoolEntry(
+                "batched", self._build_batched(tenant0), tenant0.payloads))
+        # Bucket occupancy to the next power of two (padding with a repeat
+        # of the last member, dropped after the call): jit specializes the
+        # batched program per pytree arity, so without bucketing every
+        # straggler-induced occupancy K would pay a fresh trace+compile.
+        # Buckets bound that to log2(max_batch) compilations total.
+        per_req = [{s: cb[s] for s in varying} for cb in canon]
+        bucket = 2
+        while bucket < len(per_req):
+            bucket *= 2
+        per_req.extend(per_req[-1:] * (bucket - len(per_req)))
+        with _kreg.kernel_mode_scope(tenant0.kernel_mode):
+            outs = entry.fn(tuple(per_req), shared_bufs)
+        return [{r.tenant.from_canon[c]: v for c, v in out_j.items()}
+                for r, out_j in zip(group, outs)]
+
+    def _build_batched(self, tenant: Tenant) -> Callable[..., tuple]:
+        """One jitted cross-request batch callable on canonical slot names.
+
+        ``fn(per_request, shared) -> tuple[dict, ...]`` where
+        ``per_request`` is a tuple of per-member buffer dicts. Stacking the
+        request axis, ``vmap``-ing the canonical region function over it,
+        and re-slicing the outputs per member ALL happen inside the one
+        jitted program — a whole batch costs a single dispatch, which is
+        where coalescing beats serial replay. Shared buffers enter as
+        unbatched jit arguments closed over inside the vmap body, i.e.
+        broadcast — the cross-request analogue of ``WaveClass.shared``
+        argument handling. Occupancy is a pytree shape, so one callable
+        serves every batch size via jit's per-structure specialization.
+        """
+        with _kreg.kernel_mode_scope(tenant.kernel_mode):
+            base = _lower.lower_tdg(
+                tenant.tdg, jit=False, fuse=self.fuse,
+                outputs=list(tenant.outputs)
+                if tenant.outputs is not None else None)
+        from_canon = tenant.from_canon
+        slot_map = tenant.slot_map
+
+        def canon_base(cbufs: dict) -> dict:
+            out = base({from_canon[c]: v for c, v in cbufs.items()})
+            return {slot_map[s]: v for s, v in out.items()}
+
+        def batched(per_req: tuple, shared_bufs: dict) -> tuple:
+            stacked = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs, axis=0), *per_req)
+
+            def one(st: dict) -> dict:
+                return canon_base({**st, **shared_bufs})
+
+            out = jax.vmap(one)(stacked)
+            return tuple(
+                jax.tree_util.tree_map(lambda v, _j=j: v[_j], out)
+                for j in range(len(per_req)))
+
+        batched.__name__ = f"tdg_batched_{tenant.tdg.region}"
+        return jax.jit(batched)

@@ -160,3 +160,54 @@ class TestExecutableSerialization:
         save_tdg(tdg, path, REG)
         tdg2, aot = load_warm(path, REG)
         assert aot is None and tdg2.num_tasks == 2
+
+    def test_load_warm_corrupt_sidecar_falls_back(self, tmp_path):
+        # A damaged .aot sidecar must degrade to (tdg, None) — the caller
+        # retraces — never crash the load.
+        tdg, bufs = _graph(2)
+        path = tmp_path / "corrupt.tdg.json"
+        warmup_and_save(tdg, bufs, path, REG)
+        with open(str(path) + ".aot", "wb") as f:
+            f.write(b"\x00this is not a pickled executable\xff")
+        tdg2, aot = load_warm(path, REG)
+        assert aot is None and tdg2.num_tasks == tdg.num_tasks
+        got = ReplayExecutor(tdg2).run(dict(bufs))   # retrace path still works
+        np.testing.assert_allclose(got["x0"], bufs["x0"] * 2.0 + 1.0)
+
+    def test_load_warm_truncated_sidecar_falls_back(self, tmp_path):
+        tdg, bufs = _graph(2)
+        path = tmp_path / "trunc.tdg.json"
+        warmup_and_save(tdg, bufs, path, REG)
+        aot_path = str(path) + ".aot"
+        blob = open(aot_path, "rb").read()
+        with open(aot_path, "wb") as f:
+            f.write(blob[: max(1, len(blob) // 3)])
+        tdg2, aot = load_warm(path, REG)
+        assert aot is None and tdg2.num_tasks == tdg.num_tasks
+
+    def test_load_warm_unknown_version_sidecar_falls_back(self, tmp_path):
+        import pickle
+        tdg, bufs = _graph(2)
+        path = tmp_path / "vers.tdg.json"
+        warmup_and_save(tdg, bufs, path, REG)
+        aot_path = str(path) + ".aot"
+        with open(aot_path, "rb") as f:
+            blob = pickle.load(f)
+        blob["version"] = 99
+        with open(aot_path, "wb") as f:
+            pickle.dump(blob, f)
+        with pytest.raises(ValueError, match="version"):
+            load_executable(aot_path)                # direct load: loud
+        tdg2, aot = load_warm(path, REG)             # warm load: soft-fail
+        assert aot is None and tdg2.num_tasks == tdg.num_tasks
+
+    def test_load_warm_corrupt_graph_is_loud(self, tmp_path):
+        # The graph JSON is authoritative — unlike the sidecar, damage
+        # there must NOT be silently absorbed.
+        tdg, bufs = _graph(2)
+        path = tmp_path / "badgraph.tdg.json"
+        warmup_and_save(tdg, bufs, path, REG)
+        with open(path, "w") as f:
+            f.write("{not json")
+        with pytest.raises(Exception):
+            load_warm(path, REG)
