@@ -1,0 +1,323 @@
+"""Distributed serving: RPC overhead, warm-artifact cold start, scaling.
+
+    PYTHONPATH=src python -m benchmarks.cluster [--smoke] [--out PATH]
+
+Three questions about the cluster tier (``repro.serving.cluster``), each a
+phase of this benchmark:
+
+* **overhead** — what does the socket RPC front cost? The same tenants and
+  request chains run through an in-process ``RegionServer`` and through a
+  1-worker ``ClusterFrontend``; the report records both throughputs and
+  the per-request overhead (wire codec + framing + process hop). Outputs
+  are checked for parity against the in-process run.
+
+* **cold start** — does shipping the warm ``.aot`` artifact beat making the
+  worker re-lower? A tenant is warmed once (``serialize.warmup_and_save``);
+  then two *fresh* (cold) frontends register it — one from the warm
+  artifact (bytes shipped in-band, worker hydrates) and one from the bare
+  TDG (worker pays trace+compile on first request). The measured span is
+  registration through first result. Acceptance for this repo: the
+  warm-ship cold start beats the re-lower cold start, the shipped worker
+  reports zero intern misses (it never lowered) and ``aot_served >= 1``.
+
+* **scaling** — 8 tenants over 4 distinct structures driven through 1, 2
+  and 4 workers. Sticky-by-structure routing spreads structures across the
+  fleet, so added workers add parallelism without ever splitting one
+  structure's warm state across hosts.
+
+The report lands in ``BENCH_cluster.json``; ``--smoke`` is the CI-sized
+variant wired into ``scripts/ci.sh --bench-smoke`` (parity + cold-start
+gates asserted; raw throughput reported but not gated — too noisy at smoke
+size).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+REGISTRY_SPEC = "repro.serving.demo:DEMO_REGISTRY"
+
+
+def _make_tenants(n_tenants: int, n_structures: int, dim: int, waves: int,
+                  width: int):
+    """``n_tenants`` regions over ``n_structures`` distinct structures.
+
+    Structures differ by depth (``waves + s``), so they canonicalize to
+    different ``structure_signature`` keys and route independently.
+    """
+    import jax.numpy as jnp
+
+    from repro.serving.demo import demo_region
+
+    rng = np.random.default_rng(0)
+    shared_w = jnp.asarray(rng.standard_normal((dim, dim)), jnp.float32)
+    tenants = []
+    for i in range(n_tenants):
+        s = i % n_structures
+        tdg = demo_region(f"bench[{i}]", waves=waves + s, width=width)
+        bufs = {f"x{k}": jnp.asarray(rng.standard_normal((dim, dim)),
+                                     jnp.float32) for k in range(width)}
+        tenants.append({"name": f"t{i}", "tdg": tdg, "bufs": bufs,
+                        "structure": s})
+    return tenants, shared_w
+
+
+def _drive(serve, tenants, shared_w, rounds: int) -> tuple[float, list]:
+    """Drive every tenant's dependent request chain concurrently."""
+    finals: list[dict | None] = [None] * len(tenants)
+    errors: list[BaseException] = []
+
+    def loop(i: int) -> None:
+        try:
+            bufs = dict(tenants[i]["bufs"])
+            out = {}
+            for _ in range(rounds):
+                out = serve(tenants[i]["name"], bufs)
+                bufs.update(out)
+            finals[i] = {k: np.asarray(v) for k, v in out.items()}
+        except BaseException as e:
+            errors.append(e)
+
+    threads = [threading.Thread(target=loop, args=(i,))
+               for i in range(len(tenants))]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errors:
+        raise errors[0]
+    return time.perf_counter() - t0, finals
+
+
+def bench_overhead(n_tenants: int, rounds: int, dim: int, waves: int,
+                   width: int, max_wait_ms: float) -> dict:
+    """In-process RegionServer vs 1-worker ClusterFrontend, same chains."""
+    from repro.core import clear_intern_cache
+    from repro.serving import ClusterFrontend, RegionServer
+
+    tenants, shared_w = _make_tenants(n_tenants, 1, dim, waves, width)
+
+    clear_intern_cache()
+    server = RegionServer(max_batch=n_tenants, max_wait_ms=max_wait_ms,
+                          name="bench-inproc")
+    for t in tenants:
+        server.register_tenant(t["name"], t["tdg"])
+
+    def serve_local(name, bufs):
+        return server.serve(name, {**bufs, "w": shared_w}, timeout=300)
+
+    _drive(serve_local, tenants, shared_w, 1)          # warm off the clock
+    wall_local, finals_local = _drive(serve_local, tenants, shared_w, rounds)
+    server.close()
+
+    frontend = ClusterFrontend(workers=1, registry=REGISTRY_SPEC,
+                               max_batch=n_tenants, max_wait_ms=max_wait_ms,
+                               name="bench-rpc")
+    for t in tenants:
+        frontend.register_tenant(t["name"], t["tdg"],
+                                 pinned={"w": shared_w})
+
+    def serve_rpc(name, bufs):
+        return frontend.serve(name, {k: v for k, v in bufs.items()
+                                     if k != "w"}, timeout=300)
+
+    _drive(serve_rpc, tenants, shared_w, 1)            # warm off the clock
+    wall_rpc, finals_rpc = _drive(serve_rpc, tenants, shared_w, rounds)
+    stats = frontend.stats()
+    frontend.close()
+
+    parity = 0.0
+    for a, b in zip(finals_local, finals_rpc):
+        for k in a:
+            np.testing.assert_allclose(b[k], a[k], rtol=2e-4, atol=2e-4)
+            parity = max(parity, float(np.abs(a[k] - b[k]).max()))
+    n_requests = n_tenants * rounds
+    return {
+        "tenants": n_tenants,
+        "rounds": rounds,
+        "requests": n_requests,
+        "inproc_throughput_rps": n_requests / max(wall_local, 1e-9),
+        "rpc_throughput_rps": n_requests / max(wall_rpc, 1e-9),
+        "rpc_overhead_ms_per_request": (wall_rpc - wall_local) / n_requests
+        * 1e3,
+        "aggregate": stats["aggregate"],
+        "parity_max_abs_diff": parity,
+    }
+
+
+def bench_cold_start(dim: int, waves: int, width: int) -> dict:
+    """Warm-artifact shipping vs per-worker re-lowering, both from cold."""
+    import jax.numpy as jnp
+
+    from repro.core import warmup_and_save
+    from repro.serving import ClusterFrontend
+    from repro.serving.demo import DEMO_REGISTRY, demo_region
+
+    rng = np.random.default_rng(1)
+    shared_w = jnp.asarray(rng.standard_normal((dim, dim)), jnp.float32)
+    bufs = {f"x{k}": jnp.asarray(rng.standard_normal((dim, dim)), jnp.float32)
+            for k in range(width)}
+    tdg = demo_region("cold[0]", waves=waves, width=width)
+    tmp = tempfile.mkdtemp(prefix="bench_cluster_")
+    warm_path = os.path.join(tmp, "cold.json")
+    info = warmup_and_save(tdg, {**bufs, "w": shared_w}, warm_path,
+                           DEMO_REGISTRY)
+
+    def cold_first_request(register_kwargs) -> tuple[float, dict, dict]:
+        frontend = ClusterFrontend(workers=1, registry=REGISTRY_SPEC,
+                                   name="bench-cold")
+        try:
+            t0 = time.perf_counter()
+            frontend.register_tenant("cold", pinned={"w": shared_w},
+                                     **register_kwargs)
+            out = frontend.serve("cold", bufs, timeout=600)
+            dt = time.perf_counter() - t0
+            stats = frontend.stats()
+        finally:
+            frontend.close()
+        return dt, out, stats
+
+    ship_s, out_ship, st_ship = cold_first_request({"warm_path": warm_path})
+    relower_s, out_relower, st_re = cold_first_request({"tdg": tdg})
+    for k in out_ship:
+        np.testing.assert_allclose(out_ship[k], out_relower[k],
+                                   rtol=2e-4, atol=2e-4)
+    ship_worker = st_ship["workers"][0]
+    return {
+        "artifact_bytes": os.path.getsize(warm_path + ".aot"),
+        "compile_seconds_at_warmup": info["compile_seconds"],
+        "trace_seconds_at_warmup": info["trace_seconds"],
+        "warm_ship_first_request_s": ship_s,
+        "relower_first_request_s": relower_s,
+        "speedup_cold_start": relower_s / max(ship_s, 1e-9),
+        "ship_aot_served": st_ship["aggregate"]["aot_served"],
+        "ship_intern_misses": ship_worker["intern"]["misses"],
+        "ship_hydrated_inband": st_ship["aggregate"]["hydrated_inband"],
+        "relower_intern_misses":
+            sum(s["intern"]["misses"] for s in st_re["workers"].values()
+                if s is not None),
+        "aot_hydrate_failures": st_ship["aggregate"]["aot_hydrate_failures"],
+    }
+
+
+def bench_scaling(worker_counts, n_tenants: int, n_structures: int,
+                  rounds: int, dim: int, waves: int, width: int,
+                  max_wait_ms: float) -> list[dict]:
+    """Fixed tenant load, growing worker fleet (sticky by structure)."""
+    from repro.serving import ClusterFrontend
+
+    rows = []
+    for workers in worker_counts:
+        tenants, shared_w = _make_tenants(n_tenants, n_structures, dim,
+                                          waves, width)
+        frontend = ClusterFrontend(workers=workers, registry=REGISTRY_SPEC,
+                                   max_batch=max(2, n_tenants // n_structures),
+                                   max_wait_ms=max_wait_ms,
+                                   name=f"bench-scale-{workers}")
+        for t in tenants:
+            frontend.register_tenant(t["name"], t["tdg"],
+                                     pinned={"w": shared_w})
+
+        def serve_rpc(name, bufs):
+            return frontend.serve(name, {k: v for k, v in bufs.items()
+                                         if k != "w"}, timeout=300)
+
+        _drive(serve_rpc, tenants, shared_w, 1)        # warm off the clock
+        wall, _ = _drive(serve_rpc, tenants, shared_w, rounds)
+        stats = frontend.stats()
+        frontend.close()
+        workers_used = len({r["worker"]
+                            for r in stats["tenants"].values()})
+        rows.append({
+            "workers": workers,
+            "workers_used": workers_used,
+            "tenants": n_tenants,
+            "structures": n_structures,
+            "requests": n_tenants * rounds,
+            "throughput_rps": n_tenants * rounds / max(wall, 1e-9),
+            "aggregate": stats["aggregate"],
+        })
+        print(f"workers={workers}: {rows[-1]['throughput_rps']:8.1f} req/s "
+              f"({workers_used} workers used, coalesced "
+              f"{stats['aggregate']['coalesced_requests']})", flush=True)
+    return rows
+
+
+def run(n_tenants: int = 8, rounds: int = 12, dim: int = 24, waves: int = 3,
+        width: int = 4, n_structures: int = 4, worker_counts=(1, 2, 4),
+        max_wait_ms: float = 25.0,
+        out_path: str = "BENCH_cluster.json") -> dict:
+    print("# phase 1/3: RPC frontend overhead vs in-process", flush=True)
+    overhead = bench_overhead(n_tenants, rounds, dim, waves, width,
+                              max_wait_ms)
+    print(f"  inproc {overhead['inproc_throughput_rps']:.1f} req/s | rpc "
+          f"{overhead['rpc_throughput_rps']:.1f} req/s | overhead "
+          f"{overhead['rpc_overhead_ms_per_request']:.2f} ms/req", flush=True)
+    print("# phase 2/3: cold start — warm-artifact ship vs re-lower",
+          flush=True)
+    cold = bench_cold_start(dim, waves + 2, width)
+    print(f"  ship {cold['warm_ship_first_request_s']*1e3:.0f} ms | re-lower "
+          f"{cold['relower_first_request_s']*1e3:.0f} ms | "
+          f"{cold['speedup_cold_start']:.2f}x "
+          f"({cold['artifact_bytes']} artifact bytes)", flush=True)
+    print("# phase 3/3: worker scaling", flush=True)
+    scaling = bench_scaling(worker_counts, n_tenants, n_structures, rounds,
+                            dim, waves, width, max_wait_ms)
+    report = {"bench": "cluster", "dim": dim, "waves": waves, "width": width,
+              "overhead": overhead, "cold_start": cold, "scaling": scaling}
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"# wrote {out_path}", flush=True)
+    return report
+
+
+def _assert_gates(report: dict) -> None:
+    overhead, cold = report["overhead"], report["cold_start"]
+    assert overhead["parity_max_abs_diff"] < 1e-3, overhead
+    # The headline acceptance: shipping the compiled artifact must beat
+    # making the cold worker re-lower, and the shipped worker must actually
+    # be warm (hydrated, served from AOT, never lowered anything).
+    assert cold["warm_ship_first_request_s"] < \
+        cold["relower_first_request_s"], cold
+    assert cold["ship_hydrated_inband"] >= 1, cold
+    assert cold["ship_aot_served"] >= 1, cold
+    assert cold["ship_intern_misses"] == 0, cold
+    assert cold["relower_intern_misses"] >= 1, cold
+    assert cold["aot_hydrate_failures"] == 0, cold
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: 2 workers, tiny grid; asserts parity + "
+                         "warm-ship-beats-re-lower (throughput reported, "
+                         "not gated)")
+    ap.add_argument("--out", default="BENCH_cluster.json")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        report = run(n_tenants=4, rounds=3, dim=8, waves=2, width=2,
+                     n_structures=2, worker_counts=(1, 2),
+                     out_path=args.out)
+        _assert_gates(report)
+        print("# smoke ok: rpc parity + warm-ship beats re-lower + "
+              "hydrated worker never lowered")
+    else:
+        report = run(out_path=args.out)
+        _assert_gates(report)
+        print(f"# acceptance: cold-start ship "
+              f"{report['cold_start']['speedup_cold_start']:.2f}x faster "
+              f"than re-lower; rpc overhead "
+              f"{report['overhead']['rpc_overhead_ms_per_request']:.2f} "
+              f"ms/req")
+
+
+if __name__ == "__main__":
+    main()

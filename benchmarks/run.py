@@ -35,6 +35,9 @@ benchmark modules in this package (sections marked * run via this driver):
                             python -m benchmarks.fusion [--smoke]
   serving.py                multi-tenant batched admission vs serial replay;
                             standalone: python -m benchmarks.serving [--smoke]
+  cluster.py                distributed frontend: RPC overhead, warm-artifact
+                            cold start, worker scaling; standalone:
+                            python -m benchmarks.cluster [--smoke]
 """
 
 

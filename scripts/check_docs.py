@@ -22,6 +22,16 @@ import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
+# The load-bearing doc set. docs/*.md are globbed, so a deleted doc would
+# otherwise vanish from the check silently instead of failing it; every doc
+# named here must exist AND be scanned.
+REQUIRED_DOCS = (
+    "README.md",
+    "docs/architecture.md",
+    "docs/kernels.md",
+    "docs/serving.md",
+)
+
 # Repo-relative paths we expect to find in backticks. Deliberately NOT
 # matching bare module names ("fuse.py") — those are anchored by the
 # module-map tables, which use full src/ paths.
@@ -41,6 +51,10 @@ def main() -> int:
     docs = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
     missing: list[tuple[str, str]] = []
     checked = 0
+    scanned = {str(md.relative_to(ROOT)) for md in docs if md.exists()}
+    for req in REQUIRED_DOCS:
+        if req not in scanned:
+            missing.append((req, "<required doc is missing>"))
     for md in docs:
         if not md.exists():
             missing.append((str(md.relative_to(ROOT)), "<the doc itself>"))

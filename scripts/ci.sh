@@ -3,7 +3,7 @@
 # so local runs and CI cannot drift. Usage:
 #   scripts/ci.sh                 # default tier-1 run (slow sweeps excluded)
 #   scripts/ci.sh -m slow         # opt into the slow interpret-mode sweeps
-#   scripts/ci.sh --bench-smoke   # fusion + serving benchmark smokes (+ tier-1 run)
+#   scripts/ci.sh --bench-smoke   # fusion + serving + cluster benchmark smokes (+ tier-1 run)
 #   scripts/ci.sh --docs-smoke    # docs-and-examples smoke (+ tier-1 run)
 #   scripts/ci.sh tests/test_registry.py -q
 set -euo pipefail
@@ -13,9 +13,12 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
   shift
   # CI-sized benchmark smokes: fusion asserts fused/unfused parity + traced-
   # program shrink; serving asserts multi-tenant parity + structural sharing
-  # + coalescing (full runs: benchmarks.fusion / benchmarks.serving)
+  # + coalescing; cluster asserts RPC parity + warm-artifact shipping beats
+  # per-worker re-lowering on cold start (2 workers, small grid). Full runs:
+  # benchmarks.fusion / benchmarks.serving / benchmarks.cluster
   python -m benchmarks.fusion --smoke --out /tmp/BENCH_fusion_smoke.json
   python -m benchmarks.serving --smoke --out /tmp/BENCH_serving_smoke.json
+  python -m benchmarks.cluster --smoke --out /tmp/BENCH_cluster_smoke.json
 fi
 if [[ "${1:-}" == "--docs-smoke" ]]; then
   shift

@@ -24,6 +24,7 @@ from .executor import EagerExecutor, ReplayExecutor, ExecStats
 from .record import taskgraph, TaskGraphRegion, GraphBuilder, registry, reset_registry
 from .serialize import (TaskFnRegistry, save_tdg, load_tdg, tdg_to_dict,
                         tdg_from_dict, save_executable, load_executable,
+                        executable_to_bytes, executable_from_bytes,
                         executable_serialization_available, warmup_and_save,
                         load_warm)
 
@@ -41,5 +42,6 @@ __all__ = [
     "taskgraph", "TaskGraphRegion", "GraphBuilder", "registry", "reset_registry",
     "TaskFnRegistry", "save_tdg", "load_tdg", "tdg_to_dict", "tdg_from_dict",
     "save_executable", "load_executable",
+    "executable_to_bytes", "executable_from_bytes",
     "executable_serialization_available", "warmup_and_save", "load_warm",
 ]

@@ -143,11 +143,14 @@ def executable_serialization_available() -> bool:
     return _serialize_executable_module() is not None
 
 
-def save_executable(aot, path) -> None:
-    """Persist an ``lower.AotExecutable``'s compiled XLA binary to ``path``.
+def executable_to_bytes(aot) -> bytes:
+    """Frame an ``lower.AotExecutable`` as self-contained artifact bytes.
 
-    The payload is device/topology-specific (same constraint as the paper's
-    compiler-emitted TDG object code): load it on a matching platform.
+    This is the in-band shipping format of the cluster tier (the frontend
+    sends these bytes to a cold worker instead of making it re-lower) as
+    well as the on-disk ``.aot`` sidecar payload. The compiled binary is
+    device/topology-specific (same constraint as the paper's
+    compiler-emitted TDG object code): hydrate it on a matching platform.
     """
     se = _serialize_executable_module()
     if se is None:
@@ -168,15 +171,24 @@ def save_executable(aot, path) -> None:
         "donate_slots": list(aot.donate_slots),
         "cost_analysis": aot.cost_analysis,
     }
+    return pickle.dumps(blob)
+
+
+def save_executable(aot, path) -> None:
+    """Persist an ``lower.AotExecutable`` to ``path`` (:func:`executable_to_bytes`)."""
+    data = executable_to_bytes(aot)
     with open(path, "wb") as f:
-        pickle.dump(blob, f)
+        f.write(data)
 
 
-def load_executable(path):
-    """Load a compiled replay executable saved by :func:`save_executable`.
+def executable_from_bytes(data: bytes):
+    """Hydrate an ``lower.AotExecutable`` from :func:`executable_to_bytes` output.
 
-    Returns an ``lower.AotExecutable``: call it on a buffer dict with the
-    shapes it was compiled for — no retracing, no recompilation.
+    Returns an executable ready to call on a buffer dict with the shapes it
+    was compiled for — no retracing, no recompilation. Raises on any
+    corruption/version/platform mismatch; soft-fallback policy belongs to
+    the callers (``load_warm``, the serving tiers), which must *count* the
+    failure rather than silently masquerading as warm.
     """
     se = _serialize_executable_module()
     if se is None:
@@ -185,8 +197,7 @@ def load_executable(path):
             "cannot load compiled executables")
     from . import lower as _lower
 
-    with open(path, "rb") as f:
-        blob = pickle.load(f)
+    blob = pickle.loads(data)
     if blob.get("version") != 1:
         raise ValueError(f"unsupported executable version {blob.get('version')}")
     compiled = se.deserialize_and_load(blob["payload"], blob["in_tree"],
@@ -200,6 +211,13 @@ def load_executable(path):
                                 fused=blob["fused"],
                                 donate_slots=tuple(blob["donate_slots"]),
                                 cost_analysis=blob["cost_analysis"])
+
+
+def load_executable(path):
+    """Load a compiled replay executable saved by :func:`save_executable`."""
+    with open(path, "rb") as f:
+        data = f.read()
+    return executable_from_bytes(data)
 
 
 def warmup_and_save(tdg: TDG, buffers, path, registry: TaskFnRegistry,

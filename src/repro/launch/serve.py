@@ -1,6 +1,6 @@
-"""Serving driver: batched prefill + decode, single-stream or multi-tenant.
+"""Serving driver: batched prefill + decode; single-stream, server or cluster.
 
-Two modes:
+Three modes:
 
 * **Single-stream** (default): one prompt batch, prefill then an
   autoregressive decode loop. The decode step is a recurrent taskgraph
@@ -19,6 +19,17 @@ Two modes:
 
       PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \\
           --server --tenants 4 --gen 16
+
+* **Distributed cluster** (``--cluster W``): the same N-tenant decode
+  drive, but through ``repro.serving.ClusterFrontend`` — W worker
+  *processes* each running a ``RegionServer`` behind the socket RPC layer.
+  Model params are shipped once per worker as pinned buffers; per-step
+  requests carry only tokens/pos/caches; tenants route sticky-by-structure
+  so one worker serves all structurally identical decode regions from one
+  warm executable. ``--cluster 0`` uses ``REPRO_CLUSTER_WORKERS``.
+
+      PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \\
+          --cluster 2 --tenants 4 --gen 8
 """
 from __future__ import annotations
 
@@ -30,8 +41,27 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import ARCHS, get_config, reduced
+from ..core.serialize import TaskFnRegistry
 from ..models import init_params, prefill
 from ..training import make_serve_step
+
+
+def build_decode_registry(arch: str = "qwen2.5-3b",
+                          smoke: bool = True) -> TaskFnRegistry:
+    """Payload symbol table for ``--cluster`` workers (and the frontend).
+
+    A spawned worker cannot receive the decode-step closure over the wire;
+    it re-links the TDG's ``"decode"`` symbol by importing this factory and
+    rebuilding the step from the (deterministic) model config — the same
+    contract as the paper's compiler-emitted TDG referencing outlined
+    functions by name.
+    """
+    cfg = get_config(arch)
+    if smoke:
+        cfg = reduced(cfg)
+    reg = TaskFnRegistry()
+    reg.register("decode")(make_serve_step(cfg))
+    return reg
 
 
 def _run_single_stream(args, cfg, params) -> int:
@@ -150,6 +180,98 @@ def _run_server(args, cfg, params) -> int:
     return 0
 
 
+def _run_cluster(args, cfg, params) -> int:
+    from ..core import TDG
+    from ..serving import ClusterFrontend
+
+    registry = build_decode_registry(args.arch, args.smoke)
+    decode = registry.get("decode")
+    max_len = args.prompt_len + args.gen
+
+    states = []
+    t0 = time.time()
+    for i in range(args.tenants):
+        key = jax.random.PRNGKey(args.seed + 1 + i)
+        batch = {"tokens": jax.random.randint(
+            key, (args.batch, args.prompt_len), 2, cfg.vocab_size)}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.random.normal(
+                key, (args.batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        logits, caches, pos = prefill(params, cfg, batch, max_len=max_len)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        states.append({"tok": tok, "pos": pos, "caches": caches, "out": [tok]})
+    jax.block_until_ready([s["tok"] for s in states])
+    t_prefill = time.time() - t0
+
+    t0 = time.time()
+    frontend = ClusterFrontend(
+        workers=args.cluster or None,
+        registry="repro.launch.serve:build_decode_registry",
+        registry_kwargs={"arch": args.arch, "smoke": args.smoke},
+        max_batch=args.max_batch or args.tenants,
+        max_wait_ms=args.max_wait_ms, name="decode-cluster")
+    for i in range(args.tenants):
+        tdg = TDG(f"decode[{i}]")
+        tdg.add_task(decode, ins=["params", "tokens", "pos", "caches"],
+                     outs=["next", "caches"], name="decode")
+        # params ship ONCE per worker (pinned); each step's request carries
+        # only the varying decode state.
+        frontend.register_tenant(f"tenant{i}", tdg, outputs=("next", "caches"),
+                                 pinned={"params": params})
+    t_spawn = time.time() - t0
+
+    errors: list[BaseException] = []
+
+    def tenant_loop(i: int) -> None:
+        try:
+            st = states[i]
+            for _ in range(args.gen - 1):
+                out = frontend.serve(f"tenant{i}", {
+                    "tokens": st["tok"][:, None], "pos": st["pos"],
+                    "caches": st["caches"]}, timeout=300)
+                st["tok"] = jnp.asarray(out["next"])
+                st["caches"] = out["caches"]
+                st["pos"] = st["pos"] + 1
+                st["out"].append(st["tok"])
+        except BaseException as e:   # surface thread failures, don't exit 0
+            errors.append(e)
+
+    threads = [threading.Thread(target=tenant_loop, args=(i,))
+               for i in range(args.tenants)]
+    t0 = time.time()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    t_decode = time.time() - t0
+    stats = frontend.stats()
+    frontend.close()
+    if errors:
+        raise errors[0]
+
+    fr, agg = stats["frontend"], stats["aggregate"]
+    toks = args.tenants * args.batch * (args.gen - 1)
+    print(f"prefill: {t_prefill*1e3:.1f} ms for {args.tenants} tenants "
+          f"x {args.batch}x{args.prompt_len}")
+    print(f"cluster: {fr['workers']} workers spawned+registered in "
+          f"{t_spawn*1e3:.0f} ms")
+    print(f"decode:  {t_decode*1e3:.1f} ms for {args.gen-1} steps x "
+          f"{args.tenants} tenants ({toks / max(t_decode, 1e-9):.1f} tok/s "
+          f"over RPC)")
+    print(f"fleet:   admitted {agg['admitted']}, {agg['batches']} batches, "
+          f"coalesced {agg['coalesced_requests']}, aot_served "
+          f"{agg['aot_served']}, hydrate failures "
+          f"{agg['aot_hydrate_failures']}")
+    print(f"routing: {stats['tenants']}")
+    print(f"fleet intern: {agg['intern']}  pool: {agg['pool']}")
+    print(f"frontend: deaths {fr['worker_deaths']}, requeues "
+          f"{fr['requeues']}, artifacts shipped {fr['artifacts_shipped']}")
+    for i in (0, args.tenants - 1):
+        gen = jnp.stack(states[i]["out"], axis=1)
+        print(f"tenant{i} sample token ids:", gen[0, :12].tolist())
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list(ARCHS), default="qwen2.5-3b")
@@ -160,12 +282,15 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--server", action="store_true",
                     help="multi-tenant RegionServer mode (see repro.serving)")
+    ap.add_argument("--cluster", type=int, default=None, nargs="?", const=0,
+                    help="distributed mode: worker process count "
+                         "(0/omitted value = REPRO_CLUSTER_WORKERS)")
     ap.add_argument("--tenants", type=int, default=4,
-                    help="[--server] number of concurrent decode tenants")
+                    help="[--server/--cluster] concurrent decode tenants")
     ap.add_argument("--max-batch", type=int, default=0,
-                    help="[--server] coalescing ceiling (0 = #tenants)")
+                    help="[--server/--cluster] coalescing ceiling (0 = #tenants)")
     ap.add_argument("--max-wait-ms", type=float, default=5.0,
-                    help="[--server] admission window for coalescing")
+                    help="[--server/--cluster] admission window for coalescing")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -173,6 +298,8 @@ def main(argv=None):
         cfg = reduced(cfg)
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
 
+    if args.cluster is not None:
+        return _run_cluster(args, cfg, params)
     if args.server:
         return _run_server(args, cfg, params)
     return _run_single_stream(args, cfg, params)

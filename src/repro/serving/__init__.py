@@ -1,11 +1,16 @@
 """Multi-tenant replay serving: RegionServer over interned/AOT executables.
 
-The serving tier of the Taskgraph reproduction (see docs/architecture.md):
+The serving tier of the Taskgraph reproduction (see docs/serving.md):
 an admission queue coalesces concurrent requests against structurally
 identical regions into one batched fused replay, an LRU warm pool shares
 compiled executables across tenants, and metrics expose queue/batch/latency
-behaviour so detrimental execution patterns are observable.
+behaviour so detrimental execution patterns are observable. The cluster
+tier (:mod:`repro.serving.cluster`) puts a socket-RPC front on
+``RegionServer.submit`` and ships warm compiled artifacts to worker
+processes instead of re-lowering per host.
 """
+from .cluster import (ClusterError, ClusterFrontend, ClusterRemoteError,
+                      StickyRouter, WorkerDied, WorkerNode, resolve_registry)
 from .metrics import LatencyReservoir, ServerMetrics, percentile
 from .pool import PoolEntry, WarmPool
 from .server import RegionServer, Tenant
@@ -14,4 +19,6 @@ __all__ = [
     "RegionServer", "Tenant",
     "WarmPool", "PoolEntry",
     "ServerMetrics", "LatencyReservoir", "percentile",
+    "ClusterFrontend", "WorkerNode", "StickyRouter", "resolve_registry",
+    "ClusterError", "ClusterRemoteError", "WorkerDied",
 ]

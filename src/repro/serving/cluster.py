@@ -1,0 +1,883 @@
+"""Distributed replay serving: an RPC front on ``RegionServer.submit``.
+
+The single-process :class:`~repro.serving.server.RegionServer` already makes
+multi-tenant replay cheap (coalescing, interning, AOT hydration); this
+module is the step from "serve many tenants fast in one process" to "serve
+them from a pool of worker processes" — the distributed-manager shape of
+Bosch et al. (arXiv:2009.03066): **central admission, decentralized
+execution**. Three pieces:
+
+* :class:`WorkerNode` — one process, one ``RegionServer``, one RPC listener
+  (:mod:`repro.serving.rpc`). It registers tenants from shipped TDG JSON
+  (payloads re-linked by symbol through an importable
+  ``serialize.TaskFnRegistry``), **hydrates compiled executables from
+  artifact bytes shipped in-band** (``serialize.executable_from_bytes``)
+  instead of re-lowering, and serves ``submit`` asynchronously so requests
+  arriving over one connection still coalesce in its admission queue.
+
+* :class:`ClusterFrontend` — the client-facing tier. It spawns workers via
+  ``multiprocessing`` (spawn by default: a fresh jax per worker), routes
+  every tenant to a worker **sticky by structure**: the routing key is the
+  TDG's ``structure_signature`` + payload symbols, so structurally
+  identical tenants land on the same worker and that worker's
+  ``WarmPool``/intern cache stays hot (N tenants, ONE executable, and
+  cross-tenant request coalescing keeps working across the RPC boundary).
+
+* :class:`StickyRouter` — the routing table itself: least-loaded assignment
+  on first sight of a structure, sticky thereafter, re-routable around dead
+  workers.
+
+**Warm-artifact shipping.** A tenant registered with ``warm_path=`` (or
+warmed via :meth:`ClusterFrontend.warmup`) has its compiled executable held
+as bytes on the frontend; registration ships those bytes with the TDG so a
+cold worker *hydrates* instead of re-lowering — the cross-process replay
+story of ``serialize.warmup_and_save`` carried over the wire
+(``benchmarks/cluster.py`` gates that this beats re-lowering on cold
+start). A worker that receives artifact bytes it cannot hydrate serves the
+tenant lazily but reports ``aot_hydrate_failures`` in its metrics — a
+poisoned artifact is loud, never silently cold.
+
+**Failure handling.** A worker death surfaces as a broken connection; the
+frontend fails that worker's in-flight futures, re-routes its tenants to
+siblings (re-shipping TDGs + held artifacts), and retries the dead
+requests there (``requeues``/``worker_deaths`` counters). Payloads are
+pure functions over explicit buffers, so a replayed request is safe to
+re-execute. :meth:`ClusterFrontend.stats` aggregates every worker's
+server metrics (including ``aot_hydrate_failures``) next to the frontend's
+own routing/failover counters, so the cross-process view stays as
+observable as the in-process one (cf. arXiv:2406.03077).
+
+Env knobs: ``REPRO_CLUSTER_WORKERS`` (default worker count, used by
+``ClusterFrontend(workers=None)`` and ``launch/serve.py --cluster 0``) and
+``REPRO_SHIP_ARTIFACTS=0`` (kill switch: never ship compiled bytes; cold
+workers re-lower).
+"""
+from __future__ import annotations
+
+import importlib
+import itertools
+import json
+import multiprocessing
+import os
+import socket
+import threading
+from concurrent.futures import Future
+from typing import Any, Callable, Mapping
+
+from ..core import serialize as _serialize
+from ..core.tdg import TDG, structure_signature
+from . import rpc
+from .server import RegionServer
+
+_WORKERS_ENV = "REPRO_CLUSTER_WORKERS"
+_SHIP_ENV = "REPRO_SHIP_ARTIFACTS"
+
+
+class ClusterError(RuntimeError):
+    """Frontend-level failure (no live workers, registration conflict...)."""
+
+
+class ClusterRemoteError(ClusterError):
+    """A worker executed the request and reported an error (bad request,
+    payload failure): the *request* failed, the worker is fine."""
+
+
+class WorkerDied(ClusterError):
+    """The connection to a worker broke: the worker is gone, the request
+    may be retried on a sibling."""
+
+
+def resolve_registry(spec, kwargs: Mapping[str, Any] | None = None
+                     ) -> "_serialize.TaskFnRegistry":
+    """Resolve a registry spec to a ``TaskFnRegistry`` (frontend & workers).
+
+    ``spec`` is either a ``TaskFnRegistry`` already (frontend-side
+    convenience; NOT shippable to a spawned worker) or an importable
+    ``"module:attr"`` string where ``attr`` is a registry or a callable
+    returning one (called with ``kwargs``). The string form is what makes
+    payload re-linking work across processes: both sides import the same
+    symbols instead of pickling closures.
+    """
+    if isinstance(spec, _serialize.TaskFnRegistry):
+        return spec
+    if not isinstance(spec, str) or ":" not in spec:
+        raise ValueError(
+            "registry must be a TaskFnRegistry or an importable "
+            f"'module:attr' string, got {spec!r}")
+    mod_name, attr = spec.split(":", 1)
+    obj = getattr(importlib.import_module(mod_name), attr)
+    if isinstance(obj, _serialize.TaskFnRegistry):
+        if kwargs:
+            raise ValueError(f"{spec!r} is a registry instance; "
+                             "registry_kwargs only apply to a factory")
+        return obj
+    registry = obj(**dict(kwargs or {}))
+    if not isinstance(registry, _serialize.TaskFnRegistry):
+        raise TypeError(f"{spec!r} returned {type(registry).__name__}, "
+                        "expected TaskFnRegistry")
+    return registry
+
+
+# ---------------------------------------------------------------------------
+# Worker side
+# ---------------------------------------------------------------------------
+
+class WorkerNode:
+    """One worker process: an RPC listener wrapped around a ``RegionServer``.
+
+    ``submit`` is handled *asynchronously* — the connection reader enqueues
+    into the server's admission queue and replies from a completion
+    callback — so many in-flight requests from one frontend connection
+    coalesce exactly as in-process callers would. Everything else
+    (register/warmup/stats/ping/shutdown) is handled inline: rare, fast, or
+    deliberately serializing (warmup).
+    """
+
+    def __init__(self, registry: "_serialize.TaskFnRegistry",
+                 host: str = "127.0.0.1", port: int = 0,
+                 server: RegionServer | None = None, **server_kwargs):
+        self.registry = registry
+        self.server = server or RegionServer(
+            name=f"worker-{os.getpid()}", **server_kwargs)
+        self.listener = rpc.listener(host, port)
+        self.port = self.listener.getsockname()[1]
+        # Pinned buffers arrive once per *group* and are shared by every
+        # tenant that references the group key, so all those tenants merge
+        # the SAME decoded array objects into their requests — which is
+        # exactly what lets RegionServer's coalescer recognize them as
+        # shared (object identity) and broadcast instead of stack.
+        self._pin_groups: dict[str, dict] = {}
+        self._tenant_pin: dict[str, str] = {}
+        self._stop = threading.Event()
+        self._conn_threads: list[threading.Thread] = []
+        # Worker-local counters beyond the server's own metrics.
+        self.hydrated_inband = 0
+
+    # ------------------------------------------------------------------ loop
+    def serve_forever(self) -> None:
+        """Accept frontend connections until a ``shutdown`` op arrives.
+
+        The listener polls with a short timeout rather than blocking
+        forever: ``close()``-ing a socket does not reliably wake a thread
+        blocked in ``accept()``, so a purely blocking loop would strand
+        the process after a shutdown op handled on a connection thread.
+        """
+        self.listener.settimeout(0.2)
+        try:
+            while not self._stop.is_set():
+                try:
+                    sock, _addr = self.listener.accept()
+                except socket.timeout:
+                    continue
+                except OSError:        # listener closed by shutdown
+                    break
+                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                conn = rpc.RpcConnection(sock)
+                t = threading.Thread(target=self._conn_loop, args=(conn,),
+                                     name="worker-conn", daemon=True)
+                t.start()
+                self._conn_threads.append(t)
+        finally:
+            self.server.close()
+
+    def _conn_loop(self, conn: rpc.RpcConnection) -> None:
+        while not self._stop.is_set():
+            try:
+                msg = conn.recv()
+            except (rpc.ConnectionClosed, OSError):
+                return
+            try:
+                self._dispatch(conn, msg)
+            except Exception as exc:    # never let one bad frame kill the loop
+                self._send_error(conn, msg.get("id"), exc)
+            if msg.get("op") == "shutdown":
+                return
+
+    def _send_error(self, conn: rpc.RpcConnection, mid, exc: Exception,
+                    ) -> None:
+        try:
+            conn.send({"op": "error", "id": mid,
+                       "error": f"{type(exc).__name__}: {exc}"})
+        except OSError:
+            pass
+
+    def _dispatch(self, conn: rpc.RpcConnection, msg: dict) -> None:
+        op, mid = msg["op"], msg.get("id")
+        if op == "submit":
+            tenant = msg["tenant"]
+            pin_key = self._tenant_pin.get(tenant)
+            buffers = dict(self._pin_groups.get(pin_key, {}))
+            buffers.update(msg["buffers"])
+            fut = self.server.submit(tenant, buffers)
+
+            def _done(f: Future, _conn=conn, _mid=mid) -> None:
+                exc = f.exception()
+                if exc is not None:
+                    self._send_error(_conn, _mid, exc)
+                else:
+                    try:
+                        _conn.send({"op": "result", "id": _mid,
+                                    "out": f.result()})
+                    except OSError:
+                        pass
+            fut.add_done_callback(_done)
+        elif op == "register":
+            conn.send({"op": "result", "id": mid,
+                       **self._handle_register(msg)})
+        elif op == "warmup":
+            conn.send({"op": "result", "id": mid, **self._handle_warmup(msg)})
+        elif op == "stats":
+            conn.send({"op": "result", "id": mid, "stats": self.stats()})
+        elif op == "ping":
+            conn.send({"op": "result", "id": mid, "pid": os.getpid(),
+                       "port": self.port})
+        elif op == "shutdown":
+            self._stop.set()
+            conn.send({"op": "result", "id": mid, "stopping": True})
+            try:
+                self.listener.close()
+            except OSError:
+                pass
+        else:
+            raise ValueError(f"unknown op {op!r}")
+
+    # ------------------------------------------------------------------- ops
+    def _handle_register(self, msg: dict) -> dict:
+        name = msg["tenant"]
+        tdg = _serialize.tdg_from_dict(msg["tdg"], self.registry)
+        outputs = tuple(msg["outputs"]) if msg.get("outputs") else None
+        already = False
+        try:
+            self.server.register_tenant(name, tdg, outputs=outputs,
+                                        kernel_mode=msg.get("kernel_mode"))
+        except ValueError as exc:
+            if "already registered" not in str(exc):
+                raise
+            # Failover re-registration (the frontend routed this tenant
+            # here before, or is re-shipping after a sibling died): the
+            # tenant and its warm state are still valid — idempotent.
+            already = True
+        pin_key = msg.get("pin_key")
+        if pin_key is not None:
+            if msg.get("pinned") is not None:
+                # setdefault: the first shipment's decoded objects win, so
+                # later tenants referencing this group alias the same arrays.
+                self._pin_groups.setdefault(pin_key, dict(msg["pinned"]))
+            elif pin_key not in self._pin_groups:
+                raise ValueError(
+                    f"tenant {name!r} references pin group {pin_key!r} "
+                    "that was never shipped to this worker")
+            self._tenant_pin[name] = pin_key
+        hydrated, hydrate_error = False, None
+        artifact = msg.get("artifact")
+        if artifact is not None:
+            try:
+                aot = _serialize.executable_from_bytes(artifact)
+                self.server.install_aot(name, aot, hydrated=True)
+                self.hydrated_inband += 1
+                hydrated = True
+            except Exception as exc:
+                # Poisoned/unusable artifact: serve lazily, but LOUDLY —
+                # the metric is what keeps "fell back to re-lowering"
+                # from masquerading as warm in aggregated stats.
+                self.server.metrics.on_aot_hydrate_failure()
+                hydrate_error = f"{type(exc).__name__}: {exc}"
+        return {"registered": True, "already": already,
+                "hydrated": hydrated, "hydrate_error": hydrate_error}
+
+    def _handle_warmup(self, msg: dict) -> dict:
+        report = self.server.warmup(msg["tenant"], msg["buffers"])
+        artifact = None
+        if _serialize.executable_serialization_available():
+            tenant = self.server.tenant(msg["tenant"])
+            entry = self.server.pool.peek(tenant.aot_key)
+            if entry is not None:
+                artifact = _serialize.executable_to_bytes(entry.fn)
+        return {"report": report, "artifact": artifact}
+
+    def stats(self) -> dict:
+        s = self.server.stats()
+        s["worker"] = {"pid": os.getpid(), "port": self.port,
+                       "hydrated_inband": self.hydrated_inband,
+                       "pin_groups": len(self._pin_groups),
+                       "pinned_tenants": sorted(self._tenant_pin)}
+        return s
+
+
+def _worker_main(port_conn, registry_spec, registry_kwargs,
+                 server_kwargs) -> None:
+    """Spawned-process entry point: build the node, report the port, serve."""
+    registry = resolve_registry(registry_spec, registry_kwargs)
+    node = WorkerNode(registry, **(server_kwargs or {}))
+    try:
+        port_conn.send(node.port)
+    finally:
+        port_conn.close()
+    node.serve_forever()
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+
+class StickyRouter:
+    """Structure-sticky, least-loaded tenant→worker routing table.
+
+    The key insight (and the whole point of stickiness): a worker's
+    ``WarmPool`` and intern cache are keyed by *structure*, so the cheapest
+    worker for a request is whichever one already compiled that structure.
+    First sight of a routing key picks the live worker with the fewest
+    structures assigned; every later tenant with the same key follows it.
+    ``reroute`` moves a key off a dead worker (and remembers the move).
+    """
+
+    def __init__(self, n_workers: int):
+        self.n_workers = n_workers
+        self._table: dict[Any, int] = {}
+        self._loads = [0] * n_workers
+        self._lock = threading.Lock()
+
+    def route(self, key: Any, alive: frozenset[int] | set[int]) -> int:
+        if not alive:
+            raise ClusterError("no live workers to route to")
+        with self._lock:
+            w = self._table.get(key)
+            if w is not None and w in alive:
+                return w
+            w = min(alive, key=lambda i: (self._loads[i], i))
+            if self._table.get(key) is not None:
+                self._loads[self._table[key]] -= 1
+            self._table[key] = w
+            self._loads[w] += 1
+            return w
+
+    def reroute(self, key: Any, alive: set[int], exclude: set[int]) -> int:
+        candidates = set(alive) - set(exclude)
+        if not candidates:
+            raise ClusterError(
+                f"no live workers left to requeue onto (alive={sorted(alive)},"
+                f" excluded={sorted(exclude)})")
+        with self._lock:
+            old = self._table.get(key)
+            w = min(candidates, key=lambda i: (self._loads[i], i))
+            if old is not None:
+                self._loads[old] -= 1
+            self._table[key] = w
+            self._loads[w] += 1
+            return w
+
+    def assignment(self) -> dict:
+        with self._lock:
+            return dict(self._table)
+
+
+# ---------------------------------------------------------------------------
+# Frontend side
+# ---------------------------------------------------------------------------
+
+class _TenantRecord:
+    __slots__ = ("name", "tdg_dict", "outputs", "kernel_mode", "route_key",
+                 "worker", "artifact", "pin_key", "requests")
+
+    def __init__(self, name, tdg_dict, outputs, kernel_mode, route_key):
+        self.name = name
+        self.tdg_dict = tdg_dict
+        self.outputs = outputs
+        self.kernel_mode = kernel_mode
+        self.route_key = route_key
+        self.worker: int | None = None
+        self.artifact: bytes | None = None
+        self.pin_key: str | None = None
+        self.requests = 0
+
+
+class _WorkerHandle:
+    """Frontend-side view of one worker: process + connection + reply demux."""
+
+    def __init__(self, idx: int, process, conn: rpc.RpcConnection,
+                 ids: "itertools.count", on_death: Callable[[int], None]):
+        self.idx = idx
+        self.process = process
+        self.conn = conn
+        self.alive = True
+        self._ids = ids
+        self._on_death = on_death
+        self._lock = threading.Lock()
+        self._pending: dict[int, Future] = {}
+        self._reader = threading.Thread(target=self._read_loop,
+                                        name=f"cluster-reader-{idx}",
+                                        daemon=True)
+        self._reader.start()
+
+    def request_async(self, msg: dict) -> Future:
+        fut: Future = Future()
+        mid = next(self._ids)
+        with self._lock:
+            if not self.alive:
+                raise WorkerDied(f"worker {self.idx} is dead")
+            self._pending[mid] = fut
+        try:
+            self.conn.send({**msg, "id": mid})
+        except OSError as exc:
+            with self._lock:
+                self._pending.pop(mid, None)
+            self._mark_dead()
+            raise WorkerDied(f"worker {self.idx}: send failed "
+                             f"({exc})") from exc
+        return fut
+
+    def request(self, msg: dict, timeout: float | None = 120.0) -> dict:
+        reply = self.request_async(msg).result(timeout=timeout)
+        return reply
+
+    def _read_loop(self) -> None:
+        while True:
+            try:
+                msg = self.conn.recv()
+            except (rpc.ConnectionClosed, OSError):
+                break
+            fut = None
+            with self._lock:
+                fut = self._pending.pop(msg.get("id"), None)
+            if fut is None:
+                continue            # reply to an already-abandoned request
+            if msg.get("op") == "error":
+                fut.set_exception(ClusterRemoteError(
+                    f"worker {self.idx}: {msg.get('error')}"))
+            else:
+                fut.set_result(msg)
+        self._mark_dead()
+
+    def _mark_dead(self) -> None:
+        with self._lock:
+            if not self.alive:
+                return
+            self.alive = False
+            pending = list(self._pending.values())
+            self._pending.clear()
+        for fut in pending:
+            if not fut.done():
+                fut.set_exception(WorkerDied(
+                    f"worker {self.idx} died with the request in flight"))
+        self._on_death(self.idx)
+
+    def close(self) -> None:
+        self.conn.close()
+
+
+class ClusterFrontend:
+    """Central admission over a pool of ``WorkerNode`` processes.
+
+    Exposes the same surface as :class:`RegionServer` — ``register_tenant``
+    / ``submit`` / ``serve`` / ``warmup`` / ``stats`` — but routes over RPC
+    with structure-sticky placement, warm-artifact shipping and
+    death-requeue. Single-process semantics are untouched: each worker IS a
+    ``RegionServer``; the frontend only decides *which one* sees a request.
+
+    Parameters
+    ----------
+    workers:
+        Worker process count (default: ``REPRO_CLUSTER_WORKERS`` or 2).
+    registry:
+        ``"module:attr"`` spec resolved in frontend AND workers (see
+        :func:`resolve_registry`) — the payload symbol table.
+    registry_kwargs:
+        Kwargs for a factory-style registry spec.
+    ship_artifacts:
+        Ship held compiled artifacts to workers at (re-)registration.
+        Default: on, unless ``REPRO_SHIP_ARTIFACTS=0``.
+    start_method:
+        ``multiprocessing`` start method; ``"spawn"`` (default) gives every
+        worker a fresh, fork-safety-free jax runtime.
+    max_batch / max_wait_ms / pool_capacity / fuse:
+        Forwarded to every worker's ``RegionServer``.
+    """
+
+    def __init__(self, workers: int | None = None, *,
+                 registry: Any, registry_kwargs: Mapping[str, Any] | None = None,
+                 max_batch: int = 8, max_wait_ms: float = 2.0,
+                 pool_capacity: int = 64, fuse: bool | str = "auto",
+                 ship_artifacts: bool | None = None,
+                 start_method: str = "spawn",
+                 spawn_timeout: float = 120.0,
+                 name: str = "cluster-frontend"):
+        if workers is None:
+            workers = int(os.environ.get(_WORKERS_ENV, "2"))
+        if workers < 1:
+            raise ValueError(f"need at least one worker, got {workers}")
+        if ship_artifacts is None:
+            ship_artifacts = os.environ.get(_SHIP_ENV, "1").strip().lower() \
+                not in ("0", "false", "off", "no")
+        if not isinstance(registry, str):
+            raise ValueError(
+                "registry must be an importable 'module:attr' string — "
+                "spawned workers cannot receive a live TaskFnRegistry")
+        self.name = name
+        self.n_workers = workers
+        self.ship_artifacts = ship_artifacts
+        self.registry_spec = registry
+        self.registry_kwargs = dict(registry_kwargs or {})
+        self.local_registry = resolve_registry(registry, registry_kwargs)
+        self.router = StickyRouter(workers)
+        self._server_kwargs = {"max_batch": max_batch,
+                               "max_wait_ms": max_wait_ms,
+                               "pool_capacity": pool_capacity, "fuse": fuse}
+        self._ids = itertools.count(1)
+        self._lock = threading.Lock()
+        self._tenants: dict[str, _TenantRecord] = {}
+        # Pin groups: identity-keyed frontend registry of pinned buffer
+        # sets, shipped to each worker at most once so tenants sharing a
+        # group alias ONE decoded copy worker-side (broadcast, not stack).
+        self._pin_ids: dict[tuple, str] = {}
+        self._pin_data: dict[str, dict] = {}
+        self._shipped_pins: set[tuple[int, str]] = set()
+        self._closed = False
+        self.worker_deaths = 0
+        self.requeues = 0
+        self.artifacts_shipped = 0
+        self.artifact_bytes_shipped = 0
+        self.pin_groups_shipped = 0
+        ctx = multiprocessing.get_context(start_method)
+        # Start every process before waiting on any port: worker cold start
+        # (fresh interpreter + jax import) is seconds each, and overlapping
+        # the spawns makes frontend startup cost ~one cold start, not N.
+        started = []
+        for idx in range(workers):
+            parent_conn, child_conn = ctx.Pipe()
+            proc = ctx.Process(
+                target=_worker_main,
+                args=(child_conn, self.registry_spec, self.registry_kwargs,
+                      self._server_kwargs),
+                name=f"{name}-worker-{idx}", daemon=True)
+            proc.start()
+            child_conn.close()
+            started.append((idx, proc, parent_conn))
+        self._handles = []
+        try:
+            for idx, proc, parent_conn in started:
+                if not parent_conn.poll(spawn_timeout):
+                    raise ClusterError(f"worker {idx} did not report its RPC "
+                                       f"port within {spawn_timeout}s")
+                port = parent_conn.recv()
+                parent_conn.close()
+                conn = rpc.connect("127.0.0.1", port, timeout=spawn_timeout)
+                self._handles.append(_WorkerHandle(idx, proc, conn, self._ids,
+                                                   self._note_death))
+        except Exception:
+            for _idx, proc, _conn in started:
+                if proc.is_alive():
+                    proc.terminate()
+            raise
+
+    # ------------------------------------------------------------- lifecycle
+    def __enter__(self) -> "ClusterFrontend":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self) -> None:
+        """Shut down workers (best effort), close connections, join processes."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        for h in self._handles:
+            if h.alive:
+                try:
+                    h.request({"op": "shutdown"}, timeout=30.0)
+                except Exception:       # dying worker: we're tearing down
+                    pass
+            h.close()
+        for h in self._handles:
+            h.process.join(timeout=10.0)
+            if h.process.is_alive():
+                h.process.terminate()
+                h.process.join(timeout=10.0)
+
+    def _note_death(self, idx: int) -> None:
+        with self._lock:
+            if not self._closed:     # orderly shutdown is not a death
+                self.worker_deaths += 1
+
+    def _alive(self) -> set[int]:
+        return {h.idx for h in self._handles if h.alive}
+
+    # --------------------------------------------------------------- tenants
+    def register_tenant(self, name: str, tdg: TDG | None = None, *,
+                        outputs: tuple[str, ...] | None = None,
+                        kernel_mode: str | None = None,
+                        warm_path: str | None = None,
+                        pinned: Mapping[str, Any] | None = None
+                        ) -> _TenantRecord:
+        """Route + register a tenant on its structure-sticky worker.
+
+        Exactly one of ``tdg`` / ``warm_path`` selects the region source,
+        mirroring ``RegionServer.register_tenant``. With ``warm_path``, the
+        frontend reads the TDG JSON *and* the ``.aot`` sidecar bytes; the
+        sidecar ships in-band so the worker hydrates instead of
+        re-lowering. ``pinned`` buffers (e.g. model params) are grouped by
+        object identity and shipped at most once per worker; tenants
+        passing the same objects alias one decoded copy worker-side (so
+        the coalescer broadcasts them instead of stacking), and ``submit``
+        only carries the varying slots.
+        """
+        if (tdg is None) == (warm_path is None):
+            raise ValueError("pass exactly one of tdg= or warm_path=")
+        artifact = None
+        if warm_path is not None:
+            with open(warm_path) as f:
+                tdg_dict = json.load(f)
+            tdg = _serialize.tdg_from_dict(tdg_dict, self.local_registry)
+            aot_path = str(warm_path) + ".aot"
+            if os.path.exists(aot_path):
+                with open(aot_path, "rb") as f:
+                    artifact = f.read()
+        else:
+            tdg.validate()
+            tdg_dict = _serialize.tdg_to_dict(tdg, self.local_registry)
+        from ..kernels import registry as _kreg
+
+        mode = _kreg.resolved_mode(kernel_mode)
+        sig, _slot_map, payloads = structure_signature(
+            tdg, list(outputs) if outputs is not None else None)
+        route_key = (sig, tuple(self.local_registry.name_of(p)
+                                for p in payloads), mode)
+        record = _TenantRecord(name, tdg_dict,
+                               tuple(outputs) if outputs else None,
+                               mode, route_key)
+        record.artifact = artifact
+        if pinned is not None:
+            record.pin_key = self._pin_group_for(dict(pinned))
+        with self._lock:
+            if name in self._tenants:
+                raise ValueError(f"tenant {name!r} already registered")
+            self._tenants[name] = record
+        try:
+            widx = self.router.route(route_key, self._alive())
+            self._register_on(widx, record)
+        except Exception:
+            # Leave no phantom behind: a failed registration must be
+            # retryable under the same name after the caller fixes it.
+            with self._lock:
+                self._tenants.pop(name, None)
+            raise
+        return record
+
+    def _pin_group_for(self, pinned: dict) -> str:
+        """The identity-keyed pin group for this buffer set (created once).
+
+        Two tenants registering with the *same objects* (e.g. one params
+        pytree) resolve to the same group, so the data crosses the wire
+        once per worker and every tenant aliases one decoded copy there.
+        The group dict pins strong refs, which keeps the ``id()`` key sound.
+        """
+        ident = tuple(sorted((k, id(v)) for k, v in pinned.items()))
+        with self._lock:
+            key = self._pin_ids.get(ident)
+            if key is None:
+                key = f"pin{len(self._pin_ids)}"
+                self._pin_ids[ident] = key
+                self._pin_data[key] = pinned
+            return key
+
+    def _register_on(self, widx: int, record: _TenantRecord) -> dict:
+        msg = {"op": "register", "tenant": record.name,
+               "tdg": record.tdg_dict,
+               "outputs": list(record.outputs) if record.outputs else None,
+               "kernel_mode": record.kernel_mode,
+               "pin_key": record.pin_key}
+        ship_pin = False
+        if record.pin_key is not None:
+            with self._lock:
+                ship_pin = (widx, record.pin_key) not in self._shipped_pins
+            if ship_pin:
+                msg["pinned"] = self._pin_data[record.pin_key]
+        if self.ship_artifacts and record.artifact is not None:
+            msg["artifact"] = record.artifact
+        reply = self._handles[widx].request(msg)
+        record.worker = widx
+        with self._lock:
+            if ship_pin:
+                self._shipped_pins.add((widx, record.pin_key))
+                self.pin_groups_shipped += 1
+            if msg.get("artifact") is not None:
+                self.artifacts_shipped += 1
+                self.artifact_bytes_shipped += len(record.artifact)
+        return reply
+
+    def tenant(self, name: str) -> _TenantRecord:
+        with self._lock:
+            if name not in self._tenants:
+                raise KeyError(f"unknown tenant {name!r}; registered: "
+                               f"{sorted(self._tenants)}")
+            return self._tenants[name]
+
+    def warmup(self, name: str, buffers: Mapping[str, Any],
+               timeout: float | None = 600.0) -> dict:
+        """AOT-compile ``name`` on its worker; hold the artifact for shipping.
+
+        The worker returns the compiled executable as bytes; the frontend
+        keeps them on the tenant record so a *future* worker (failover
+        sibling, or a scale-out registration) hydrates instead of paying
+        trace+compile again. Returns the worker's compile report.
+        """
+        record = self.tenant(name)
+        widx = self._worker_for(record)
+        reply = self._handles[widx].request(
+            {"op": "warmup", "tenant": name, "buffers": dict(buffers)},
+            timeout=timeout)
+        if reply.get("artifact") is not None:
+            record.artifact = reply["artifact"]
+        return reply["report"]
+
+    # ------------------------------------------------------------ admission
+    def _worker_for(self, record: _TenantRecord) -> int:
+        """The tenant's current worker, failing over if it died."""
+        widx = record.worker
+        if widx is not None and self._handles[widx].alive:
+            return widx
+        return self._failover(record, exclude={widx} if widx is not None
+                              else set())
+
+    def _failover(self, record: _TenantRecord, exclude: set[int]) -> int:
+        """Re-route ``record`` to a live sibling and re-register it there.
+
+        Counted as a ``requeue`` whether the death was noticed before the
+        send (stale ``record.worker``) or mid-flight (a failed future):
+        either way this tenant's work just moved to a sibling.
+        """
+        widx = self.router.reroute(record.route_key, self._alive(), exclude)
+        with self._lock:
+            self.requeues += 1
+        self._register_on(widx, record)
+        return widx
+
+    def submit(self, tenant_name: str, buffers: Mapping[str, Any]) -> Future:
+        """RPC front on ``RegionServer.submit``: returns a Future of the
+        output buffer dict. A worker death mid-flight requeues the request
+        to a sibling (once) before surfacing the failure."""
+        record = self.tenant(tenant_name)
+        with self._lock:
+            if self._closed:
+                raise RuntimeError(f"frontend {self.name!r} is closed")
+            record.requests += 1
+        outer: Future = Future()
+        self._submit_attempt(record, dict(buffers), outer, retries=1)
+        return outer
+
+    def _submit_attempt(self, record: _TenantRecord, buffers: dict,
+                        outer: Future, retries: int) -> None:
+        try:
+            widx = self._worker_for(record)
+            inner = self._handles[widx].request_async(
+                {"op": "submit", "tenant": record.name, "buffers": buffers})
+        except WorkerDied as exc:
+            self._retry_or_fail(record, buffers, outer, retries, exc,
+                                {record.worker} if record.worker is not None
+                                else set())
+            return
+        except Exception as exc:
+            outer.set_exception(exc)
+            return
+
+        def _done(f: Future) -> None:
+            exc = f.exception()
+            if isinstance(exc, WorkerDied):
+                self._retry_or_fail(record, buffers, outer, retries, exc,
+                                    {widx})
+            elif exc is not None:
+                outer.set_exception(exc)
+            else:
+                outer.set_result(f.result()["out"])
+        inner.add_done_callback(_done)
+
+    def _retry_or_fail(self, record: _TenantRecord, buffers: dict,
+                       outer: Future, retries: int, exc: Exception,
+                       exclude: set[int]) -> None:
+        if retries <= 0:
+            outer.set_exception(exc)
+            return
+        try:
+            self._failover(record, exclude=exclude)
+        except Exception as fail_exc:
+            outer.set_exception(fail_exc)
+            return
+        self._submit_attempt(record, buffers, outer, retries - 1)
+
+    def serve(self, tenant_name: str, buffers: Mapping[str, Any],
+              timeout: float | None = 120.0) -> dict:
+        """Synchronous :meth:`submit`."""
+        return self.submit(tenant_name, buffers).result(timeout=timeout)
+
+    # -------------------------------------------------------------- metrics
+    def health(self) -> list[dict]:
+        """Ping every worker; one row per worker (alive, pid, queue depth)."""
+        rows = []
+        for h in self._handles:
+            row = {"worker": h.idx, "alive": h.alive,
+                   "process_alive": h.process.is_alive()}
+            if h.alive:
+                try:
+                    reply = h.request({"op": "ping"}, timeout=30.0)
+                    row.update(pid=reply["pid"], port=reply["port"])
+                except Exception:
+                    row["alive"] = False
+            rows.append(row)
+        return rows
+
+    def stats(self) -> dict:
+        """Frontend counters + per-worker server stats + cross-worker sums.
+
+        The ``aggregate`` block sums every worker's serving metrics — the
+        fields ``docs/serving.md`` glossaries, including
+        ``aot_hydrate_failures``, so a worker that silently fell back to
+        lazy lowering is visible at the fleet level.
+        """
+        per_worker: dict[int, dict | None] = {}
+        for h in self._handles:
+            if not h.alive:
+                per_worker[h.idx] = None
+                continue
+            try:
+                per_worker[h.idx] = h.request({"op": "stats"},
+                                              timeout=60.0)["stats"]
+            except Exception:
+                per_worker[h.idx] = None
+        metric_keys = ("admitted", "completed", "failed", "batches",
+                       "coalesced_requests", "batch_fallbacks", "aot_served",
+                       "aot_hydrate_failures")
+        agg = {k: 0 for k in metric_keys}
+        pool = {"hits": 0, "misses": 0, "evictions": 0, "hydrations": 0,
+                "entries": 0}
+        intern = {"hits": 0, "misses": 0, "evictions": 0, "entries": 0}
+        hydrated_inband = 0
+        for s in per_worker.values():
+            if s is None:
+                continue
+            for k in metric_keys:
+                agg[k] += s["metrics"].get(k, 0)
+            for k in pool:
+                pool[k] += s["pool"].get(k, 0)
+            for k in intern:
+                intern[k] += s["intern"].get(k, 0)
+            hydrated_inband += s["worker"].get("hydrated_inband", 0)
+        with self._lock:
+            tenants = {r.name: {"worker": r.worker, "requests": r.requests,
+                                "has_artifact": r.artifact is not None}
+                       for r in self._tenants.values()}
+            frontend = {
+                "name": self.name,
+                "workers": self.n_workers,
+                "alive": len(self._alive()),
+                "worker_deaths": self.worker_deaths,
+                "requeues": self.requeues,
+                "artifacts_shipped": self.artifacts_shipped,
+                "artifact_bytes_shipped": self.artifact_bytes_shipped,
+                "pin_groups_shipped": self.pin_groups_shipped,
+                "ship_artifacts": self.ship_artifacts,
+            }
+        return {"frontend": frontend, "tenants": tenants,
+                "aggregate": {**agg, "pool": pool, "intern": intern,
+                              "hydrated_inband": hydrated_inband},
+                "workers": per_worker}

@@ -84,6 +84,7 @@ class ServerMetrics:
         self.coalesced_requests = 0   # requests served by a fused batch >= 2
         self.batch_fallbacks = 0      # batched replay failed -> serial path
         self.aot_served = 0           # requests served by a hydrated .aot
+        self.aot_hydrate_failures = 0  # sidecar present but unusable -> lazy
         self.occupancy_sum = 0
         self.occupancy_max = 0
         self.queue_depth_peak = 0
@@ -128,6 +129,19 @@ class ServerMetrics:
         with self._lock:
             self.batch_fallbacks += 1
 
+    def on_aot_hydrate_failure(self) -> None:
+        """A warm artifact existed but could not be hydrated.
+
+        ``serialize.load_warm`` (and the in-band artifact path of the
+        cluster tier) soft-fall back to the lazily traced replay path by
+        design — but a worker that *expected* to be warm and is silently
+        re-lowering is exactly the detrimental pattern the metrics exist to
+        surface. Count it here so aggregated stats never report a cold
+        fallback as warm.
+        """
+        with self._lock:
+            self.aot_hydrate_failures += 1
+
     # -- reporting ---------------------------------------------------------
     def snapshot(self) -> dict:
         with self._lock:
@@ -141,6 +155,7 @@ class ServerMetrics:
                 "coalesced_requests": self.coalesced_requests,
                 "batch_fallbacks": self.batch_fallbacks,
                 "aot_served": self.aot_served,
+                "aot_hydrate_failures": self.aot_hydrate_failures,
                 "batch_occupancy_mean": round(mean_occ, 3),
                 "batch_occupancy_max": self.occupancy_max,
                 "queue_depth_peak": self.queue_depth_peak,

@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import os
 import threading
 import time
 from concurrent.futures import Future
@@ -217,10 +218,12 @@ class RegionServer:
         if (tdg is None) == (warm_path is None):
             raise ValueError("pass exactly one of tdg= or warm_path=")
         aot = None
+        sidecar_present = False
         if warm_path is not None:
             if fn_registry is None:
                 raise ValueError("warm_path= requires fn_registry= to "
                                  "re-link task payloads")
+            sidecar_present = os.path.exists(str(warm_path) + ".aot")
             tdg, aot = _serialize.load_warm(warm_path, fn_registry)
         tdg.validate()
         mode = _kreg.resolved_mode(kernel_mode)
@@ -237,6 +240,13 @@ class RegionServer:
             self._tenants[name] = tenant
         if aot is not None:
             self._install_aot(tenant, aot, hydrated=True)
+        elif sidecar_present:
+            # The sidecar was on disk but load_warm soft-fell back (corrupt,
+            # truncated, platform/version mismatch, or a jax build without
+            # executable serialization). The tenant still works — lazily
+            # traced — but it is NOT warm, and pretending otherwise is how
+            # cold-start regressions hide. Make the fallback loud in metrics.
+            self.metrics.on_aot_hydrate_failure()
         return tenant
 
     def tenant(self, name: str) -> Tenant:
@@ -264,6 +274,18 @@ class RegionServer:
                 "cost_analysis": aot.cost_analysis,
                 "trace_seconds": aot.trace_seconds,
                 "compile_seconds": aot.compile_seconds}
+
+    def install_aot(self, name: str, aot: "_lower.AotExecutable",
+                    hydrated: bool = False) -> None:
+        """Install an externally produced AOT executable for tenant ``name``.
+
+        This is how the cluster tier's :class:`~repro.serving.cluster.
+        WorkerNode` plants an executable hydrated from *shipped* artifact
+        bytes (``serialize.executable_from_bytes``) — the worker never
+        re-lowers what the frontend already compiled. ``hydrated=True``
+        counts it in the pool's hydration counter.
+        """
+        self._install_aot(self.tenant(name), aot, hydrated=hydrated)
 
     def _install_aot(self, tenant: Tenant, aot: "_lower.AotExecutable",
                      hydrated: bool = False) -> None:
@@ -421,6 +443,7 @@ class RegionServer:
                 aot = _serialize.load_executable(str(tenant.warm_path) + ".aot")
             except Exception:
                 tenant.aot_key = None       # unrecoverable: stop retrying
+                self.metrics.on_aot_hydrate_failure()
                 return None
             self._install_aot(tenant, aot, hydrated=True)
             return aot

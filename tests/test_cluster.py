@@ -1,0 +1,454 @@
+"""Cluster tier: RPC codec, sticky routing, artifact shipping, failover.
+
+Process-spawning tests share module-scoped frontends (spawning a jax worker
+costs seconds; the suites amortize it) and check every distributed answer
+against the in-process ``ReplayExecutor``/``RegionServer`` ground truth —
+the RPC front must never change WHAT is computed, only WHERE. Multi-worker
+soak lives behind the ``slow`` marker.
+"""
+import json
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ReplayExecutor, executable_serialization_available,
+                        warmup_and_save)
+from repro.serving import (ClusterFrontend, ClusterRemoteError, RegionServer,
+                           StickyRouter, rpc)
+from repro.serving.cluster import resolve_registry
+from repro.serving.demo import DEMO_REGISTRY, demo_affine, demo_mix, demo_region
+
+REGISTRY_SPEC = "repro.serving.demo:DEMO_REGISTRY"
+DIM = 6
+
+
+def _bufs(seed, width=2, shared_w=None):
+    rng = np.random.default_rng(seed)
+    b = {f"x{s}": jnp.asarray(rng.standard_normal((DIM, DIM)), jnp.float32)
+         for s in range(width)}
+    b["w"] = (shared_w if shared_w is not None
+              else jnp.asarray(rng.standard_normal((DIM, DIM)), jnp.float32))
+    return b
+
+
+def _check(out, tdg, bufs):
+    want = ReplayExecutor(tdg).run(dict(bufs))
+    assert set(out) == set(want)
+    for k in want:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(want[k]),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Wire codec (no processes)
+# ---------------------------------------------------------------------------
+
+class TestRpcCodec:
+    def _roundtrip(self, obj):
+        return rpc.decode(rpc.encode(obj))
+
+    def test_scalars_and_containers(self):
+        obj = {"op": "x", "id": 3, "none": None, "flag": True,
+               "f": 2.5, "s": "text", "tup": (1, 2), "lst": [1, [2, 3]],
+               ("k", 1): "tuple-key"}
+        back = self._roundtrip(obj)
+        assert back == obj
+        assert isinstance(back["tup"], tuple)
+        assert isinstance(back["lst"], list)
+
+    def test_array_dtypes_and_zero_d(self):
+        arrays = {
+            "f32": jnp.asarray(np.arange(6, dtype=np.float32).reshape(2, 3)),
+            "bf16": jnp.asarray([[1.5, -2.0]], jnp.bfloat16),
+            "i32_0d": jnp.asarray(7, jnp.int32),
+            "np_scalar": np.float32(1.25),
+            "bool_arr": np.array([True, False]),
+        }
+        back = self._roundtrip(arrays)
+        assert back["f32"].dtype == np.float32
+        np.testing.assert_array_equal(back["f32"], np.asarray(arrays["f32"]))
+        assert str(back["bf16"].dtype) == "bfloat16"
+        np.testing.assert_array_equal(
+            back["bf16"].astype(np.float32),
+            np.asarray(arrays["bf16"]).astype(np.float32))
+        assert back["i32_0d"].shape == () and int(back["i32_0d"]) == 7
+        assert back["np_scalar"].dtype == np.float32
+        assert float(back["np_scalar"]) == 1.25
+        np.testing.assert_array_equal(back["bool_arr"],
+                                      np.array([True, False]))
+
+    def test_nested_pytree_and_bytes(self):
+        obj = {"caches": [{"k": jnp.ones((2, 2)), "v": (jnp.zeros((1,)),)}],
+               "artifact": b"\x00\x01binary\xff"}
+        back = self._roundtrip(obj)
+        assert back["artifact"] == b"\x00\x01binary\xff"
+        np.testing.assert_array_equal(back["caches"][0]["k"], np.ones((2, 2)))
+        assert isinstance(back["caches"][0]["v"], tuple)
+
+    def test_decoded_arrays_are_writable(self):
+        back = self._roundtrip({"x": np.zeros((2,), np.float32)})
+        back["x"][0] = 1.0      # frombuffer views are read-only; copies aren't
+        assert back["x"][0] == 1.0
+
+    def test_unencodable_rejected(self):
+        with pytest.raises(TypeError, match="cannot encode"):
+            rpc.encode({"fn": lambda: None})
+
+    def test_truncated_frame_rejected(self):
+        data = rpc.encode({"a": jnp.ones((4,))})
+        with pytest.raises(rpc.ProtocolError):
+            rpc.decode(data[:8])
+
+
+class TestRegistryResolution:
+    def test_instance_passthrough(self):
+        assert resolve_registry(DEMO_REGISTRY) is DEMO_REGISTRY
+
+    def test_spec_string(self):
+        assert resolve_registry(REGISTRY_SPEC) is DEMO_REGISTRY
+
+    def test_bad_spec(self):
+        with pytest.raises(ValueError, match="module:attr"):
+            resolve_registry("not-a-spec")
+
+
+# ---------------------------------------------------------------------------
+# Routing (no processes)
+# ---------------------------------------------------------------------------
+
+class TestStickyRouter:
+    def test_sticky_by_key(self):
+        r = StickyRouter(4)
+        alive = {0, 1, 2, 3}
+        w = r.route("sigA", alive)
+        for _ in range(5):
+            assert r.route("sigA", alive) == w
+
+    def test_distinct_structures_spread_least_loaded(self):
+        r = StickyRouter(2)
+        alive = {0, 1}
+        workers = {r.route(f"sig{i}", alive) for i in range(2)}
+        assert workers == {0, 1}
+
+    def test_reroute_excludes_dead(self):
+        r = StickyRouter(3)
+        alive = {0, 1, 2}
+        w = r.route("sig", alive)
+        w2 = r.reroute("sig", alive - {w}, exclude={w})
+        assert w2 != w
+        assert r.route("sig", alive - {w}) == w2   # sticky on the new home
+
+    def test_no_live_workers(self):
+        r = StickyRouter(2)
+        with pytest.raises(Exception, match="no live workers"):
+            r.route("sig", set())
+
+
+# ---------------------------------------------------------------------------
+# Live cluster (module-scoped 2-worker frontend)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def frontend():
+    fe = ClusterFrontend(workers=2, registry=REGISTRY_SPEC, max_wait_ms=5.0,
+                         name="test-cluster")
+    yield fe
+    fe.close()
+
+
+@pytest.fixture(scope="module")
+def shared_w():
+    return jnp.asarray(np.random.default_rng(99).standard_normal((DIM, DIM)),
+                       jnp.float32)
+
+
+class TestClusterServing:
+    def test_parity_vs_inprocess_ground_truth(self, frontend, shared_w):
+        tenants = []
+        for i in range(4):
+            tdg = demo_region(f"par[{i}]")
+            frontend.register_tenant(f"par{i}", tdg, pinned={"w": shared_w})
+            tenants.append((tdg, _bufs(20 + i, shared_w=shared_w)))
+        futs = [frontend.submit(f"par{i}",
+                                {k: v for k, v in b.items() if k != "w"})
+                for i, (_, b) in enumerate(tenants)]
+        outs = [f.result(120) for f in futs]
+        for (tdg, b), out in zip(tenants, outs):
+            _check(out, tdg, b)
+
+    def test_sticky_routing_by_structure(self, frontend, shared_w):
+        # 3 tenants of one structure + 2 of another: each structure must
+        # land whole on exactly one worker (warm state never splits).
+        for i in range(3):
+            frontend.register_tenant(
+                f"stA{i}", demo_region(f"stA[{i}]", waves=3),
+                pinned={"w": shared_w})
+        for i in range(2):
+            frontend.register_tenant(
+                f"stB{i}", demo_region(f"stB[{i}]", waves=3,
+                                       body=demo_affine),
+                pinned={"w": shared_w})
+        a_workers = {frontend.tenant(f"stA{i}").worker for i in range(3)}
+        b_workers = {frontend.tenant(f"stB{i}").worker for i in range(2)}
+        assert len(a_workers) == 1
+        assert len(b_workers) == 1
+        # different payload symbol => different routing key; least-loaded
+        # assignment puts it on the other worker of the pair
+        assert a_workers != b_workers
+
+    def test_cross_process_coalescing(self, frontend, shared_w):
+        # Same-structure tenants routed to one worker still coalesce there:
+        # the fleet's coalesced_requests must rise when we fire concurrently.
+        before = frontend.stats()["aggregate"]["coalesced_requests"]
+        for i in range(3):
+            frontend.register_tenant(
+                f"co{i}", demo_region(f"co[{i}]", waves=4),
+                pinned={"w": shared_w})
+        bufs = [_bufs(40 + i, shared_w=shared_w) for i in range(3)]
+        for _ in range(3):      # several rounds: at least one coalesces
+            futs = [frontend.submit(
+                f"co{i}", {k: v for k, v in bufs[i].items() if k != "w"})
+                for i in range(3)]
+            [f.result(120) for f in futs]
+        after = frontend.stats()["aggregate"]["coalesced_requests"]
+        assert after > before
+
+    def test_request_error_is_isolated(self, frontend):
+        frontend.register_tenant("err", demo_region("err[0]"))
+        with pytest.raises(ClusterRemoteError, match="missing"):
+            frontend.serve("err", {"x0": jnp.ones((DIM, DIM))})  # no x1/w
+        # the worker survived the bad request
+        assert len(frontend._alive()) == 2
+        good = _bufs(50)
+        out = frontend.serve("err", good)
+        _check(out, demo_region("err[0]"), good)
+
+    def test_unknown_tenant(self, frontend):
+        with pytest.raises(KeyError, match="unknown tenant"):
+            frontend.serve("ghost", {})
+
+    def test_duplicate_tenant_rejected(self, frontend):
+        frontend.register_tenant("dup", demo_region("dup[0]"))
+        with pytest.raises(ValueError, match="already registered"):
+            frontend.register_tenant("dup", demo_region("dup[1]"))
+
+    def test_aggregate_sums_worker_metrics(self, frontend):
+        st = frontend.stats()
+        live = [s for s in st["workers"].values() if s is not None]
+        assert st["aggregate"]["admitted"] == sum(
+            s["metrics"]["admitted"] for s in live)
+        assert st["frontend"]["alive"] == 2
+        assert set(st["aggregate"]) >= {
+            "admitted", "completed", "failed", "coalesced_requests",
+            "aot_served", "aot_hydrate_failures", "pool", "intern"}
+
+    def test_pinned_group_ships_once_per_worker(self, frontend, shared_w):
+        # Every pinned registration in this module passes the SAME shared_w
+        # object, so there is exactly one pin group, shipped to at most one
+        # worker per distinct placement — never once per tenant.
+        st = frontend.stats()
+        pinned_workers = {r["worker"] for r in st["tenants"].values()}
+        assert 1 <= st["frontend"]["pin_groups_shipped"] <= len(pinned_workers)
+        for s in st["workers"].values():
+            if s is not None:
+                assert s["worker"]["pin_groups"] <= 1
+
+    def test_failed_registration_leaves_no_phantom(self, frontend,
+                                                   monkeypatch):
+        from repro.core import TDG
+
+        def unregistered_payload(x, w):
+            return x + w
+        bad = TDG("phantom[0]")
+        bad.add_task(unregistered_payload, ins=["x0", "w"], outs=["x0"])
+        # frontend-side failure (payload has no symbol in DEMO_REGISTRY):
+        # fails before any record exists
+        with pytest.raises(ValueError, match="not registered"):
+            frontend.register_tenant("phantom", bad)
+        # worker-side failure (registration RPC errors after the record is
+        # inserted): the record must be rolled back, not left as a phantom
+        # that blocks the retry
+        def boom(widx, record):
+            raise ClusterRemoteError("worker rejected registration")
+        monkeypatch.setattr(frontend, "_register_on", boom)
+        with pytest.raises(ClusterRemoteError, match="rejected"):
+            frontend.register_tenant("phantom", demo_region("phantom[0]"))
+        monkeypatch.undo()
+        frontend.register_tenant("phantom", demo_region("phantom[1]"))
+        good = _bufs(55)
+        _check(frontend.serve("phantom", good),
+               demo_region("phantom[1]"), good)
+
+    def test_health(self, frontend):
+        rows = frontend.health()
+        assert len(rows) == 2
+        assert all(r["alive"] and r["process_alive"] for r in rows)
+        assert all(isinstance(r["pid"], int) for r in rows)
+
+
+# ---------------------------------------------------------------------------
+# Warm-artifact shipping + poisoned artifacts (1-worker frontend)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(not executable_serialization_available(),
+                    reason="jax build cannot serialize executables")
+class TestArtifactShipping:
+    @pytest.fixture(scope="class")
+    def cold_frontend(self):
+        fe = ClusterFrontend(workers=1, registry=REGISTRY_SPEC,
+                             name="test-cold")
+        yield fe
+        fe.close()
+
+    @pytest.fixture(scope="class")
+    def warm_artifact(self, tmp_path_factory):
+        tdg = demo_region("warm[0]")
+        bufs = _bufs(60)
+        path = str(tmp_path_factory.mktemp("warm") / "region.json")
+        warmup_and_save(tdg, bufs, path, DEMO_REGISTRY)
+        return path, tdg, bufs
+
+    def test_cold_worker_hydrates_without_relowering(self, cold_frontend,
+                                                     warm_artifact):
+        path, tdg, bufs = warm_artifact
+        rec = cold_frontend.register_tenant("warm", warm_path=path)
+        assert rec.artifact is not None          # sidecar held for re-shipping
+        out = cold_frontend.serve("warm", bufs)
+        _check(out, tdg, bufs)
+        st = cold_frontend.stats()
+        wk = st["workers"][0]
+        assert st["aggregate"]["hydrated_inband"] == 1
+        assert st["aggregate"]["aot_served"] >= 1
+        # THE cold-start claim: the worker served from the shipped binary
+        # and never lowered anything itself.
+        assert wk["intern"]["misses"] == 0
+        assert st["aggregate"]["aot_hydrate_failures"] == 0
+
+    def test_poisoned_artifact_is_loud_but_survivable(self, cold_frontend,
+                                                      warm_artifact,
+                                                      tmp_path):
+        path, tdg, bufs = warm_artifact
+        poisoned = str(tmp_path / "poisoned.json")
+        with open(path) as f:
+            graph = f.read()
+        with open(poisoned, "w") as f:
+            f.write(graph)
+        with open(poisoned + ".aot", "wb") as f:
+            f.write(b"not an executable")
+        before = cold_frontend.stats()["aggregate"]["aot_hydrate_failures"]
+        cold_frontend.register_tenant("poison", warm_path=poisoned)
+        out = cold_frontend.serve("poison", bufs)   # lazy fallback still right
+        _check(out, tdg, bufs)
+        after = cold_frontend.stats()["aggregate"]["aot_hydrate_failures"]
+        assert after == before + 1
+
+
+class TestHydrateFailureMetricInProcess:
+    """The satellite bugfix: RegionServer itself must count silent fallbacks."""
+
+    def test_corrupt_sidecar_counts_hydrate_failure(self, tmp_path):
+        tdg = demo_region("hf[0]")
+        path = str(tmp_path / "hf.json")
+        from repro.core.serialize import save_tdg
+        save_tdg(tdg, path, DEMO_REGISTRY)
+        with open(path + ".aot", "wb") as f:
+            f.write(b"garbage bytes")
+        with RegionServer(max_batch=1) as server:
+            server.register_tenant("hf", warm_path=path,
+                                   fn_registry=DEMO_REGISTRY)
+            bufs = _bufs(70)
+            out = server.serve("hf", bufs)
+            _check(out, tdg, bufs)
+            assert server.metrics.snapshot()["aot_hydrate_failures"] == 1
+
+    def test_missing_sidecar_is_not_a_failure(self, tmp_path):
+        tdg = demo_region("nf[0]")
+        path = str(tmp_path / "nf.json")
+        from repro.core.serialize import save_tdg
+        save_tdg(tdg, path, DEMO_REGISTRY)   # graph only, no .aot at all
+        with RegionServer(max_batch=1) as server:
+            server.register_tenant("nf", warm_path=path,
+                                   fn_registry=DEMO_REGISTRY)
+            assert server.metrics.snapshot()["aot_hydrate_failures"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Worker death -> requeue (own 2-worker frontend: it kills one)
+# ---------------------------------------------------------------------------
+
+class TestWorkerDeathRequeue:
+    def test_kill_requeues_to_sibling_with_parity(self):
+        with ClusterFrontend(workers=2, registry=REGISTRY_SPEC,
+                             name="test-kill") as fe:
+            shared = jnp.asarray(
+                np.random.default_rng(7).standard_normal((DIM, DIM)),
+                jnp.float32)
+            tdg = demo_region("kill[0]")
+            fe.register_tenant("k", tdg, pinned={"w": shared})
+            bufs = {f"x{s}": jnp.asarray(
+                np.random.default_rng(8 + s).standard_normal((DIM, DIM)),
+                jnp.float32) for s in range(2)}
+            out_before = fe.serve("k", bufs)
+            _check(out_before, tdg, {**bufs, "w": shared})
+            victim = fe.tenant("k").worker
+            fe._handles[victim].process.terminate()
+            fe._handles[victim].process.join(timeout=30)
+            deadline = time.monotonic() + 30
+            while fe._handles[victim].alive and time.monotonic() < deadline:
+                time.sleep(0.05)     # reader notices EOF
+            out_after = fe.serve("k", bufs)
+            for key in out_before:
+                np.testing.assert_allclose(np.asarray(out_after[key]),
+                                           np.asarray(out_before[key]),
+                                           rtol=2e-5, atol=2e-5)
+            st = fe.stats()
+            assert fe.tenant("k").worker != victim
+            assert st["frontend"]["worker_deaths"] >= 1
+            assert st["frontend"]["requeues"] >= 1
+            assert st["frontend"]["alive"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Multi-worker soak (slow)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+class TestClusterSoak:
+    def test_four_workers_dependent_chains(self):
+        with ClusterFrontend(workers=4, registry=REGISTRY_SPEC,
+                             max_wait_ms=10.0, name="test-soak") as fe:
+            shared = jnp.asarray(
+                np.random.default_rng(1).standard_normal((DIM, DIM)),
+                jnp.float32)
+            tenants = []
+            for i in range(8):
+                tdg = demo_region(f"soak[{i}]", waves=2 + (i % 4))
+                fe.register_tenant(f"s{i}", tdg, pinned={"w": shared})
+                tenants.append((tdg, _bufs(100 + i, shared_w=shared)))
+            # dependent chains: each round feeds the next
+            state = [dict(b, w=shared) for _, b in tenants]
+            for _ in range(6):
+                futs = [fe.submit(f"s{i}", {k: v for k, v in state[i].items()
+                                            if k != "w"})
+                        for i in range(8)]
+                for i, f in enumerate(futs):
+                    state[i].update(f.result(300))
+                    state[i]["w"] = shared
+            # ground truth: replay the same chain in-process
+            for i, (tdg, b) in enumerate(tenants):
+                ex = ReplayExecutor(tdg)
+                ref = dict(b)
+                for _ in range(6):
+                    ref.update(ex.run(dict(ref)))
+                    ref["w"] = shared
+                for k in ("x0", "x1"):
+                    np.testing.assert_allclose(
+                        np.asarray(state[i][k]), np.asarray(ref[k]),
+                        rtol=2e-4, atol=2e-4)
+            st = fe.stats()
+            used = {r["worker"] for r in st["tenants"].values()}
+            assert len(used) == 4          # 4 structures spread over 4 workers
+            assert st["aggregate"]["failed"] == 0
