@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python -m benchmarks.cluster [--smoke] [--out PATH]
 
-Three questions about the cluster tier (``repro.serving.cluster``), each a
+Four questions about the cluster tier (``repro.serving.cluster``), each a
 phase of this benchmark:
 
 * **overhead** — what does the socket RPC front cost? The same tenants and
@@ -25,16 +25,27 @@ phase of this benchmark:
   fleet, so added workers add parallelism without ever splitting one
   structure's warm state across hosts.
 
+* **remote bootstrap** — the multi-host path, exercised over localhost
+  TCP: a worker is started as a *plain subprocess* running ``python -m
+  repro.serving.worker`` (no ``multiprocessing`` handle — exactly what an
+  ssh/k8s bootstrap would produce), the frontend attaches by
+  ``workers=["host:port"]`` with a handshake token, ships the warm
+  artifact, and must get in-process-identical results with the worker
+  fully warm (``hydrated_inband >= 1``, ``aot_served >= 1``, zero intern
+  misses) and the worker process reaped by ``frontend.close()``'s
+  shutdown RPC.
+
 The report lands in ``BENCH_cluster.json``; ``--smoke`` is the CI-sized
-variant wired into ``scripts/ci.sh --bench-smoke`` (parity + cold-start
-gates asserted; raw throughput reported but not gated — too noisy at smoke
-size).
+variant wired into ``scripts/ci.sh --bench-smoke`` (parity + cold-start +
+remote-bootstrap gates asserted; raw throughput reported but not gated —
+too noisy at smoke size).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import subprocess
 import tempfile
 import threading
 import time
@@ -250,28 +261,109 @@ def bench_scaling(worker_counts, n_tenants: int, n_structures: int,
     return rows
 
 
+def bench_remote_bootstrap(dim: int, waves: int, width: int,
+                           rounds: int) -> dict:
+    """Subprocess worker over localhost TCP: parity, warm ship, clean reap."""
+    import jax.numpy as jnp
+
+    from repro.core import ReplayExecutor, warmup_and_save
+    from repro.serving import ClusterFrontend
+    from repro.serving.demo import DEMO_REGISTRY, demo_region
+    from repro.serving.worker import spawn_worker_subprocess
+
+    rng = np.random.default_rng(2)
+    bufs = {f"x{k}": jnp.asarray(rng.standard_normal((dim, dim)), jnp.float32)
+            for k in range(width)}
+    bufs["w"] = jnp.asarray(rng.standard_normal((dim, dim)), jnp.float32)
+    tdg = demo_region("remote[0]", waves=waves, width=width)
+    tmp = tempfile.mkdtemp(prefix="bench_remote_")
+    warm_path = os.path.join(tmp, "remote.json")
+    warmup_and_save(tdg, bufs, warm_path, DEMO_REGISTRY)
+
+    token = "bench-remote-token"
+    t0 = time.perf_counter()
+    proc, addr = spawn_worker_subprocess(REGISTRY_SPEC, token=token)
+    bootstrap_s = time.perf_counter() - t0
+    reaped = False
+    try:
+        frontend = ClusterFrontend(workers=[addr], registry=REGISTRY_SPEC,
+                                   token=token, name="bench-remote")
+        try:
+            t0 = time.perf_counter()
+            frontend.register_tenant("remote", warm_path=warm_path)
+            out = frontend.serve("remote", bufs, timeout=600)
+            first_request_s = time.perf_counter() - t0
+            for _ in range(rounds - 1):
+                out = frontend.serve("remote", bufs, timeout=600)
+            stats = frontend.stats()
+        finally:
+            frontend.close()
+        t0 = time.perf_counter()
+        try:
+            proc.wait(timeout=30)
+            reaped = True
+        except subprocess.TimeoutExpired:
+            proc.kill()
+        reap_s = time.perf_counter() - t0
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+    want = ReplayExecutor(tdg).run(dict(bufs))
+    parity = 0.0
+    for k in want:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(want[k]),
+                                   rtol=2e-4, atol=2e-4)
+        parity = max(parity, float(np.abs(np.asarray(out[k])
+                                          - np.asarray(want[k])).max()))
+    worker = stats["workers"][0]
+    return {
+        "address": addr,
+        "bootstrap_s": bootstrap_s,
+        "warm_ship_first_request_s": first_request_s,
+        "requests": rounds,
+        "parity_max_abs_diff": parity,
+        "hydrated_inband": stats["aggregate"]["hydrated_inband"],
+        "aot_served": stats["aggregate"]["aot_served"],
+        "intern_misses": worker["intern"]["misses"],
+        "aot_hydrate_failures": stats["aggregate"]["aot_hydrate_failures"],
+        "aot_topology_rejects": stats["aggregate"]["aot_topology_rejects"],
+        "wire": stats["frontend"]["wire"],
+        "worker_reaped": reaped,
+        "reap_s": reap_s,
+    }
+
+
 def run(n_tenants: int = 8, rounds: int = 12, dim: int = 24, waves: int = 3,
         width: int = 4, n_structures: int = 4, worker_counts=(1, 2, 4),
         max_wait_ms: float = 25.0,
         out_path: str = "BENCH_cluster.json") -> dict:
-    print("# phase 1/3: RPC frontend overhead vs in-process", flush=True)
+    print("# phase 1/4: RPC frontend overhead vs in-process", flush=True)
     overhead = bench_overhead(n_tenants, rounds, dim, waves, width,
                               max_wait_ms)
     print(f"  inproc {overhead['inproc_throughput_rps']:.1f} req/s | rpc "
           f"{overhead['rpc_throughput_rps']:.1f} req/s | overhead "
           f"{overhead['rpc_overhead_ms_per_request']:.2f} ms/req", flush=True)
-    print("# phase 2/3: cold start — warm-artifact ship vs re-lower",
+    print("# phase 2/4: cold start — warm-artifact ship vs re-lower",
           flush=True)
     cold = bench_cold_start(dim, waves + 2, width)
     print(f"  ship {cold['warm_ship_first_request_s']*1e3:.0f} ms | re-lower "
           f"{cold['relower_first_request_s']*1e3:.0f} ms | "
           f"{cold['speedup_cold_start']:.2f}x "
           f"({cold['artifact_bytes']} artifact bytes)", flush=True)
-    print("# phase 3/3: worker scaling", flush=True)
+    print("# phase 3/4: worker scaling", flush=True)
     scaling = bench_scaling(worker_counts, n_tenants, n_structures, rounds,
                             dim, waves, width, max_wait_ms)
+    print("# phase 4/4: remote bootstrap (subprocess worker, localhost TCP)",
+          flush=True)
+    remote = bench_remote_bootstrap(dim, waves, width, rounds)
+    print(f"  bootstrap {remote['bootstrap_s']*1e3:.0f} ms | first request "
+          f"{remote['warm_ship_first_request_s']*1e3:.0f} ms | hydrated "
+          f"{remote['hydrated_inband']} | intern misses "
+          f"{remote['intern_misses']} | reaped {remote['worker_reaped']}",
+          flush=True)
     report = {"bench": "cluster", "dim": dim, "waves": waves, "width": width,
-              "overhead": overhead, "cold_start": cold, "scaling": scaling}
+              "overhead": overhead, "cold_start": cold, "scaling": scaling,
+              "remote_bootstrap": remote}
     if out_path:
         with open(out_path, "w") as f:
             json.dump(report, f, indent=1)
@@ -292,6 +384,16 @@ def _assert_gates(report: dict) -> None:
     assert cold["ship_intern_misses"] == 0, cold
     assert cold["relower_intern_misses"] >= 1, cold
     assert cold["aot_hydrate_failures"] == 0, cold
+    # The multi-host acceptance: a pre-started subprocess worker (no
+    # multiprocessing handle) serves with parity, fully warm from the
+    # shipped artifact, and is cleanly reaped by the shutdown RPC.
+    remote = report["remote_bootstrap"]
+    assert remote["parity_max_abs_diff"] < 1e-3, remote
+    assert remote["hydrated_inband"] >= 1, remote
+    assert remote["aot_served"] >= 1, remote
+    assert remote["intern_misses"] == 0, remote
+    assert remote["aot_hydrate_failures"] == 0, remote
+    assert remote["worker_reaped"], remote
 
 
 def main(argv=None) -> None:
@@ -308,7 +410,8 @@ def main(argv=None) -> None:
                      out_path=args.out)
         _assert_gates(report)
         print("# smoke ok: rpc parity + warm-ship beats re-lower + "
-              "hydrated worker never lowered")
+              "hydrated worker never lowered + remote bootstrap warm "
+              "and reaped")
     else:
         report = run(out_path=args.out)
         _assert_gates(report)

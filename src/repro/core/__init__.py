@@ -22,11 +22,12 @@ from .lower import (tdg_as_function, lower_tdg, aot_compile_tdg, AotExecutable,
                     intern_stats, clear_intern_cache, fuse_enabled)
 from .executor import EagerExecutor, ReplayExecutor, ExecStats
 from .record import taskgraph, TaskGraphRegion, GraphBuilder, registry, reset_registry
-from .serialize import (TaskFnRegistry, save_tdg, load_tdg, tdg_to_dict,
-                        tdg_from_dict, save_executable, load_executable,
-                        executable_to_bytes, executable_from_bytes,
-                        executable_serialization_available, warmup_and_save,
-                        load_warm)
+from .serialize import (TaskFnRegistry, TopologyMismatch, save_tdg, load_tdg,
+                        tdg_to_dict, tdg_from_dict, save_executable,
+                        load_executable, executable_to_bytes,
+                        executable_from_bytes,
+                        executable_serialization_available,
+                        topology_fingerprint, warmup_and_save, load_warm)
 
 __all__ = [
     "TDG", "Task", "Edge", "DepKind", "EdgeKind", "DependencyTable",
@@ -44,4 +45,5 @@ __all__ = [
     "save_executable", "load_executable",
     "executable_to_bytes", "executable_from_bytes",
     "executable_serialization_available", "warmup_and_save", "load_warm",
+    "TopologyMismatch", "topology_fingerprint",
 ]

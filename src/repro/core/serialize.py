@@ -130,6 +130,36 @@ def load_tdg(path, registry: TaskFnRegistry) -> TDG:
 # AOT executable persistence (opt-in warmup artifact)
 # ---------------------------------------------------------------------------
 
+class TopologyMismatch(RuntimeError):
+    """The artifact was compiled for a different device topology.
+
+    Raised by :func:`executable_from_bytes` BEFORE any XLA deserialization
+    is attempted, so a cross-platform artifact (e.g. a TPU binary shipped
+    to a CPU worker) fails with a clear, catchable error instead of
+    whatever the runtime's deserializer throws — callers (the cluster
+    tier's register path, ``load_warm``) count it and fall back to
+    re-lowering.
+    """
+
+
+def topology_fingerprint() -> dict:
+    """The device-topology identity a compiled executable is bound to.
+
+    A serialized XLA binary only loads on a matching runtime; this is the
+    cheap, comparable summary shipped inside every artifact
+    (:func:`executable_to_bytes`) and checked at hydrate time: platform
+    (cpu/gpu/tpu), device kind, visible device count, and the jax version
+    (serialized executables are not stable across jax releases).
+    """
+    devices = jax.devices()
+    return {
+        "platform": devices[0].platform,
+        "device_kind": devices[0].device_kind,
+        "device_count": len(devices),
+        "jax": jax.__version__,
+    }
+
+
 def _serialize_executable_module():
     try:
         from jax.experimental import serialize_executable as se
@@ -161,6 +191,7 @@ def executable_to_bytes(aot) -> bytes:
     payload, in_tree, out_tree = se.serialize(aot.compiled)
     blob = {
         "version": 1,
+        "topology": topology_fingerprint(),
         "payload": payload,
         "in_tree": in_tree,
         "out_tree": out_tree,
@@ -186,9 +217,12 @@ def executable_from_bytes(data: bytes):
 
     Returns an executable ready to call on a buffer dict with the shapes it
     was compiled for — no retracing, no recompilation. Raises on any
-    corruption/version/platform mismatch; soft-fallback policy belongs to
-    the callers (``load_warm``, the serving tiers), which must *count* the
-    failure rather than silently masquerading as warm.
+    corruption/version mismatch — and :class:`TopologyMismatch` when the
+    embedded device-topology fingerprint disagrees with this process
+    (checked BEFORE touching XLA's deserializer, so a cross-platform ship
+    is a clean rejection, not a runtime crash). Soft-fallback policy
+    belongs to the callers (``load_warm``, the serving tiers), which must
+    *count* the failure rather than silently masquerading as warm.
     """
     se = _serialize_executable_module()
     if se is None:
@@ -200,6 +234,13 @@ def executable_from_bytes(data: bytes):
     blob = pickle.loads(data)
     if blob.get("version") != 1:
         raise ValueError(f"unsupported executable version {blob.get('version')}")
+    shipped = blob.get("topology")
+    if shipped is not None:
+        here = topology_fingerprint()
+        if shipped != here:
+            raise TopologyMismatch(
+                f"artifact was compiled for {shipped} but this process runs "
+                f"{here}; re-lower instead of hydrating")
     compiled = se.deserialize_and_load(blob["payload"], blob["in_tree"],
                                        blob["out_tree"])
     specs = {k: jax.tree_util.tree_map(

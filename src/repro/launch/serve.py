@@ -30,6 +30,16 @@ Three modes:
 
       PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \\
           --cluster 2 --tenants 4 --gen 8
+
+  ``--workers host:port,...`` swaps the local spawner for **pre-started
+  remote workers** (bootstrap each host with ``python -m
+  repro.serving.worker --bind ... --registry
+  repro.launch.serve:build_decode_registry --registry-kwargs '{...}'``);
+  mix in the literal ``local`` to also spawn workers here. ``--token``
+  (default ``$REPRO_RPC_TOKEN``) must match the workers' handshake token.
+
+      PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \\
+          --workers 10.0.0.5:7077,local --tenants 4 --gen 8
 """
 from __future__ import annotations
 
@@ -203,13 +213,18 @@ def _run_cluster(args, cfg, params) -> int:
     jax.block_until_ready([s["tok"] for s in states])
     t_prefill = time.time() - t0
 
+    if args.workers:
+        workers = [w.strip() for w in args.workers.split(",") if w.strip()]
+    else:
+        workers = args.cluster or None
     t0 = time.time()
     frontend = ClusterFrontend(
-        workers=args.cluster or None,
+        workers=workers,
         registry="repro.launch.serve:build_decode_registry",
         registry_kwargs={"arch": args.arch, "smoke": args.smoke},
         max_batch=args.max_batch or args.tenants,
-        max_wait_ms=args.max_wait_ms, name="decode-cluster")
+        max_wait_ms=args.max_wait_ms, token=args.token,
+        name="decode-cluster")
     for i in range(args.tenants):
         tdg = TDG(f"decode[{i}]")
         tdg.add_task(decode, ins=["params", "tokens", "pos", "caches"],
@@ -253,8 +268,8 @@ def _run_cluster(args, cfg, params) -> int:
     toks = args.tenants * args.batch * (args.gen - 1)
     print(f"prefill: {t_prefill*1e3:.1f} ms for {args.tenants} tenants "
           f"x {args.batch}x{args.prompt_len}")
-    print(f"cluster: {fr['workers']} workers spawned+registered in "
-          f"{t_spawn*1e3:.0f} ms")
+    print(f"cluster: {fr['workers']} workers ({fr['remote_workers']} remote) "
+          f"ready+registered in {t_spawn*1e3:.0f} ms")
     print(f"decode:  {t_decode*1e3:.1f} ms for {args.gen-1} steps x "
           f"{args.tenants} tenants ({toks / max(t_decode, 1e-9):.1f} tok/s "
           f"over RPC)")
@@ -285,6 +300,15 @@ def main(argv=None):
     ap.add_argument("--cluster", type=int, default=None, nargs="?", const=0,
                     help="distributed mode: worker process count "
                          "(0/omitted value = REPRO_CLUSTER_WORKERS)")
+    ap.add_argument("--workers", default=None, metavar="SPEC,SPEC,...",
+                    help="distributed mode with explicit worker specs: "
+                         "comma-separated host:port of pre-started "
+                         "`python -m repro.serving.worker` nodes, plus the "
+                         "literal 'local' to also spawn here; implies "
+                         "--cluster")
+    ap.add_argument("--token", default=None,
+                    help="RPC handshake auth token for --cluster/--workers "
+                         "(default: $REPRO_RPC_TOKEN)")
     ap.add_argument("--tenants", type=int, default=4,
                     help="[--server/--cluster] concurrent decode tenants")
     ap.add_argument("--max-batch", type=int, default=0,
@@ -298,7 +322,7 @@ def main(argv=None):
         cfg = reduced(cfg)
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
 
-    if args.cluster is not None:
+    if args.cluster is not None or args.workers:
         return _run_cluster(args, cfg, params)
     if args.server:
         return _run_server(args, cfg, params)

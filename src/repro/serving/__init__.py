@@ -14,6 +14,8 @@ from .cluster import (ClusterError, ClusterFrontend, ClusterRemoteError,
 from .metrics import LatencyReservoir, ServerMetrics, percentile
 from .pool import PoolEntry, WarmPool
 from .server import RegionServer, Tenant
+from .spawner import (LocalSpawner, RemoteSpawner, SpawnedWorker, SpawnError,
+                      parse_worker_spec)
 
 __all__ = [
     "RegionServer", "Tenant",
@@ -21,4 +23,6 @@ __all__ = [
     "ServerMetrics", "LatencyReservoir", "percentile",
     "ClusterFrontend", "WorkerNode", "StickyRouter", "resolve_registry",
     "ClusterError", "ClusterRemoteError", "WorkerDied",
+    "LocalSpawner", "RemoteSpawner", "SpawnedWorker", "SpawnError",
+    "parse_worker_spec",
 ]

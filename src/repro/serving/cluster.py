@@ -15,10 +15,15 @@ execution**. Three pieces:
   instead of re-lowering, and serves ``submit`` asynchronously so requests
   arriving over one connection still coalesce in its admission queue.
 
-* :class:`ClusterFrontend` — the client-facing tier. It spawns workers via
-  ``multiprocessing`` (spawn by default: a fresh jax per worker), routes
-  every tenant to a worker **sticky by structure**: the routing key is the
-  TDG's ``structure_signature`` + payload symbols, so structurally
+* :class:`ClusterFrontend` — the client-facing tier. Its fleet comes from
+  the spawners in :mod:`repro.serving.spawner`: ``workers=N`` spawns N
+  local processes via ``multiprocessing`` (spawn by default: a fresh jax
+  per worker), while ``workers=["host:port", "local", ...]`` mixes
+  pre-started **remote** workers (bootstrapped on their hosts with
+  ``python -m repro.serving.worker``) with locally spawned ones — both
+  kinds sit behind the same router, artifact shipping and death-requeue.
+  Every tenant routes to a worker **sticky by structure**: the routing key
+  is the TDG's ``structure_signature`` + payload symbols, so structurally
   identical tenants land on the same worker and that worker's
   ``WarmPool``/intern cache stays hot (N tenants, ONE executable, and
   cross-tenant request coalescing keeps working across the RPC boundary).
@@ -33,9 +38,14 @@ as bytes on the frontend; registration ships those bytes with the TDG so a
 cold worker *hydrates* instead of re-lowering — the cross-process replay
 story of ``serialize.warmup_and_save`` carried over the wire
 (``benchmarks/cluster.py`` gates that this beats re-lowering on cold
-start). A worker that receives artifact bytes it cannot hydrate serves the
-tenant lazily but reports ``aot_hydrate_failures`` in its metrics — a
-poisoned artifact is loud, never silently cold.
+start). Shipping is **platform-aware**: every artifact embeds a
+device-topology fingerprint (``serialize.topology_fingerprint``) and a
+worker checks it at register time, rejecting a cross-platform/cross-version
+artifact loudly (``aot_topology_rejects``) and re-lowering instead of
+crashing inside XLA deserialization. A worker that receives artifact bytes
+it cannot hydrate for any other reason serves the tenant lazily but reports
+``aot_hydrate_failures`` in its metrics — a poisoned artifact is loud,
+never silently cold.
 
 **Failure handling.** A worker death surfaces as a broken connection; the
 frontend fails that worker's in-flight futures, re-routes its tenants to
@@ -48,29 +58,34 @@ own routing/failover counters, so the cross-process view stays as
 observable as the in-process one (cf. arXiv:2406.03077).
 
 Env knobs: ``REPRO_CLUSTER_WORKERS`` (default worker count, used by
-``ClusterFrontend(workers=None)`` and ``launch/serve.py --cluster 0``) and
+``ClusterFrontend(workers=None)`` and ``launch/serve.py --cluster 0``),
 ``REPRO_SHIP_ARTIFACTS=0`` (kill switch: never ship compiled bytes; cold
-workers re-lower).
+workers re-lower), ``REPRO_RPC_TOKEN`` (default handshake auth token for
+frontend and workers) and ``REPRO_RPC_MAX_FRAME`` (wire frame cap, see
+:mod:`repro.serving.rpc`).
 """
 from __future__ import annotations
 
 import importlib
 import itertools
 import json
-import multiprocessing
 import os
+import secrets
 import socket
 import threading
 from concurrent.futures import Future
-from typing import Any, Callable, Mapping
+from typing import Any, Callable, Mapping, Sequence
 
 from ..core import serialize as _serialize
 from ..core.tdg import TDG, structure_signature
 from . import rpc
 from .server import RegionServer
+from .spawner import (LocalSpawner, RemoteSpawner, SpawnedWorker,
+                      parse_worker_spec)
 
 _WORKERS_ENV = "REPRO_CLUSTER_WORKERS"
 _SHIP_ENV = "REPRO_SHIP_ARTIFACTS"
+_TOKEN_ENV = "REPRO_RPC_TOKEN"
 
 
 class ClusterError(RuntimeError):
@@ -131,12 +146,23 @@ class WorkerNode:
     coalesce exactly as in-process callers would. Everything else
     (register/warmup/stats/ping/shutdown) is handled inline: rare, fast, or
     deliberately serializing (warmup).
+
+    Every accepted connection must open with the RPC handshake
+    (:func:`rpc.server_handshake`): protocol version pinned, ``token``
+    checked when set, and the ack advertises this worker's pid/port and
+    device-topology fingerprint. A connection that fails the handshake is
+    dropped before it can touch the server. Shipped artifacts whose
+    embedded fingerprint disagrees with this host are rejected at register
+    time (counted in ``aot_topology_rejects``; the tenant re-lowers).
     """
 
     def __init__(self, registry: "_serialize.TaskFnRegistry",
                  host: str = "127.0.0.1", port: int = 0,
+                 token: str | None = None, handshake_timeout: float = 30.0,
                  server: RegionServer | None = None, **server_kwargs):
         self.registry = registry
+        self.token = token
+        self.handshake_timeout = handshake_timeout
         self.server = server or RegionServer(
             name=f"worker-{os.getpid()}", **server_kwargs)
         self.listener = rpc.listener(host, port)
@@ -176,15 +202,40 @@ class WorkerNode:
                 t = threading.Thread(target=self._conn_loop, args=(conn,),
                                      name="worker-conn", daemon=True)
                 t.start()
+                # Prune finished threads so a network-exposed worker doesn't
+                # accumulate one entry per client for its whole lifetime.
+                self._conn_threads = [ct for ct in self._conn_threads
+                                      if ct.is_alive()]
                 self._conn_threads.append(t)
         finally:
             self.server.close()
 
     def _conn_loop(self, conn: rpc.RpcConnection) -> None:
+        try:
+            # A client gets handshake_timeout (absolute, trickle-proof) to
+            # say hello, and the hello frame is capped small: without
+            # both, a port scanner or hostile slow client could pin this
+            # thread + an attacker-sized allocation forever before the
+            # token is ever checked.
+            rpc.server_handshake(
+                conn, token=self.token, timeout=self.handshake_timeout,
+                info={"pid": os.getpid(), "port": self.port,
+                      "topology": _serialize.topology_fingerprint()})
+            conn.sock.settimeout(None)      # deadline left a timeout armed
+        except (rpc.ProtocolError, rpc.ConnectionClosed, OSError):
+            # Wrong token / protocol skew / handshake timeout / port
+            # scanner: the reject frame (when sendable) already told the
+            # peer why; drop the socket.
+            conn.close()
+            return
         while not self._stop.is_set():
             try:
                 msg = conn.recv()
-            except (rpc.ConnectionClosed, OSError):
+            except (rpc.ProtocolError, rpc.ConnectionClosed, OSError):
+                # ProtocolError included: once framing desyncs (oversized
+                # prefix, malformed node) nothing later on this socket can
+                # be trusted — drop the connection, keep the worker.
+                conn.close()
                 return
             try:
                 self._dispatch(conn, msg)
@@ -276,6 +327,13 @@ class WorkerNode:
                 self.server.install_aot(name, aot, hydrated=True)
                 self.hydrated_inband += 1
                 hydrated = True
+            except _serialize.TopologyMismatch as exc:
+                # The frontend shipped a binary compiled for different
+                # hardware or jax version — caught by the fingerprint
+                # check BEFORE XLA deserialization could crash the worker.
+                # Reject loudly, serve by re-lowering.
+                self.server.metrics.on_aot_topology_reject()
+                hydrate_error = f"{type(exc).__name__}: {exc}"
             except Exception as exc:
                 # Poisoned/unusable artifact: serve lazily, but LOUDLY —
                 # the metric is what keeps "fell back to re-lowering"
@@ -299,21 +357,10 @@ class WorkerNode:
         s = self.server.stats()
         s["worker"] = {"pid": os.getpid(), "port": self.port,
                        "hydrated_inband": self.hydrated_inband,
+                       "topology": _serialize.topology_fingerprint(),
                        "pin_groups": len(self._pin_groups),
                        "pinned_tenants": sorted(self._tenant_pin)}
         return s
-
-
-def _worker_main(port_conn, registry_spec, registry_kwargs,
-                 server_kwargs) -> None:
-    """Spawned-process entry point: build the node, report the port, serve."""
-    registry = resolve_registry(registry_spec, registry_kwargs)
-    node = WorkerNode(registry, **(server_kwargs or {}))
-    try:
-        port_conn.send(node.port)
-    finally:
-        port_conn.close()
-    node.serve_forever()
 
 
 # ---------------------------------------------------------------------------
@@ -392,13 +439,21 @@ class _TenantRecord:
 
 
 class _WorkerHandle:
-    """Frontend-side view of one worker: process + connection + reply demux."""
+    """Frontend-side view of one worker: connection + reply demux.
 
-    def __init__(self, idx: int, process, conn: rpc.RpcConnection,
+    ``process`` is the local ``multiprocessing.Process`` or ``None`` for a
+    remote worker attached by address — the shutdown path branches on it
+    (reap vs. best-effort RPC + connection close).
+    """
+
+    def __init__(self, idx: int, spawned: SpawnedWorker,
                  ids: "itertools.count", on_death: Callable[[int], None]):
         self.idx = idx
-        self.process = process
-        self.conn = conn
+        self.kind = spawned.kind
+        self.address = spawned.address
+        self.info = spawned.info
+        self.process = spawned.process
+        self.conn = spawned.conn
         self.alive = True
         self._ids = ids
         self._on_death = on_death
@@ -434,7 +489,11 @@ class _WorkerHandle:
         while True:
             try:
                 msg = self.conn.recv()
-            except (rpc.ConnectionClosed, OSError):
+            except (rpc.ProtocolError, rpc.ConnectionClosed, OSError):
+                # ProtocolError too: a desynced/oversized frame means this
+                # connection is unusable — fall through to _mark_dead() so
+                # pending futures fail fast and the router stops using it,
+                # instead of the reader dying with futures hung.
                 break
             fut = None
             with self._lock:
@@ -466,7 +525,7 @@ class _WorkerHandle:
 
 
 class ClusterFrontend:
-    """Central admission over a pool of ``WorkerNode`` processes.
+    """Central admission over a fleet of ``WorkerNode`` processes/hosts.
 
     Exposes the same surface as :class:`RegionServer` — ``register_tenant``
     / ``submit`` / ``serve`` / ``warmup`` / ``stats`` — but routes over RPC
@@ -477,48 +536,90 @@ class ClusterFrontend:
     Parameters
     ----------
     workers:
-        Worker process count (default: ``REPRO_CLUSTER_WORKERS`` or 2).
+        The fleet. An ``int`` spawns that many local worker processes
+        (default count: ``REPRO_CLUSTER_WORKERS`` or 2). A sequence of
+        specs mixes kinds: ``"host:port"`` attaches to a pre-started
+        remote worker (``python -m repro.serving.worker`` on that host),
+        the literal ``"local"`` spawns one here — e.g.
+        ``workers=["10.0.0.5:7077", "local"]``.
     registry:
-        ``"module:attr"`` spec resolved in frontend AND workers (see
-        :func:`resolve_registry`) — the payload symbol table.
+        The payload symbol table (see :func:`resolve_registry`). Must be an
+        importable ``"module:attr"`` string whenever the fleet includes a
+        locally *spawned* worker (the spec is what crosses the process
+        boundary); an all-remote fleet may pass a live ``TaskFnRegistry``,
+        since remote workers were bootstrapped with their own
+        ``--registry``.
     registry_kwargs:
         Kwargs for a factory-style registry spec.
+    token:
+        Handshake auth token, shared by the whole fleet (default:
+        ``$REPRO_RPC_TOKEN``). Remote workers must have been started with
+        the same token. When unset, locally *spawned* workers still get a
+        random per-frontend token (the frontend controls both ends, so
+        local listeners are never left open to other users on this host);
+        remote attaches then handshake with no token.
     ship_artifacts:
         Ship held compiled artifacts to workers at (re-)registration.
         Default: on, unless ``REPRO_SHIP_ARTIFACTS=0``.
     start_method:
-        ``multiprocessing`` start method; ``"spawn"`` (default) gives every
-        worker a fresh, fork-safety-free jax runtime.
+        ``multiprocessing`` start method for local workers; ``"spawn"``
+        (default) gives every worker a fresh, fork-safety-free jax runtime.
+    shutdown_grace:
+        Seconds :meth:`close` waits at each escalation step
+        (join → terminate → kill) before moving to the next.
     max_batch / max_wait_ms / pool_capacity / fuse:
-        Forwarded to every worker's ``RegionServer``.
+        Forwarded to every locally spawned worker's ``RegionServer``
+        (remote workers configure theirs at bootstrap).
     """
 
-    def __init__(self, workers: int | None = None, *,
+    def __init__(self, workers: int | Sequence[str] | None = None, *,
                  registry: Any, registry_kwargs: Mapping[str, Any] | None = None,
                  max_batch: int = 8, max_wait_ms: float = 2.0,
                  pool_capacity: int = 64, fuse: bool | str = "auto",
                  ship_artifacts: bool | None = None,
+                 token: str | None = None,
                  start_method: str = "spawn",
                  spawn_timeout: float = 120.0,
+                 shutdown_grace: float = 10.0,
                  name: str = "cluster-frontend"):
         if workers is None:
             workers = int(os.environ.get(_WORKERS_ENV, "2"))
-        if workers < 1:
-            raise ValueError(f"need at least one worker, got {workers}")
+        if isinstance(workers, int):
+            if workers < 1:
+                raise ValueError(f"need at least one worker, got {workers}")
+            specs: list[tuple[str, int] | None] = [None] * workers
+        else:
+            specs = [parse_worker_spec(s) for s in workers]
+            if not specs:
+                raise ValueError("need at least one worker spec")
+        n_local = sum(1 for s in specs if s is None)
         if ship_artifacts is None:
             ship_artifacts = os.environ.get(_SHIP_ENV, "1").strip().lower() \
                 not in ("0", "false", "off", "no")
-        if not isinstance(registry, str):
+        if n_local and not isinstance(registry, str):
             raise ValueError(
-                "registry must be an importable 'module:attr' string — "
-                "spawned workers cannot receive a live TaskFnRegistry")
+                "registry must be an importable 'module:attr' string when "
+                "the fleet spawns local workers — a live TaskFnRegistry "
+                "cannot cross the process boundary")
+        if token is None:
+            token = os.environ.get(_TOKEN_ENV) or None
+        # Locally SPAWNED workers are always authenticated: the frontend
+        # starts them, so when no token is configured it mints a private
+        # one rather than leaving a listener on this host open to any
+        # local user. Remote attaches use the configured token as-is
+        # (possibly None — the remote worker decides its own auth).
+        local_token = token if token is not None else secrets.token_hex(16)
         self.name = name
-        self.n_workers = workers
+        self.n_workers = len(specs)
+        self.n_remote = len(specs) - n_local
         self.ship_artifacts = ship_artifacts
-        self.registry_spec = registry
+        self.registry_spec = registry if isinstance(registry, str) else None
         self.registry_kwargs = dict(registry_kwargs or {})
         self.local_registry = resolve_registry(registry, registry_kwargs)
-        self.router = StickyRouter(workers)
+        self.router = StickyRouter(self.n_workers)
+        self.shutdown_grace = shutdown_grace
+        self._token = token
+        self._local_token = local_token
         self._server_kwargs = {"max_batch": max_batch,
                                "max_wait_ms": max_wait_ms,
                                "pool_capacity": pool_capacity, "fuse": fuse}
@@ -537,36 +638,44 @@ class ClusterFrontend:
         self.artifacts_shipped = 0
         self.artifact_bytes_shipped = 0
         self.pin_groups_shipped = 0
-        ctx = multiprocessing.get_context(start_method)
-        # Start every process before waiting on any port: worker cold start
-        # (fresh interpreter + jax import) is seconds each, and overlapping
-        # the spawns makes frontend startup cost ~one cold start, not N.
-        started = []
-        for idx in range(workers):
-            parent_conn, child_conn = ctx.Pipe()
-            proc = ctx.Process(
-                target=_worker_main,
-                args=(child_conn, self.registry_spec, self.registry_kwargs,
-                      self._server_kwargs),
-                name=f"{name}-worker-{idx}", daemon=True)
-            proc.start()
-            child_conn.close()
-            started.append((idx, proc, parent_conn))
-        self._handles = []
+        local_spawner = (LocalSpawner(self.registry_spec,
+                                      self.registry_kwargs,
+                                      self._server_kwargs, local_token,
+                                      start_method=start_method)
+                         if n_local else None)
+        remote_spawner = RemoteSpawner(token) if self.n_remote else None
+        # Launch every local process before waiting on any port: worker
+        # cold start (fresh interpreter + jax import) is seconds each, and
+        # overlapping the spawns makes frontend startup cost ~one cold
+        # start, not N. Remote workers are already up — attaching is just
+        # connect + handshake.
+        pendings: list[tuple | None] = []
+        for idx, spec in enumerate(specs):
+            pendings.append(local_spawner.launch(idx, f"{name}-worker-{idx}")
+                            if spec is None else None)
+        self._handles: list[_WorkerHandle] = []
         try:
-            for idx, proc, parent_conn in started:
-                if not parent_conn.poll(spawn_timeout):
-                    raise ClusterError(f"worker {idx} did not report its RPC "
-                                       f"port within {spawn_timeout}s")
-                port = parent_conn.recv()
-                parent_conn.close()
-                conn = rpc.connect("127.0.0.1", port, timeout=spawn_timeout)
-                self._handles.append(_WorkerHandle(idx, proc, conn, self._ids,
+            for idx, (spec, pending) in enumerate(zip(specs, pendings)):
+                if spec is None:
+                    spawned = local_spawner.connect(pending, spawn_timeout)
+                else:
+                    spawned = remote_spawner.attach(idx, spec[0], spec[1],
+                                                    spawn_timeout)
+                self._handles.append(_WorkerHandle(idx, spawned, self._ids,
                                                    self._note_death))
         except Exception:
-            for _idx, proc, _conn in started:
+            for h in self._handles:
+                h.close()
+            for pending in pendings:
+                if pending is None:
+                    continue
+                proc = pending[1]
                 if proc.is_alive():
                     proc.terminate()
+                    proc.join(timeout=shutdown_grace)
+                if proc.is_alive():
+                    proc.kill()
+                    proc.join(timeout=shutdown_grace)  # reap, don't zombie
             raise
 
     # ------------------------------------------------------------- lifecycle
@@ -577,7 +686,19 @@ class ClusterFrontend:
         self.close()
 
     def close(self) -> None:
-        """Shut down workers (best effort), close connections, join processes."""
+        """Shut down the fleet; local processes are *guaranteed* reaped.
+
+        Every worker gets a best-effort shutdown RPC and a connection
+        close. For a locally spawned worker that is where best-effort
+        ends: a process that ignores the RPC and survives
+        ``join(shutdown_grace)`` is escalated to ``terminate()`` (SIGTERM)
+        and then ``kill()`` (SIGKILL, unmaskable), and a survivor even of
+        that raises :class:`ClusterError` — a leaked jax worker holds
+        device memory and a port, so "probably exited" is not an
+        acceptable postcondition. Remote workers are not ours to reap: the
+        shutdown RPC + close is all the frontend can (and should) do;
+        their lifecycle belongs to whoever bootstrapped them.
+        """
         with self._lock:
             if self._closed:
                 return
@@ -589,11 +710,24 @@ class ClusterFrontend:
                 except Exception:       # dying worker: we're tearing down
                     pass
             h.close()
+        leaked = []
         for h in self._handles:
-            h.process.join(timeout=10.0)
+            if h.process is None:       # remote: RPC + close was the job
+                continue
+            h.process.join(timeout=self.shutdown_grace)
             if h.process.is_alive():
                 h.process.terminate()
-                h.process.join(timeout=10.0)
+                h.process.join(timeout=self.shutdown_grace)
+            if h.process.is_alive():
+                h.process.kill()
+                h.process.join(timeout=self.shutdown_grace)
+            if h.process.is_alive():
+                leaked.append(h)
+        if leaked:
+            raise ClusterError(
+                "leaked worker process(es) survived terminate+kill: "
+                + ", ".join(f"worker {h.idx} (pid {h.process.pid})"
+                            for h in leaked))
 
     def _note_death(self, idx: int) -> None:
         with self._lock:
@@ -812,11 +946,19 @@ class ClusterFrontend:
 
     # -------------------------------------------------------------- metrics
     def health(self) -> list[dict]:
-        """Ping every worker; one row per worker (alive, pid, queue depth)."""
+        """Ping every worker; one row per worker (alive, kind, pid, address).
+
+        ``process_alive`` is ``None`` for remote workers — the frontend has
+        no process handle there; liveness is the connection + ping.
+        ``topology`` is the fingerprint the worker advertised at handshake.
+        """
         rows = []
         for h in self._handles:
-            row = {"worker": h.idx, "alive": h.alive,
-                   "process_alive": h.process.is_alive()}
+            row = {"worker": h.idx, "alive": h.alive, "kind": h.kind,
+                   "address": f"{h.address[0]}:{h.address[1]}",
+                   "process_alive": (h.process.is_alive()
+                                     if h.process is not None else None),
+                   "topology": h.info.get("topology")}
             if h.alive:
                 try:
                     reply = h.request({"op": "ping"}, timeout=30.0)
@@ -846,7 +988,7 @@ class ClusterFrontend:
                 per_worker[h.idx] = None
         metric_keys = ("admitted", "completed", "failed", "batches",
                        "coalesced_requests", "batch_fallbacks", "aot_served",
-                       "aot_hydrate_failures")
+                       "aot_hydrate_failures", "aot_topology_rejects")
         agg = {k: 0 for k in metric_keys}
         pool = {"hits": 0, "misses": 0, "evictions": 0, "hydrations": 0,
                 "entries": 0}
@@ -862,6 +1004,19 @@ class ClusterFrontend:
             for k in intern:
                 intern[k] += s["intern"].get(k, 0)
             hydrated_inband += s["worker"].get("hydrated_inband", 0)
+        # Per-worker wire totals as observed from the frontend side of each
+        # connection: REAL byte counts in both directions (rpc.RpcConnection
+        # accounts frame sizes, not message counts), so artifact-shipping
+        # and request traffic are attributable per worker.
+        wire: dict[int, dict] = {}
+        wire_total = {"bytes_sent": 0, "bytes_received": 0,
+                      "messages_sent": 0, "messages_received": 0}
+        for h in self._handles:
+            w = h.conn.wire_stats()
+            wire[h.idx] = {**w, "kind": h.kind,
+                           "address": f"{h.address[0]}:{h.address[1]}"}
+            for k in wire_total:
+                wire_total[k] += w[k]
         with self._lock:
             tenants = {r.name: {"worker": r.worker, "requests": r.requests,
                                 "has_artifact": r.artifact is not None}
@@ -869,6 +1024,7 @@ class ClusterFrontend:
             frontend = {
                 "name": self.name,
                 "workers": self.n_workers,
+                "remote_workers": self.n_remote,
                 "alive": len(self._alive()),
                 "worker_deaths": self.worker_deaths,
                 "requeues": self.requeues,
@@ -876,8 +1032,9 @@ class ClusterFrontend:
                 "artifact_bytes_shipped": self.artifact_bytes_shipped,
                 "pin_groups_shipped": self.pin_groups_shipped,
                 "ship_artifacts": self.ship_artifacts,
+                "wire": wire_total,
             }
         return {"frontend": frontend, "tenants": tenants,
                 "aggregate": {**agg, "pool": pool, "intern": intern,
                               "hydrated_inband": hydrated_inband},
-                "workers": per_worker}
+                "workers": per_worker, "wire": wire}

@@ -85,6 +85,7 @@ class ServerMetrics:
         self.batch_fallbacks = 0      # batched replay failed -> serial path
         self.aot_served = 0           # requests served by a hydrated .aot
         self.aot_hydrate_failures = 0  # sidecar present but unusable -> lazy
+        self.aot_topology_rejects = 0  # artifact for a different topology
         self.occupancy_sum = 0
         self.occupancy_max = 0
         self.queue_depth_peak = 0
@@ -142,6 +143,18 @@ class ServerMetrics:
         with self._lock:
             self.aot_hydrate_failures += 1
 
+    def on_aot_topology_reject(self) -> None:
+        """A shipped artifact was compiled for a different device topology.
+
+        Counted as a hydrate failure too (it IS one — the tenant re-lowers),
+        but kept separately distinguishable: a fleet-wide topology-reject
+        spike means someone is shipping artifacts across platforms or jax
+        versions, which is an operator error, not a corrupt file.
+        """
+        with self._lock:
+            self.aot_topology_rejects += 1
+            self.aot_hydrate_failures += 1
+
     # -- reporting ---------------------------------------------------------
     def snapshot(self) -> dict:
         with self._lock:
@@ -156,6 +169,7 @@ class ServerMetrics:
                 "batch_fallbacks": self.batch_fallbacks,
                 "aot_served": self.aot_served,
                 "aot_hydrate_failures": self.aot_hydrate_failures,
+                "aot_topology_rejects": self.aot_topology_rejects,
                 "batch_occupancy_mean": round(mean_occ, 3),
                 "batch_occupancy_max": self.occupancy_max,
                 "queue_depth_peak": self.queue_depth_peak,

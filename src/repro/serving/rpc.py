@@ -1,6 +1,6 @@
 """Length-prefixed socket RPC: the cluster tier's wire layer (stdlib only).
 
-The distributed frontend (:mod:`repro.serving.cluster`) needs exactly three
+The distributed frontend (:mod:`repro.serving.cluster`) needs exactly four
 things from a wire protocol, and nothing a heavyweight RPC stack would add:
 
 * **Framing** — one message per frame, length-prefixed (``struct``
@@ -17,7 +17,10 @@ things from a wire protocol, and nothing a heavyweight RPC stack would add:
   of ``ndarray.tobytes()``; ``bytes`` values pass through untouched — that
   is how ``.aot`` artifact payloads ship in-band), and :func:`decode`
   rebuilds it exactly: tuples stay tuples, dict keys keep their types,
-  arrays come back as numpy with the recorded dtype/shape.
+  arrays come back as numpy with the recorded dtype/shape. Every blob an
+  array node references is validated against ``dtype × shape`` before
+  ``frombuffer`` sees it — a disagreeing length is a :class:`ProtocolError`,
+  never a numpy traceback from half-parsed attacker-controlled bytes.
 
 * **Concurrent request/reply** — every message carries a caller-chosen
   ``id``; :class:`RpcConnection` serializes *writes* with a lock and lets a
@@ -25,17 +28,31 @@ things from a wire protocol, and nothing a heavyweight RPC stack would add:
   share one socket (which is what lets a worker's ``RegionServer`` coalesce
   requests that arrived over the same connection).
 
+* **A handshake** — the first exchange on a fresh connection
+  (:func:`client_handshake` / :func:`server_handshake`) pins the protocol
+  version and, when the listener was started with a token, authenticates
+  the peer. Remote workers (``python -m repro.serving.worker``) accept TCP
+  connections from anywhere they are bound; the token is what keeps a
+  stray client from registering tenants or submitting work. Auth failures
+  surface as :class:`AuthError` on both sides.
+
 Array payloads are decoded to **numpy** (zero-copy ``frombuffer`` + reshape,
 then a writable copy): the consumer is always about to hand them to jax,
 which ingests numpy arrays (``bfloat16`` included, via ``ml_dtypes``'s numpy
 registration) without an extra conversion step here.
+
+The frame cap defaults to :data:`MAX_FRAME_BYTES` (8 GiB) and is
+configurable via ``REPRO_RPC_MAX_FRAME`` (bytes) so deployments can bound
+what a corrupt or hostile length prefix may allocate.
 """
 from __future__ import annotations
 
 import json
+import os
 import socket
 import struct
 import threading
+import time
 from typing import Any
 
 import numpy as np
@@ -43,11 +60,49 @@ import numpy as np
 _U32 = struct.Struct(">I")
 _U64 = struct.Struct(">Q")
 
-#: A frame larger than this is a protocol error, not a request — refuse it
-#: instead of trying to allocate whatever a corrupt length prefix asks for.
-#: The outer frame length is a u64 on the wire, so the cap (not the prefix
-#: format) is what bounds allocation.
+#: Default frame cap: a frame larger than this is a protocol error, not a
+#: request — refuse it instead of trying to allocate whatever a corrupt
+#: length prefix asks for. The outer frame length is a u64 on the wire, so
+#: the cap (not the prefix format) is what bounds allocation. Override per
+#: deployment with ``REPRO_RPC_MAX_FRAME`` (see :func:`max_frame_bytes`).
 MAX_FRAME_BYTES = 1 << 33
+
+_MAX_FRAME_ENV = "REPRO_RPC_MAX_FRAME"
+
+#: Version pinned by the connection handshake. Bump when frames stop being
+#: mutually intelligible; the handshake turns a skew into a loud
+#: :class:`ProtocolError` instead of a hang or a garbage decode.
+PROTOCOL_VERSION = 1
+
+#: Frame cap applied to the *hello* frame specifically: an unauthenticated
+#: peer gets 64 KiB to state its business, not the multi-GiB general cap —
+#: pre-auth allocation must not be attacker-sized.
+HELLO_MAX_BYTES = 1 << 16
+
+
+def max_frame_bytes() -> int:
+    """The effective frame cap: ``REPRO_RPC_MAX_FRAME`` or the default.
+
+    Read per call (cheap: one env lookup) so long-lived workers honour an
+    operator override without a restart dance in tests. An unparseable or
+    non-positive value is a configuration error and raises
+    :class:`ProtocolError` — silently falling back to 8 GiB would defeat
+    the point of bounding allocation, and ProtocolError (rather than a
+    bare ValueError) keeps the wire-path contract: reader loops treat it
+    as a fatal connection error and fail pending work fast instead of
+    dying silently.
+    """
+    raw = os.environ.get(_MAX_FRAME_ENV)
+    if raw is None or not raw.strip():
+        return MAX_FRAME_BYTES
+    try:
+        cap = int(raw)
+    except ValueError:
+        raise ProtocolError(
+            f"{_MAX_FRAME_ENV}={raw!r} is not an integer byte count") from None
+    if cap <= 0:
+        raise ProtocolError(f"{_MAX_FRAME_ENV}={raw!r} must be positive")
+    return cap
 
 
 class ConnectionClosed(ConnectionError):
@@ -56,6 +111,10 @@ class ConnectionClosed(ConnectionError):
 
 class ProtocolError(RuntimeError):
     """The bytes on the wire do not parse as a frame we wrote."""
+
+
+class AuthError(ProtocolError):
+    """The handshake failed authentication (missing or wrong token)."""
 
 
 # --------------------------------------------------------------------- codec
@@ -84,12 +143,19 @@ def _enc(obj: Any, blobs: list[bytes]) -> Any:
     raise TypeError(f"rpc codec cannot encode {type(obj).__name__}: {obj!r}")
 
 
+def _blob(blobs: list[bytes], idx: Any) -> bytes:
+    if not isinstance(idx, int) or not 0 <= idx < len(blobs):
+        raise ProtocolError(
+            f"blob index {idx!r} out of range (frame carries {len(blobs)})")
+    return blobs[idx]
+
+
 def _dec(node: Any, blobs: list[bytes]) -> Any:
     t = node["t"]
     if t == "p":
         return node["v"]
     if t == "b":
-        return blobs[node["i"]]
+        return _blob(blobs, node["i"])
     if t == "t":
         return tuple(_dec(x, blobs) for x in node["v"])
     if t == "l":
@@ -100,8 +166,21 @@ def _dec(node: Any, blobs: list[bytes]) -> Any:
         # np.dtype resolves "bfloat16" etc. because jax imports ml_dtypes,
         # which registers its extension dtypes with numpy.
         dtype = np.dtype(node["d"])
-        arr = np.frombuffer(blobs[node["i"]], dtype=dtype)
-        return arr.reshape(tuple(node["s"])).copy()
+        shape = node["s"]
+        if not isinstance(shape, list) or not all(
+                isinstance(d, int) and not isinstance(d, bool) and d >= 0
+                for d in shape):
+            raise ProtocolError(f"array node has invalid shape {shape!r}")
+        blob = _blob(blobs, node["i"])
+        want = dtype.itemsize
+        for d in shape:
+            want *= d
+        if len(blob) != want:
+            raise ProtocolError(
+                f"array blob of {len(blob)} bytes disagrees with "
+                f"dtype {dtype} x shape {tuple(shape)} ({want} bytes)")
+        arr = np.frombuffer(blob, dtype=dtype)
+        return arr.reshape(tuple(shape)).copy()
     raise ProtocolError(f"unknown codec node type {t!r}")
 
 
@@ -117,14 +196,24 @@ def encode(obj: Any) -> bytes:
 
 
 def decode(data: bytes) -> Any:
-    """Inverse of :func:`encode`."""
+    """Inverse of :func:`encode`.
+
+    Anything a peer could have actually put on the wire fails as
+    :class:`ProtocolError` — malformed JSON, missing node keys, bogus
+    dtypes — never as a raw ``KeyError``/``TypeError`` from half-parsed
+    bytes (the reader loops treat ``ProtocolError`` as a fatal connection
+    error; an unexpected exception type would kill them silently).
+    """
     if len(data) < _U32.size:
         raise ProtocolError("truncated frame: missing header length")
     (hlen,) = _U32.unpack_from(data, 0)
     off = _U32.size
     if off + hlen > len(data):
         raise ProtocolError("truncated frame: header overruns body")
-    header = json.loads(data[off:off + hlen].decode("utf-8"))
+    try:
+        header = json.loads(data[off:off + hlen].decode("utf-8"))
+    except (ValueError, UnicodeDecodeError) as exc:
+        raise ProtocolError(f"frame header is not valid JSON: {exc}") from exc
     off += hlen
     blobs: list[bytes] = []
     while off < len(data):
@@ -136,16 +225,36 @@ def decode(data: bytes) -> Any:
             raise ProtocolError("truncated frame: blob overruns body")
         blobs.append(data[off:off + blen])
         off += blen
-    return _dec(header, blobs)
+    try:
+        return _dec(header, blobs)
+    except ProtocolError:
+        raise
+    except (KeyError, TypeError, ValueError) as exc:
+        raise ProtocolError(
+            f"malformed codec node ({type(exc).__name__}: {exc})") from exc
 
 
 # ------------------------------------------------------------------- framing
 
-def _recv_exact(sock: socket.socket, n: int) -> bytes:
+def _recv_exact(sock: socket.socket, n: int,
+                deadline: float | None = None) -> bytes:
+    """Read exactly ``n`` bytes; ``deadline`` (``time.monotonic`` value) is
+    an ABSOLUTE bound across all chunks — a peer trickling one byte per
+    idle-timeout window cannot stretch it (each chunk's socket timeout is
+    the *remaining* budget)."""
     chunks: list[bytes] = []
     got = 0
     while got < n:
-        chunk = sock.recv(min(n - got, 1 << 20))
+        if deadline is not None:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise ProtocolError(f"deadline exceeded after {got}/{n} bytes")
+            sock.settimeout(remaining)
+        try:
+            chunk = sock.recv(min(n - got, 1 << 20))
+        except socket.timeout:
+            raise ProtocolError(
+                f"deadline exceeded after {got}/{n} bytes") from None
         if not chunk:
             raise ConnectionClosed("peer closed the connection")
         chunks.append(chunk)
@@ -156,18 +265,39 @@ def _recv_exact(sock: socket.socket, n: int) -> bytes:
 def send_msg(sock: socket.socket, obj: Any) -> int:
     """Encode + frame + send one message; returns bytes written."""
     body = encode(obj)
-    if len(body) > MAX_FRAME_BYTES:
-        raise ProtocolError(f"frame of {len(body)} bytes exceeds cap")
+    cap = max_frame_bytes()
+    if len(body) > cap:
+        raise ProtocolError(
+            f"frame of {len(body)} bytes exceeds the {cap}-byte cap "
+            f"(raise {_MAX_FRAME_ENV} if this payload is legitimate)")
     sock.sendall(_U64.pack(len(body)) + body)
     return _U64.size + len(body)
 
 
+def recv_msg_sized(sock: socket.socket, cap: int | None = None,
+                   deadline: float | None = None) -> tuple[Any, int]:
+    """Receive one framed message; returns ``(obj, wire_bytes_consumed)``.
+
+    The byte count is the real on-wire size (length prefix included), which
+    is what :class:`RpcConnection` accounts — blocks; raises
+    :class:`ConnectionClosed` on EOF and :class:`ProtocolError` on a frame
+    announcing more than ``cap`` (default :func:`max_frame_bytes`).
+    ``deadline`` bounds the whole receive absolutely (the pre-auth
+    handshake path passes both).
+    """
+    (n,) = _U64.unpack(_recv_exact(sock, _U64.size, deadline))
+    if cap is None:
+        cap = max_frame_bytes()
+    if n > cap:
+        raise ProtocolError(
+            f"peer announced a {n}-byte frame exceeding the {cap}-byte cap "
+            f"({_MAX_FRAME_ENV}); refusing")
+    return decode(_recv_exact(sock, n, deadline)), _U64.size + n
+
+
 def recv_msg(sock: socket.socket) -> Any:
     """Receive + decode one framed message (blocks; raises ConnectionClosed on EOF)."""
-    (n,) = _U64.unpack(_recv_exact(sock, _U64.size))
-    if n > MAX_FRAME_BYTES:
-        raise ProtocolError(f"peer announced a {n}-byte frame; refusing")
-    return decode(_recv_exact(sock, n))
+    return recv_msg_sized(sock)[0]
 
 
 class RpcConnection:
@@ -179,6 +309,12 @@ class RpcConnection:
     dedicated reader thread that matches replies to requests by ``id`` (the
     frontend pattern — see ``cluster._WorkerHandle``). Mixing both on one
     connection is a caller bug.
+
+    The connection accounts real wire traffic in both directions:
+    ``bytes_sent`` / ``bytes_received`` are on-wire byte totals (length
+    prefixes included) and ``messages_sent`` / ``messages_received`` count
+    frames — the per-worker wire totals ``ClusterFrontend.stats()``
+    surfaces.
     """
 
     def __init__(self, sock: socket.socket):
@@ -186,14 +322,19 @@ class RpcConnection:
         self._wlock = threading.Lock()
         self._bytes_sent = 0
         self._bytes_received = 0
+        self._messages_sent = 0
+        self._messages_received = 0
 
     def send(self, obj: Any) -> None:
         with self._wlock:
             self._bytes_sent += send_msg(self.sock, obj)
+            self._messages_sent += 1
 
-    def recv(self) -> Any:
-        msg = recv_msg(self.sock)
-        self._bytes_received += 1  # message count; sizes tracked on send side
+    def recv(self, cap: int | None = None,
+             deadline: float | None = None) -> Any:
+        msg, nbytes = recv_msg_sized(self.sock, cap=cap, deadline=deadline)
+        self._bytes_received += nbytes
+        self._messages_received += 1
         return msg
 
     def request(self, obj: Any) -> Any:
@@ -205,12 +346,101 @@ class RpcConnection:
     def bytes_sent(self) -> int:
         return self._bytes_sent
 
+    @property
+    def bytes_received(self) -> int:
+        return self._bytes_received
+
+    @property
+    def messages_sent(self) -> int:
+        return self._messages_sent
+
+    @property
+    def messages_received(self) -> int:
+        return self._messages_received
+
+    def wire_stats(self) -> dict:
+        """Snapshot of this connection's traffic totals (both directions)."""
+        return {"bytes_sent": self._bytes_sent,
+                "bytes_received": self._bytes_received,
+                "messages_sent": self._messages_sent,
+                "messages_received": self._messages_received}
+
     def close(self) -> None:
         try:
             self.sock.shutdown(socket.SHUT_RDWR)
         except OSError:
             pass
         self.sock.close()
+
+
+# ----------------------------------------------------------------- handshake
+
+def client_handshake(conn: RpcConnection, token: str | None = None,
+                     ) -> dict:
+    """Open a fresh connection: send ``hello``, validate the ``hello-ack``.
+
+    Must be the FIRST exchange on the connection (before any reader thread
+    starts). Returns the ack — which carries whatever the listener chose to
+    advertise (worker pid, port, device-topology fingerprint) — or raises
+    :class:`AuthError` / :class:`ProtocolError` with the server's reason.
+    """
+    conn.send({"op": "hello", "proto": PROTOCOL_VERSION, "token": token})
+    reply = conn.recv()
+    if not isinstance(reply, dict):
+        raise ProtocolError(f"handshake reply is not a message: {reply!r}")
+    if reply.get("op") == "error":
+        detail = reply.get("error", "handshake rejected")
+        if reply.get("code") == "auth":
+            raise AuthError(detail)
+        raise ProtocolError(detail)
+    if reply.get("op") != "hello-ack" or reply.get("proto") != PROTOCOL_VERSION:
+        raise ProtocolError(f"unexpected handshake reply: {reply!r}")
+    return reply
+
+
+def server_handshake(conn: RpcConnection, token: str | None = None,
+                     info: dict | None = None,
+                     timeout: float | None = None) -> dict:
+    """Validate the first frame of an accepted connection; ack or reject.
+
+    ``token=None`` disables auth (the local-spawn case, where the frontend
+    generated the token AND the worker — still checked for protocol
+    version). On any failure the peer gets an ``error`` frame (``code:
+    "auth"`` for token mismatches so the client can raise the right type)
+    before this side raises; the caller should then drop the connection.
+    ``info`` is advertised in the ack (pid, port, topology fingerprint).
+
+    The pre-auth surface is hardened: the hello frame is capped at
+    :data:`HELLO_MAX_BYTES` (an unauthenticated peer never gets a
+    multi-GiB allocation), ``timeout`` is an ABSOLUTE deadline across the
+    whole receive (a one-byte-per-idle-window trickler cannot stretch
+    it), and the token comparison is timing-safe.
+    """
+    import hmac
+
+    deadline = (time.monotonic() + timeout) if timeout is not None else None
+    msg = conn.recv(cap=HELLO_MAX_BYTES, deadline=deadline)
+
+    def _reject(code: str, detail: str) -> None:
+        try:
+            conn.send({"op": "error", "code": code, "error": detail})
+        except OSError:
+            pass
+        raise (AuthError if code == "auth" else ProtocolError)(detail)
+
+    if not isinstance(msg, dict) or msg.get("op") != "hello":
+        _reject("proto", "expected a hello frame to open the connection")
+    if msg.get("proto") != PROTOCOL_VERSION:
+        _reject("proto", f"protocol version mismatch: peer speaks "
+                f"{msg.get('proto')!r}, this side {PROTOCOL_VERSION}")
+    if token is not None:
+        peer = msg.get("token")
+        if not isinstance(peer, str) or not hmac.compare_digest(
+                peer.encode("utf-8"), token.encode("utf-8")):
+            _reject("auth", "bad or missing auth token")
+    conn.send({"op": "hello-ack", "proto": PROTOCOL_VERSION,
+               **(info or {})})
+    return msg
 
 
 def connect(host: str, port: int, timeout: float | None = None

@@ -1,0 +1,182 @@
+"""Worker spawners: how a ``ClusterFrontend`` obtains its worker fleet.
+
+PR 4's cluster tier could only ``multiprocessing``-spawn workers on the
+frontend's own host — a single-host demo. This module splits "where a
+worker comes from" out of the frontend behind two spawners with one
+contract, so local and remote workers are interchangeable behind the same
+``StickyRouter`` / artifact-shipping / death-requeue machinery:
+
+* :class:`LocalSpawner` — the PR 4 path, kept: fork/spawn a fresh process
+  on this host running ``WorkerNode`` (fresh jax runtime per worker), learn
+  its ephemeral RPC port over a pipe, connect.
+* :class:`RemoteSpawner` — the multi-host path: *attach* to a pre-started
+  worker (``python -m repro.serving.worker --bind HOST:PORT ...``) by TCP
+  address. The frontend never owns the process — bootstrap is whatever the
+  host fleet uses (ssh, k8s, systemd); the wire protocol is the whole
+  contract.
+
+Both return a :class:`SpawnedWorker` whose connection has already completed
+the :func:`repro.serving.rpc.client_handshake` (protocol version pinned,
+token checked, worker identity + device-topology fingerprint captured), so
+the frontend talks to every worker identically after this point.
+
+Worker *specs* (the ``ClusterFrontend(workers=...)`` list form) are
+strings: ``"host:port"`` attaches remotely, the literal ``"local"`` spawns
+on this host — mixing both in one list is the expected shape for a
+frontend that keeps some capacity local while farming the rest out.
+"""
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing
+import re
+from typing import Any, Mapping
+
+from . import rpc
+
+#: ``host:port`` — hostname/IPv4 label followed by a port. (IPv6 literals
+#: would need brackets; the serving tier targets DNS names and IPv4.)
+_ADDR_RE = re.compile(r"^(?P<host>[A-Za-z0-9._-]+):(?P<port>\d{1,5})$")
+
+#: The spec string that means "spawn a worker process on this host".
+LOCAL_SPEC = "local"
+
+
+def parse_worker_spec(spec: Any) -> tuple[str, int] | None:
+    """Normalize one worker spec: ``None`` for local, ``(host, port)`` remote.
+
+    Accepts the literal ``"local"`` (case-insensitive) or ``"host:port"``.
+    Anything else — including a bare hostname with no port — is a
+    ``ValueError`` naming the offending spec, so a typo'd fleet list fails
+    at construction, not mid-registration.
+    """
+    if not isinstance(spec, str):
+        raise ValueError(f"worker spec must be a string, got {spec!r}")
+    if spec.strip().lower() == LOCAL_SPEC:
+        return None
+    m = _ADDR_RE.match(spec.strip())
+    if m is None:
+        raise ValueError(
+            f"worker spec {spec!r} is neither 'local' nor 'host:port'")
+    port = int(m.group("port"))
+    if not 0 < port < 65536:
+        raise ValueError(f"worker spec {spec!r} has an invalid port")
+    return m.group("host"), port
+
+
+@dataclasses.dataclass
+class SpawnedWorker:
+    """One ready worker: a handshaken connection plus provenance.
+
+    ``process`` is the ``multiprocessing.Process`` for local workers and
+    ``None`` for remote ones — the frontend's shutdown path keys off this
+    (a local worker is joined/terminated/killed and asserted reaped; a
+    remote worker gets a best-effort shutdown RPC and a connection close,
+    because its lifecycle belongs to whoever bootstrapped it).
+    """
+
+    idx: int
+    kind: str                      # "local" | "remote"
+    address: tuple[str, int]
+    conn: rpc.RpcConnection
+    process: Any = None
+    info: dict = dataclasses.field(default_factory=dict)   # handshake ack
+
+
+class SpawnError(RuntimeError):
+    """A worker could not be spawned/attached (port never reported, TCP
+    connect refused, handshake rejected)."""
+
+
+def _worker_main(port_conn, registry_spec, registry_kwargs, server_kwargs,
+                 token) -> None:
+    """Spawned-process entry point: build the node, report the port, serve."""
+    # Deferred import: this body runs in the child process; importing
+    # cluster at module scope here would cycle (cluster imports spawner).
+    from .cluster import WorkerNode, resolve_registry
+
+    registry = resolve_registry(registry_spec, registry_kwargs)
+    node = WorkerNode(registry, token=token, **(server_kwargs or {}))
+    try:
+        port_conn.send(node.port)
+    finally:
+        port_conn.close()
+    node.serve_forever()
+
+
+class LocalSpawner:
+    """Spawn ``WorkerNode`` processes on this host via ``multiprocessing``.
+
+    Two-phase on purpose: :meth:`launch` starts the process and returns
+    immediately so a frontend can overlap N cold starts (a fresh
+    interpreter + jax import is seconds each); :meth:`connect` then waits
+    for the reported port, TCP-connects and handshakes.
+    """
+
+    def __init__(self, registry_spec: str,
+                 registry_kwargs: Mapping[str, Any] | None,
+                 server_kwargs: Mapping[str, Any] | None,
+                 token: str | None, start_method: str = "spawn"):
+        self.registry_spec = registry_spec
+        self.registry_kwargs = dict(registry_kwargs or {})
+        self.server_kwargs = dict(server_kwargs or {})
+        self.token = token
+        self._ctx = multiprocessing.get_context(start_method)
+
+    def launch(self, idx: int, name: str) -> tuple:
+        parent_conn, child_conn = self._ctx.Pipe()
+        proc = self._ctx.Process(
+            target=_worker_main,
+            args=(child_conn, self.registry_spec, self.registry_kwargs,
+                  self.server_kwargs, self.token),
+            name=name, daemon=True)
+        proc.start()
+        child_conn.close()
+        return idx, proc, parent_conn
+
+    def connect(self, pending: tuple, timeout: float) -> SpawnedWorker:
+        idx, proc, parent_conn = pending
+        if not parent_conn.poll(timeout):
+            raise SpawnError(f"worker {idx} did not report its RPC port "
+                             f"within {timeout}s")
+        port = parent_conn.recv()
+        parent_conn.close()
+        conn = rpc.connect("127.0.0.1", port, timeout=timeout)
+        try:
+            info = rpc.client_handshake(conn, token=self.token)
+        except Exception:
+            conn.close()
+            raise
+        return SpawnedWorker(idx=idx, kind="local",
+                             address=("127.0.0.1", port), conn=conn,
+                             process=proc, info=info)
+
+
+class RemoteSpawner:
+    """Attach to pre-started workers (``python -m repro.serving.worker``).
+
+    No process handle, no bootstrap: the worker is already listening
+    wherever its host started it. Attachment is TCP connect + handshake;
+    the ack's ``topology`` field is the remote device fingerprint the
+    frontend surfaces in :meth:`ClusterFrontend.health`.
+    """
+
+    def __init__(self, token: str | None):
+        self.token = token
+
+    def attach(self, idx: int, host: str, port: int,
+               timeout: float) -> SpawnedWorker:
+        try:
+            conn = rpc.connect(host, port, timeout=timeout)
+        except OSError as exc:
+            raise SpawnError(
+                f"worker {idx}: cannot connect to {host}:{port} ({exc}) — "
+                "is `python -m repro.serving.worker` running there?"
+            ) from exc
+        try:
+            info = rpc.client_handshake(conn, token=self.token)
+        except Exception:
+            conn.close()
+            raise
+        return SpawnedWorker(idx=idx, kind="remote", address=(host, port),
+                             conn=conn, info=info)

@@ -3,23 +3,35 @@
 Process-spawning tests share module-scoped frontends (spawning a jax worker
 costs seconds; the suites amortize it) and check every distributed answer
 against the in-process ``ReplayExecutor``/``RegionServer`` ground truth —
-the RPC front must never change WHAT is computed, only WHERE. Multi-worker
-soak lives behind the ``slow`` marker.
+the RPC front must never change WHAT is computed, only WHERE. The remote
+bootstrap suite drives *subprocess* workers (``python -m
+repro.serving.worker`` over localhost TCP — no ``multiprocessing`` handle),
+which is exactly the multi-host attach path. Multi-worker soak lives behind
+the ``slow`` marker.
 """
 import json
 import os
+import pickle
+import shutil
+import socket
+import struct
+import threading
 import time
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (ReplayExecutor, executable_serialization_available,
-                        warmup_and_save)
+from repro.core import (ReplayExecutor, TopologyMismatch,
+                        executable_from_bytes,
+                        executable_serialization_available,
+                        topology_fingerprint, warmup_and_save)
 from repro.serving import (ClusterFrontend, ClusterRemoteError, RegionServer,
                            StickyRouter, rpc)
-from repro.serving.cluster import resolve_registry
+from repro.serving.cluster import WorkerNode, resolve_registry
 from repro.serving.demo import DEMO_REGISTRY, demo_affine, demo_mix, demo_region
+from repro.serving.spawner import parse_worker_spec
+from repro.serving.worker import spawn_worker_subprocess
 
 REGISTRY_SPEC = "repro.serving.demo:DEMO_REGISTRY"
 DIM = 6
@@ -101,6 +113,200 @@ class TestRpcCodec:
         data = rpc.encode({"a": jnp.ones((4,))})
         with pytest.raises(rpc.ProtocolError):
             rpc.decode(data[:8])
+
+
+def _frame(header_obj, blobs=()):
+    """Hand-roll a frame body (adversarial tests build invalid ones)."""
+    header = json.dumps(header_obj).encode("utf-8")
+    parts = [struct.pack(">I", len(header)), header]
+    for b in blobs:
+        parts.append(struct.pack(">Q", len(b)))
+        parts.append(b)
+    return b"".join(parts)
+
+
+class TestRpcFramingAdversarial:
+    """Bytes a peer could actually send must fail as ProtocolError — never
+    as a numpy/json traceback from half-parsed attacker-controlled data."""
+
+    def test_truncated_header_length(self):
+        with pytest.raises(rpc.ProtocolError, match="missing header"):
+            rpc.decode(b"\x00\x01")
+
+    def test_header_overruns_body(self):
+        with pytest.raises(rpc.ProtocolError, match="header overruns"):
+            rpc.decode(struct.pack(">I", 100) + b"{}")
+
+    def test_truncated_blob_length(self):
+        good = _frame({"t": "b", "i": 0}, [b"payload"])
+        with pytest.raises(rpc.ProtocolError, match="blob length"):
+            rpc.decode(good[:-len(b"payload") - 4])   # cut mid length prefix
+
+    def test_blob_overruns_body(self):
+        good = _frame({"t": "b", "i": 0}, [b"payload"])
+        with pytest.raises(rpc.ProtocolError, match="blob overruns"):
+            rpc.decode(good[:-3])
+
+    def test_blob_index_out_of_range(self):
+        with pytest.raises(rpc.ProtocolError, match="out of range"):
+            rpc.decode(_frame({"t": "b", "i": 7}, [b"x"]))
+
+    def test_array_blob_shape_mismatch(self):
+        # 3 bytes of data for a float32[4]: without validation this escapes
+        # as a numpy frombuffer/reshape error deep in the codec.
+        bad = _frame({"t": "a", "i": 0, "d": "float32", "s": [4]}, [b"abc"])
+        with pytest.raises(rpc.ProtocolError, match="disagrees"):
+            rpc.decode(bad)
+
+    def test_array_negative_dim(self):
+        # float32[-1] with 4 bytes would pass a naive size check (numpy
+        # infers -1) and reshape attacker-chosen geometry.
+        bad = _frame({"t": "a", "i": 0, "d": "float32", "s": [-1]},
+                     [b"\x00" * 4])
+        with pytest.raises(rpc.ProtocolError, match="invalid shape"):
+            rpc.decode(bad)
+
+    def test_unknown_node_type(self):
+        with pytest.raises(rpc.ProtocolError, match="unknown codec node"):
+            rpc.decode(_frame({"t": "zz", "v": 1}))
+
+    def test_non_list_shape_rejected(self):
+        bad = _frame({"t": "a", "i": 0, "d": "float32", "s": 1},
+                     [b"\x00" * 4])
+        with pytest.raises(rpc.ProtocolError, match="invalid shape"):
+            rpc.decode(bad)
+
+    def test_missing_node_keys_are_protocol_errors(self):
+        # A node without "t"/"d"/"i" must not escape as KeyError from deep
+        # inside the codec — the reader loops only treat ProtocolError (and
+        # socket errors) as fatal-but-handled.
+        with pytest.raises(rpc.ProtocolError, match="malformed codec"):
+            rpc.decode(_frame({"v": 1}))
+        with pytest.raises(rpc.ProtocolError, match="malformed codec"):
+            rpc.decode(_frame({"t": "a", "i": 0, "s": [1]}, [b"\x00" * 4]))
+
+    def test_bogus_dtype_is_protocol_error(self):
+        bad = _frame({"t": "a", "i": 0, "d": "no-such-dtype", "s": [1]},
+                     [b"\x00" * 4])
+        with pytest.raises(rpc.ProtocolError, match="malformed codec"):
+            rpc.decode(bad)
+
+    def test_non_json_header_is_protocol_error(self):
+        body = struct.pack(">I", 4) + b"\xff\xfe{{"
+        with pytest.raises(rpc.ProtocolError, match="not valid JSON"):
+            rpc.decode(body)
+
+    def test_protocol_error_mid_stream_fails_pending_futures(self):
+        # A desynced frame on a live frontend connection must mark the
+        # worker dead (failing in-flight futures fast), not kill the
+        # reader thread silently with futures hung.
+        import itertools
+
+        from repro.serving.cluster import _WorkerHandle
+        from repro.serving.spawner import SpawnedWorker
+
+        sa, sb = socket.socketpair()
+        handle = _WorkerHandle(
+            0, SpawnedWorker(idx=0, kind="remote", address=("x", 1),
+                             conn=rpc.RpcConnection(sa)),
+            itertools.count(1), lambda idx: None)
+        fut = handle.request_async({"op": "stats"})
+        rpc.recv_msg(sb)                          # consume the request
+        sb.sendall(struct.pack(">Q", rpc.max_frame_bytes() + 1))
+        with pytest.raises(Exception, match="died"):
+            fut.result(timeout=10)
+        assert not handle.alive
+        sb.close()
+        handle.close()
+
+    def test_oversized_length_prefix_refused(self):
+        a, b = socket.socketpair()
+        try:
+            a.sendall(struct.pack(">Q", rpc.max_frame_bytes() + 1))
+            with pytest.raises(rpc.ProtocolError, match="exceeding"):
+                rpc.recv_msg(b)
+        finally:
+            a.close()
+            b.close()
+
+    def test_max_frame_env_caps_both_directions(self, monkeypatch):
+        monkeypatch.setenv("REPRO_RPC_MAX_FRAME", "64")
+        assert rpc.max_frame_bytes() == 64
+        a, b = socket.socketpair()
+        try:
+            with pytest.raises(rpc.ProtocolError, match="exceeds"):
+                rpc.send_msg(a, {"x": np.zeros(100, np.float32)})
+            a.sendall(struct.pack(">Q", 65))
+            with pytest.raises(rpc.ProtocolError, match="exceeding"):
+                rpc.recv_msg(b)
+        finally:
+            a.close()
+            b.close()
+
+    def test_max_frame_env_invalid_is_loud(self, monkeypatch):
+        # ProtocolError, not bare ValueError: the cap is read on wire
+        # paths, and reader loops only treat ProtocolError as a handled
+        # fatal error (futures fail fast instead of threads dying silent).
+        monkeypatch.setenv("REPRO_RPC_MAX_FRAME", "not-a-number")
+        with pytest.raises(rpc.ProtocolError, match="REPRO_RPC_MAX_FRAME"):
+            rpc.max_frame_bytes()
+        monkeypatch.setenv("REPRO_RPC_MAX_FRAME", "-1")
+        with pytest.raises(rpc.ProtocolError, match="positive"):
+            rpc.max_frame_bytes()
+
+    def test_hello_frame_capped_preauth(self):
+        # An unauthenticated peer's first frame is bounded by
+        # HELLO_MAX_BYTES regardless of the (multi-GiB) general cap.
+        sa, sb = socket.socketpair()
+        a, b = rpc.RpcConnection(sa), rpc.RpcConnection(sb)
+        try:
+            a.send({"op": "hello", "proto": rpc.PROTOCOL_VERSION,
+                    "token": "x" * (rpc.HELLO_MAX_BYTES + 1)})
+            with pytest.raises(rpc.ProtocolError, match="exceeding"):
+                rpc.server_handshake(b, token="t")
+        finally:
+            a.close()
+            b.close()
+
+    def test_handshake_deadline_is_absolute(self):
+        # A trickler that sends nothing must be cut off by the deadline.
+        sa, sb = socket.socketpair()
+        b = rpc.RpcConnection(sb)
+        try:
+            t0 = time.monotonic()
+            with pytest.raises(rpc.ProtocolError, match="deadline"):
+                rpc.server_handshake(b, token="t", timeout=0.3)
+            assert time.monotonic() - t0 < 5.0
+        finally:
+            sa.close()
+            b.close()
+
+
+class TestRpcAccounting:
+    """The satellite bugfix: recv() must account real wire bytes, not
+    "1 per message", and both directions must be observable."""
+
+    def test_bytes_received_matches_peer_bytes_sent(self):
+        sa, sb = socket.socketpair()
+        a, b = rpc.RpcConnection(sa), rpc.RpcConnection(sb)
+        try:
+            payload = {"op": "x", "arr": np.arange(32, dtype=np.float32),
+                       "blob": b"\x00" * 100}
+            a.send(payload)
+            a.send({"op": "tiny"})
+            got1, got2 = b.recv(), b.recv()
+            assert got1["op"] == "x" and got2["op"] == "tiny"
+            assert a.messages_sent == 2
+            assert b.messages_received == 2
+            # REAL byte symmetry: everything a put on the wire, b counted.
+            assert a.bytes_sent == b.bytes_received
+            assert b.bytes_received > 128 + 100     # not a message count
+            assert b.wire_stats() == {
+                "bytes_sent": 0, "bytes_received": b.bytes_received,
+                "messages_sent": 0, "messages_received": 2}
+        finally:
+            a.close()
+            b.close()
 
 
 class TestRegistryResolution:
@@ -452,3 +658,314 @@ class TestClusterSoak:
             used = {r["worker"] for r in st["tenants"].values()}
             assert len(used) == 4          # 4 structures spread over 4 workers
             assert st["aggregate"]["failed"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Handshake + auth (in-process WorkerNode: no subprocess needed)
+# ---------------------------------------------------------------------------
+
+class TestHandshakeAndAuth:
+    @pytest.fixture()
+    def node(self):
+        node = WorkerNode(DEMO_REGISTRY, token="sekrit", max_batch=1)
+        t = threading.Thread(target=node.serve_forever, daemon=True)
+        t.start()
+        yield node
+        if not node._stop.is_set():
+            conn = rpc.connect("127.0.0.1", node.port)
+            rpc.client_handshake(conn, token="sekrit")
+            conn.request({"op": "shutdown", "id": 0})
+            conn.close()
+        t.join(timeout=10)
+
+    def test_good_token_handshake_advertises_identity(self, node):
+        conn = rpc.connect("127.0.0.1", node.port)
+        try:
+            ack = rpc.client_handshake(conn, token="sekrit")
+            assert ack["proto"] == rpc.PROTOCOL_VERSION
+            assert ack["pid"] == os.getpid()       # in-process node
+            assert ack["topology"] == topology_fingerprint()
+            reply = conn.request({"op": "ping", "id": 1})
+            assert reply["port"] == node.port
+        finally:
+            conn.close()
+
+    def test_bad_token_rejected(self, node):
+        conn = rpc.connect("127.0.0.1", node.port)
+        try:
+            with pytest.raises(rpc.AuthError, match="token"):
+                rpc.client_handshake(conn, token="wrong")
+        finally:
+            conn.close()
+
+    def test_missing_token_rejected(self, node):
+        conn = rpc.connect("127.0.0.1", node.port)
+        try:
+            with pytest.raises(rpc.AuthError):
+                rpc.client_handshake(conn, token=None)
+        finally:
+            conn.close()
+
+    def test_protocol_version_mismatch_rejected(self, node):
+        conn = rpc.connect("127.0.0.1", node.port)
+        try:
+            conn.send({"op": "hello", "proto": 99, "token": "sekrit"})
+            reply = conn.recv()
+            assert reply["op"] == "error" and reply["code"] == "proto"
+        finally:
+            conn.close()
+
+    def test_rejected_connection_cannot_dispatch(self, node):
+        # After a failed handshake the worker drops the socket: a follow-up
+        # op must never reach the dispatcher.
+        conn = rpc.connect("127.0.0.1", node.port)
+        try:
+            with pytest.raises(rpc.AuthError):
+                rpc.client_handshake(conn, token="wrong")
+            with pytest.raises((rpc.ConnectionClosed, OSError)):
+                conn.send({"op": "stats", "id": 2})
+                conn.recv()
+        finally:
+            conn.close()
+
+
+class TestWorkerSpecParsing:
+    def test_local_and_remote_specs(self):
+        assert parse_worker_spec("local") is None
+        assert parse_worker_spec(" LOCAL ") is None
+        assert parse_worker_spec("10.0.0.5:7077") == ("10.0.0.5", 7077)
+        assert parse_worker_spec("worker-3.fleet.internal:80") == \
+            ("worker-3.fleet.internal", 80)
+
+    @pytest.mark.parametrize("bad", ["justahost", ":1234x", "h:0", "h:99999",
+                                     "h:", 7077, None])
+    def test_bad_specs_fail_at_construction(self, bad):
+        with pytest.raises(ValueError, match="worker spec"):
+            parse_worker_spec(bad)
+
+
+# ---------------------------------------------------------------------------
+# Device-topology fingerprint (serialize layer)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(not executable_serialization_available(),
+                    reason="jax build cannot serialize executables")
+class TestTopologyFingerprint:
+    @pytest.fixture(scope="class")
+    def artifact_bytes(self, tmp_path_factory):
+        path = str(tmp_path_factory.mktemp("topo") / "t.json")
+        warmup_and_save(demo_region("topo[0]"), _bufs(80), path,
+                        DEMO_REGISTRY)
+        with open(path + ".aot", "rb") as f:
+            return f.read()
+
+    def test_fingerprint_embedded_and_matching_hydrates(self, artifact_bytes):
+        blob = pickle.loads(artifact_bytes)
+        assert blob["topology"] == topology_fingerprint()
+        assert executable_from_bytes(artifact_bytes) is not None
+
+    def test_mismatch_rejected_before_xla(self, artifact_bytes):
+        blob = pickle.loads(artifact_bytes)
+        blob["topology"] = dict(blob["topology"], platform="tpu",
+                                device_kind="TPU v4")
+        # Poison the XLA payload too: if the fingerprint check ran AFTER
+        # deserialization, this would crash inside XLA instead.
+        blob["payload"] = b"not an xla executable"
+        with pytest.raises(TopologyMismatch, match="re-lower"):
+            executable_from_bytes(pickle.dumps(blob))
+
+    def test_jax_version_skew_rejected(self, artifact_bytes):
+        blob = pickle.loads(artifact_bytes)
+        blob["topology"] = dict(blob["topology"], jax="0.0.1")
+        with pytest.raises(TopologyMismatch):
+            executable_from_bytes(pickle.dumps(blob))
+
+
+# ---------------------------------------------------------------------------
+# Remote bootstrap: subprocess workers over localhost TCP (the multi-host
+# attach path — the frontend holds NO process handle for these workers)
+# ---------------------------------------------------------------------------
+
+WORKER_TOKEN = "test-remote-token"
+
+
+@pytest.fixture(scope="module")
+def remote_workers():
+    """Two pre-started subprocess workers via the shared bootstrap helper
+    (`repro.serving.worker.spawn_worker_subprocess` — the same one
+    `benchmarks/cluster.py` uses, so the READY/argv contract has one home).
+    Spawning happens in threads so the two jax cold starts overlap."""
+    results: list = [None, None]
+
+    def boot(i):
+        results[i] = spawn_worker_subprocess(REGISTRY_SPEC,
+                                             token=WORKER_TOKEN)
+
+    threads = [threading.Thread(target=boot, args=(i,)) for i in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=180)
+    if any(r is None for r in results):
+        for r in results:
+            if r is not None:
+                r[0].kill()
+        pytest.fail("worker subprocess bootstrap timed out")
+    try:
+        yield results
+    finally:
+        for p, _addr in results:
+            if p.poll() is None:
+                p.kill()
+            p.wait(timeout=10)
+
+
+class TestRemoteBootstrap:
+    @pytest.fixture(scope="class")
+    def mixed_frontend(self, remote_workers):
+        # One pre-started remote worker + one locally spawned: both kinds
+        # behind the same router/shipping/requeue machinery.
+        (_, addr0), _ = remote_workers
+        fe = ClusterFrontend(workers=[addr0, "local"],
+                             registry=REGISTRY_SPEC, token=WORKER_TOKEN,
+                             max_wait_ms=5.0, name="test-remote-mixed")
+        yield fe
+        fe.close()
+
+    def test_parity_vs_inprocess_ground_truth(self, mixed_frontend, shared_w):
+        # The existing 2-worker parity contract, now with a remote worker
+        # in the fleet: WHAT is computed must not change with WHERE.
+        tenants = []
+        for i in range(4):
+            tdg = demo_region(f"rpar[{i}]", waves=2 + (i % 2))
+            mixed_frontend.register_tenant(f"rpar{i}", tdg,
+                                           pinned={"w": shared_w})
+            tenants.append((tdg, _bufs(200 + i, shared_w=shared_w)))
+        futs = [mixed_frontend.submit(
+            f"rpar{i}", {k: v for k, v in b.items() if k != "w"})
+            for i, (_, b) in enumerate(tenants)]
+        outs = [f.result(120) for f in futs]
+        for (tdg, b), out in zip(tenants, outs):
+            _check(out, tdg, b)
+        # both kinds of worker actually served something
+        used = {mixed_frontend.tenant(f"rpar{i}").worker for i in range(4)}
+        assert used == {0, 1}
+
+    def test_health_reports_kinds_and_topology(self, mixed_frontend):
+        rows = mixed_frontend.health()
+        assert [r["kind"] for r in rows] == ["remote", "local"]
+        assert all(r["alive"] for r in rows)
+        assert rows[0]["process_alive"] is None      # no handle for remote
+        assert rows[1]["process_alive"] is True
+        assert rows[0]["topology"] == topology_fingerprint()
+
+    def test_remote_request_error_is_isolated(self, mixed_frontend):
+        mixed_frontend.register_tenant("rerr", demo_region("rerr[0]"))
+        with pytest.raises(ClusterRemoteError, match="missing"):
+            mixed_frontend.serve("rerr", {"x0": jnp.ones((DIM, DIM))})
+        good = _bufs(210)
+        _check(mixed_frontend.serve("rerr", good),
+               demo_region("rerr[0]"), good)
+
+    def test_wire_totals_are_real_bytes(self, mixed_frontend):
+        st = mixed_frontend.stats()
+        for idx, w in st["wire"].items():
+            assert w["messages_sent"] >= 1
+            # frames are length-prefixed: bytes must dwarf message counts
+            assert w["bytes_sent"] > w["messages_sent"] * 8
+            assert w["bytes_received"] > w["messages_received"] * 8
+        total = st["frontend"]["wire"]
+        assert total["bytes_sent"] == sum(
+            w["bytes_sent"] for w in st["wire"].values())
+
+
+@pytest.mark.skipif(not executable_serialization_available(),
+                    reason="jax build cannot serialize executables")
+class TestRemoteColdHydration:
+    """The acceptance gate: a pre-started remote worker hydrates the
+    shipped artifact (0 intern misses, aot_served >= 1) and rejects a
+    topology-mismatched artifact loudly instead of crashing."""
+
+    @pytest.fixture(scope="class")
+    def cold_remote(self, remote_workers):
+        _, (_, addr1) = remote_workers
+        fe = ClusterFrontend(workers=[addr1], registry=REGISTRY_SPEC,
+                             token=WORKER_TOKEN, name="test-remote-cold")
+        yield fe
+        fe.close()
+
+    @pytest.fixture(scope="class")
+    def warm_artifact(self, tmp_path_factory):
+        tdg = demo_region("rwarm[0]", waves=3)
+        bufs = _bufs(220)
+        path = str(tmp_path_factory.mktemp("rwarm") / "region.json")
+        warmup_and_save(tdg, bufs, path, DEMO_REGISTRY)
+        return path, tdg, bufs
+
+    def test_cold_remote_worker_hydrates_without_relowering(
+            self, cold_remote, warm_artifact):
+        path, tdg, bufs = warm_artifact
+        rec = cold_remote.register_tenant("rwarm", warm_path=path)
+        assert rec.artifact is not None
+        out = cold_remote.serve("rwarm", bufs)
+        _check(out, tdg, bufs)
+        st = cold_remote.stats()
+        wk = st["workers"][0]
+        assert st["aggregate"]["hydrated_inband"] == 1
+        assert st["aggregate"]["aot_served"] >= 1
+        assert wk["intern"]["misses"] == 0       # never lowered anything
+        assert st["aggregate"]["aot_hydrate_failures"] == 0
+
+    def test_topology_mismatch_rejected_loudly_not_crash(
+            self, cold_remote, warm_artifact, tmp_path):
+        path, tdg, bufs = warm_artifact
+        bad = str(tmp_path / "badtopo.json")
+        shutil.copy(path, bad)
+        with open(path + ".aot", "rb") as f:
+            blob = pickle.loads(f.read())
+        blob["topology"] = dict(blob["topology"], platform="tpu",
+                                device_kind="TPU v4")
+        with open(bad + ".aot", "wb") as f:
+            f.write(pickle.dumps(blob))
+        before = cold_remote.stats()["aggregate"]
+        cold_remote.register_tenant("badtopo", warm_path=bad)
+        out = cold_remote.serve("badtopo", bufs)   # re-lower fallback works
+        _check(out, tdg, bufs)
+        after = cold_remote.stats()["aggregate"]
+        assert after["aot_topology_rejects"] == \
+            before["aot_topology_rejects"] + 1
+        assert after["aot_hydrate_failures"] == \
+            before["aot_hydrate_failures"] + 1
+        assert len(cold_remote._alive()) == 1      # worker survived
+
+    def test_close_shuts_down_remote_worker(self, cold_remote,
+                                            remote_workers):
+        # Must run LAST in this class: the frontend owns no process handle,
+        # so the best-effort shutdown RPC is the only thing that can stop
+        # the subprocess — assert it actually does, with a clean exit.
+        proc = remote_workers[1][0]
+        cold_remote.close()
+        proc.wait(timeout=30)
+        assert proc.returncode == 0
+
+
+# ---------------------------------------------------------------------------
+# close() escalation: terminate -> kill, never a leaked local process
+# ---------------------------------------------------------------------------
+
+class TestCloseEscalation:
+    def test_worker_ignoring_shutdown_is_killed_and_reaped(self, monkeypatch):
+        fe = ClusterFrontend(workers=1, registry=REGISTRY_SPEC,
+                             shutdown_grace=0.5, name="test-escalate")
+        h = fe._handles[0]
+        proc = h.process
+        assert proc.is_alive()
+        # Simulate a worker that never sees the shutdown RPC *and* shrugs
+        # off SIGTERM: close() must escalate to kill() and still reap it.
+        monkeypatch.setattr(
+            h, "request",
+            lambda *a, **k: (_ for _ in ()).throw(RuntimeError("rpc down")))
+        monkeypatch.setattr(proc, "terminate", lambda: None)
+        fe.close()
+        assert not proc.is_alive()
+        assert proc.exitcode is not None           # reaped, not abandoned
