@@ -7,9 +7,12 @@ phase of this benchmark:
 
 * **overhead** — what does the socket RPC front cost? The same tenants and
   request chains run through an in-process ``RegionServer`` and through a
-  1-worker ``ClusterFrontend``; the report records both throughputs and
-  the per-request overhead (wire codec + framing + process hop). Outputs
-  are checked for parity against the in-process run.
+  1-worker ``ClusterFrontend`` — once per transport (``tcp`` and ``shm``,
+  the shared-memory data plane). The report records throughput, per-request
+  overhead (wire codec + framing + process hop) and the wire breakdown
+  (encode/decode seconds, entries per batch frame, shm bytes) for each
+  transport; outputs are checked for exact parity against the in-process
+  run. The headline numbers come from the best negotiated transport.
 
 * **cold start** — does shipping the warm ``.aot`` artifact beat making the
   worker re-lower? A tenant is warmed once (``serialize.warmup_and_save``);
@@ -109,11 +112,12 @@ def _drive(serve, tenants, shared_w, rounds: int) -> tuple[float, list]:
 
 def bench_overhead(n_tenants: int, rounds: int, dim: int, waves: int,
                    width: int, max_wait_ms: float) -> dict:
-    """In-process RegionServer vs 1-worker ClusterFrontend, same chains."""
+    """In-process RegionServer vs 1-worker ClusterFrontend, per transport."""
     from repro.core import clear_intern_cache
     from repro.serving import ClusterFrontend, RegionServer
 
     tenants, shared_w = _make_tenants(n_tenants, 1, dim, waves, width)
+    n_requests = n_tenants * rounds
 
     clear_intern_cache()
     server = RegionServer(max_batch=n_tenants, max_wait_ms=max_wait_ms,
@@ -127,39 +131,70 @@ def bench_overhead(n_tenants: int, rounds: int, dim: int, waves: int,
     _drive(serve_local, tenants, shared_w, 1)          # warm off the clock
     wall_local, finals_local = _drive(serve_local, tenants, shared_w, rounds)
     server.close()
+    inproc_rps = n_requests / max(wall_local, 1e-9)
 
-    frontend = ClusterFrontend(workers=1, registry=REGISTRY_SPEC,
-                               max_batch=n_tenants, max_wait_ms=max_wait_ms,
-                               name="bench-rpc")
-    for t in tenants:
-        frontend.register_tenant(t["name"], t["tdg"],
-                                 pinned={"w": shared_w})
+    sweep: dict[str, dict] = {}
+    aggregate = None
+    for transport in ("tcp", "shm"):
+        frontend = ClusterFrontend(workers=1, registry=REGISTRY_SPEC,
+                                   max_batch=n_tenants,
+                                   max_wait_ms=max_wait_ms,
+                                   transport=transport,
+                                   name=f"bench-rpc-{transport}")
+        for t in tenants:
+            frontend.register_tenant(t["name"], t["tdg"],
+                                     pinned={"w": shared_w})
 
-    def serve_rpc(name, bufs):
-        return frontend.serve(name, {k: v for k, v in bufs.items()
-                                     if k != "w"}, timeout=300)
+        def serve_rpc(name, bufs):
+            return frontend.serve(name, {k: v for k, v in bufs.items()
+                                         if k != "w"}, timeout=300)
 
-    _drive(serve_rpc, tenants, shared_w, 1)            # warm off the clock
-    wall_rpc, finals_rpc = _drive(serve_rpc, tenants, shared_w, rounds)
-    stats = frontend.stats()
-    frontend.close()
+        _drive(serve_rpc, tenants, shared_w, 1)        # warm off the clock
+        wall_rpc, finals_rpc = _drive(serve_rpc, tenants, shared_w, rounds)
+        stats = frontend.stats()
+        frontend.close()
+        aggregate = stats["aggregate"]
 
-    parity = 0.0
-    for a, b in zip(finals_local, finals_rpc):
-        for k in a:
-            np.testing.assert_allclose(b[k], a[k], rtol=2e-4, atol=2e-4)
-            parity = max(parity, float(np.abs(a[k] - b[k]).max()))
-    n_requests = n_tenants * rounds
+        parity = 0.0
+        for a, b in zip(finals_local, finals_rpc):
+            for k in a:
+                np.testing.assert_allclose(b[k], a[k], rtol=2e-4, atol=2e-4)
+                parity = max(parity, float(np.abs(a[k] - b[k]).max()))
+        wire = stats["frontend"]["wire"]
+        row0 = stats["wire"][0]
+        sweep[transport] = {
+            "transport_negotiated": row0["transport"],
+            "shm_fallbacks": stats["frontend"]["shm_fallbacks"],
+            "throughput_rps": n_requests / max(wall_rpc, 1e-9),
+            "overhead_ms_per_request": (wall_rpc - wall_local) / n_requests
+            * 1e3,
+            "parity_max_abs_diff": parity,
+            "entries_per_frame": row0["entries_per_frame"],
+            "window": row0["window"],
+            "wire": wire,
+        }
+        print(f"  [{transport}] rpc "
+              f"{sweep[transport]['throughput_rps']:.1f} req/s | overhead "
+              f"{sweep[transport]['overhead_ms_per_request']:.2f} ms/req | "
+              f"{row0['entries_per_frame']:.1f} entries/frame | shm "
+              f"{wire['shm_bytes_sent']} B tx (negotiated "
+              f"{row0['transport']})", flush=True)
+
+    # Headline = the transport a default ("auto") frontend would land on:
+    # shm when the rings attached, tcp otherwise.
+    best = sweep["shm"] if sweep["shm"]["transport_negotiated"] == "shm" \
+        else sweep["tcp"]
     return {
         "tenants": n_tenants,
         "rounds": rounds,
         "requests": n_requests,
-        "inproc_throughput_rps": n_requests / max(wall_local, 1e-9),
-        "rpc_throughput_rps": n_requests / max(wall_rpc, 1e-9),
-        "rpc_overhead_ms_per_request": (wall_rpc - wall_local) / n_requests
-        * 1e3,
-        "aggregate": stats["aggregate"],
-        "parity_max_abs_diff": parity,
+        "inproc_throughput_rps": inproc_rps,
+        "rpc_throughput_rps": best["throughput_rps"],
+        "rpc_overhead_ms_per_request": best["overhead_ms_per_request"],
+        "aggregate": aggregate,
+        "parity_max_abs_diff": max(r["parity_max_abs_diff"]
+                                   for r in sweep.values()),
+        "transports": sweep,
     }
 
 
@@ -220,8 +255,16 @@ def bench_cold_start(dim: int, waves: int, width: int) -> dict:
 
 def bench_scaling(worker_counts, n_tenants: int, n_structures: int,
                   rounds: int, dim: int, waves: int, width: int,
-                  max_wait_ms: float) -> list[dict]:
-    """Fixed tenant load, growing worker fleet (sticky by structure)."""
+                  max_wait_ms: float, repeats: int = 5) -> list[dict]:
+    """Fixed tenant load, growing worker fleet (sticky by structure).
+
+    Each fleet size is timed ``repeats`` times and the MEAN wall reported:
+    a single sub-second sample is dominated by scheduler noise and by
+    whether the tenant chains happen to phase-lock into the coalescing
+    window (bimodal on few-core CI hosts, where N worker processes
+    time-share the frontend's cores); the mean reports sustained
+    throughput across both modes instead of a lucky lock-step run.
+    """
     from repro.serving import ClusterFrontend
 
     rows = []
@@ -241,11 +284,14 @@ def bench_scaling(worker_counts, n_tenants: int, n_structures: int,
                                          if k != "w"}, timeout=300)
 
         _drive(serve_rpc, tenants, shared_w, 1)        # warm off the clock
-        wall, _ = _drive(serve_rpc, tenants, shared_w, rounds)
+        walls = [_drive(serve_rpc, tenants, shared_w, rounds)[0]
+                 for _ in range(repeats)]
+        wall = sum(walls) / len(walls)
         stats = frontend.stats()
         frontend.close()
         workers_used = len({r["worker"]
                             for r in stats["tenants"].values()})
+        wire = stats["frontend"]["wire"]
         rows.append({
             "workers": workers,
             "workers_used": workers_used,
@@ -253,11 +299,19 @@ def bench_scaling(worker_counts, n_tenants: int, n_structures: int,
             "structures": n_structures,
             "requests": n_tenants * rounds,
             "throughput_rps": n_tenants * rounds / max(wall, 1e-9),
+            "entries_per_frame": (round(wire["entries_sent"]
+                                        / wire["frames_sent"], 3)
+                                  if wire["frames_sent"] else 0.0),
+            "wire": wire,
+            "transport": stats["frontend"]["transport"],
+            "shm_fallbacks": stats["frontend"]["shm_fallbacks"],
             "aggregate": stats["aggregate"],
         })
         print(f"workers={workers}: {rows[-1]['throughput_rps']:8.1f} req/s "
               f"({workers_used} workers used, coalesced "
-              f"{stats['aggregate']['coalesced_requests']})", flush=True)
+              f"{stats['aggregate']['coalesced_requests']}, "
+              f"{rows[-1]['entries_per_frame']:.1f} entries/frame)",
+              flush=True)
     return rows
 
 
@@ -371,9 +425,29 @@ def run(n_tenants: int = 8, rounds: int = 12, dim: int = 24, waves: int = 3,
     return report
 
 
-def _assert_gates(report: dict) -> None:
+def _assert_gates(report: dict, overhead_budget_ms: float | None = None,
+                  scaling_tolerance: float = 0.9) -> None:
     overhead, cold = report["overhead"], report["cold_start"]
-    assert overhead["parity_max_abs_diff"] < 1e-3, overhead
+    # The RPC front must never change WHAT is computed: replies are
+    # bit-identical to the in-process run on EVERY transport.
+    for name, row in overhead["transports"].items():
+        assert row["parity_max_abs_diff"] == 0.0, (name, row)
+        assert row["wire"]["timeouts"] == 0, (name, row)
+    # The wire-path acceptance: the batch/pipelined/shm front stays under
+    # the per-request overhead budget (the pre-coalescing rewrite cut the
+    # seed's ~5.8 ms/req; the budget holds the line at a 3x reduction).
+    if overhead_budget_ms is not None:
+        assert overhead["rpc_overhead_ms_per_request"] < overhead_budget_ms, \
+            overhead
+    # Monotone scaling: adding workers must never LOSE throughput (the
+    # seed's wire path collapsed 145 -> 50 req/s from 1 to 4 workers).
+    # Per-step tolerance absorbs scheduler noise on few-core hosts (the
+    # mean-of-N walls still jitter 15-20% when N worker processes
+    # time-share one core); the full fleet must strictly beat one worker.
+    rps = [r["throughput_rps"] for r in report["scaling"]]
+    for prev, cur in zip(rps, rps[1:]):
+        assert cur >= prev * scaling_tolerance, report["scaling"]
+    assert rps[-1] >= rps[0], report["scaling"]
     # The headline acceptance: shipping the compiled artifact must beat
     # making the cold worker re-lower, and the shipped worker must actually
     # be warm (hydrated, served from AOT, never lowered anything).
@@ -399,27 +473,38 @@ def _assert_gates(report: dict) -> None:
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized: 2 workers, tiny grid; asserts parity + "
-                         "warm-ship-beats-re-lower (throughput reported, "
-                         "not gated)")
+                    help="CI-sized: tiny grid; asserts per-transport parity, "
+                         "the rpc overhead budget, tolerant monotone "
+                         "1->2->4 worker scaling, and the warm-ship gates")
     ap.add_argument("--out", default="BENCH_cluster.json")
     args = ap.parse_args(argv)
     if args.smoke:
-        report = run(n_tenants=4, rounds=3, dim=8, waves=2, width=2,
-                     n_structures=2, worker_counts=(1, 2),
+        # Same tenant topology and region shape as the full run (8 tenants
+        # over 4 structures, dim 24): the scaling phase's signal — admission
+        # windows overlapping across workers — needs real per-request work;
+        # at toy sizes a single worker is simply optimal and the phase
+        # measures nothing. Smoke trims rounds, not the shape.
+        report = run(n_tenants=8, rounds=3, dim=24, waves=2, width=4,
+                     n_structures=4, worker_counts=(1, 2, 4),
                      out_path=args.out)
-        _assert_gates(report)
-        print("# smoke ok: rpc parity + warm-ship beats re-lower + "
-              "hydrated worker never lowered + remote bootstrap warm "
-              "and reaped")
+        # Smoke sizes are noisy: the budget is a regression tripwire (the
+        # seed wire path measured ~5.8 ms/req), not the full-run target,
+        # and the scaling tolerance is looser for the same reason.
+        _assert_gates(report, overhead_budget_ms=4.0, scaling_tolerance=0.7)
+        print("# smoke ok: rpc parity on tcp+shm + overhead under budget + "
+              "monotone 1->2->4 workers + warm-ship beats re-lower + "
+              "remote bootstrap warm and reaped")
     else:
         report = run(out_path=args.out)
-        _assert_gates(report)
+        # Full-size acceptance: >= 3x under the seed's 5.77 ms/req.
+        _assert_gates(report, overhead_budget_ms=1.93, scaling_tolerance=0.75)
         print(f"# acceptance: cold-start ship "
               f"{report['cold_start']['speedup_cold_start']:.2f}x faster "
               f"than re-lower; rpc overhead "
               f"{report['overhead']['rpc_overhead_ms_per_request']:.2f} "
-              f"ms/req")
+              f"ms/req; scaling "
+              + " -> ".join(f"{r['throughput_rps']:.1f}"
+                            for r in report["scaling"]) + " req/s")
 
 
 if __name__ == "__main__":

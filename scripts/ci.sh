@@ -13,11 +13,14 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
   shift
   # CI-sized benchmark smokes: fusion asserts fused/unfused parity + traced-
   # program shrink; serving asserts multi-tenant parity + structural sharing
-  # + coalescing; cluster asserts RPC parity + warm-artifact shipping beats
-  # per-worker re-lowering on cold start (2 workers, small grid) AND the
-  # remote-bootstrap path: a `python -m repro.serving.worker` subprocess
-  # over localhost TCP must serve with parity, hydrate the shipped artifact
-  # (zero intern misses) and be reaped by the frontend's shutdown RPC.
+  # + coalescing; cluster gates the wire path — exact per-transport parity
+  # (tcp AND shm), the rpc-overhead-per-request budget, tolerant monotone
+  # throughput across 1 -> 2 -> 4 workers (the seed wire path collapsed
+  # here), warm-artifact shipping beating per-worker re-lowering on cold
+  # start, AND the remote-bootstrap path: a `python -m repro.serving.worker`
+  # subprocess over localhost TCP must serve with parity, hydrate the
+  # shipped artifact (zero intern misses) and be reaped by the frontend's
+  # shutdown RPC.
   # Full runs: benchmarks.fusion / benchmarks.serving / benchmarks.cluster
   python -m benchmarks.fusion --smoke --out /tmp/BENCH_fusion_smoke.json
   python -m benchmarks.serving --smoke --out /tmp/BENCH_serving_smoke.json

@@ -14,6 +14,7 @@ from .cluster import (ClusterError, ClusterFrontend, ClusterRemoteError,
 from .metrics import LatencyReservoir, ServerMetrics, percentile
 from .pool import PoolEntry, WarmPool
 from .server import RegionServer, Tenant
+from .shm import ShmRing
 from .spawner import (LocalSpawner, RemoteSpawner, SpawnedWorker, SpawnError,
                       parse_worker_spec)
 
@@ -23,6 +24,7 @@ __all__ = [
     "ServerMetrics", "LatencyReservoir", "percentile",
     "ClusterFrontend", "WorkerNode", "StickyRouter", "resolve_registry",
     "ClusterError", "ClusterRemoteError", "WorkerDied",
+    "ShmRing",
     "LocalSpawner", "RemoteSpawner", "SpawnedWorker", "SpawnError",
     "parse_worker_spec",
 ]

@@ -57,12 +57,29 @@ server metrics (including ``aot_hydrate_failures``) next to the frontend's
 own routing/failover counters, so the cross-process view stays as
 observable as the in-process one (cf. arXiv:2406.03077).
 
+**The wire path.** Submissions do not travel one frame per request. Each
+worker handle runs a dispatcher thread draining a per-worker submit queue:
+every tick it packs up to ``_WIRE_BATCH`` queued submissions into ONE
+``submit_batch`` frame (compact binary codec, tensor blobs optionally via
+the shared-memory data plane — :mod:`repro.serving.shm`), and keeps up to
+``REPRO_RPC_WINDOW`` such frames in flight per connection, so wire latency
+overlaps worker compute instead of serializing with it. The worker admits
+the whole frame under one queue-lock acquisition
+(``RegionServer.submit_many``) — its coalescer sees the frame's worth of
+requests at once, not a trickle — and a per-connection reply writer drains
+*completed* requests into ``result_batch`` frames as they finish (no
+head-of-line blocking on a straggler). Replies fan back out to per-request
+futures by id. Control traffic (register/warmup/stats) stays on plain
+JSON frames.
+
 Env knobs: ``REPRO_CLUSTER_WORKERS`` (default worker count, used by
 ``ClusterFrontend(workers=None)`` and ``launch/serve.py --cluster 0``),
 ``REPRO_SHIP_ARTIFACTS=0`` (kill switch: never ship compiled bytes; cold
 workers re-lower), ``REPRO_RPC_TOKEN`` (default handshake auth token for
-frontend and workers) and ``REPRO_RPC_MAX_FRAME`` (wire frame cap, see
-:mod:`repro.serving.rpc`).
+frontend and workers), ``REPRO_RPC_MAX_FRAME`` (wire frame cap),
+``REPRO_RPC_TRANSPORT`` / ``REPRO_RPC_WINDOW`` / ``REPRO_RPC_SHM_BYTES``
+/ ``REPRO_RPC_SHM_MIN_BYTES`` (transport selection, pipelining window and
+shm ring sizing — see :mod:`repro.serving.rpc`).
 """
 from __future__ import annotations
 
@@ -73,7 +90,9 @@ import os
 import secrets
 import socket
 import threading
+from collections import deque
 from concurrent.futures import Future
+from concurrent.futures import TimeoutError as _FuturesTimeout
 from typing import Any, Callable, Mapping, Sequence
 
 from ..core import serialize as _serialize
@@ -137,6 +156,62 @@ def resolve_registry(spec, kwargs: Mapping[str, Any] | None = None
 # Worker side
 # ---------------------------------------------------------------------------
 
+class _ReplyWriter:
+    """Per-connection reply coalescer (worker side).
+
+    Completed submit futures land here (from executor callback threads) and
+    a single writer thread drains whatever has accumulated into ONE
+    ``result_batch`` frame per pass — opportunistic coalescing: a burst of
+    completions shares a frame, a lone straggler ships alone immediately.
+    Having exactly one thread send binary frames on the connection is also
+    what keeps the shm ring single-producer (see :mod:`repro.serving.shm`).
+    """
+
+    def __init__(self, conn: "rpc.RpcConnection"):
+        self._conn = conn
+        self._cv = threading.Condition()
+        self._done: list[tuple[Any, Future]] = []
+        self._closed = False
+        self._thread = threading.Thread(target=self._loop,
+                                        name="worker-reply-writer",
+                                        daemon=True)
+        self._thread.start()
+
+    def complete(self, mid, fut: Future) -> None:
+        with self._cv:
+            if self._closed:
+                return
+            self._done.append((mid, fut))
+            self._cv.notify_all()
+
+    def close(self) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+
+    def _loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._done and not self._closed:
+                    self._cv.wait()
+                if not self._done:      # closed and drained
+                    return
+                batch, self._done = self._done, []
+            entries = []
+            for mid, fut in batch:
+                exc = fut.exception()
+                if exc is not None:
+                    entries.append({"id": mid,
+                                    "error": f"{type(exc).__name__}: {exc}"})
+                else:
+                    entries.append({"id": mid, "out": fut.result()})
+            try:
+                self._conn.send({"op": "result_batch", "entries": entries},
+                                codec="binary")
+            except (OSError, rpc.ProtocolError):
+                return              # connection is dying; nothing to flush to
+
+
 class WorkerNode:
     """One worker process: an RPC listener wrapped around a ``RegionServer``.
 
@@ -159,10 +234,17 @@ class WorkerNode:
     def __init__(self, registry: "_serialize.TaskFnRegistry",
                  host: str = "127.0.0.1", port: int = 0,
                  token: str | None = None, handshake_timeout: float = 30.0,
+                 transport: str | None = None,
                  server: RegionServer | None = None, **server_kwargs):
         self.registry = registry
         self.token = token
         self.handshake_timeout = handshake_timeout
+        # The worker's OWN transport policy (its env / CLI, not the
+        # frontend's): "tcp" refuses shm-setup offers, "shm"/"auto" attach
+        # when the segments are reachable. Independence is deliberate — a
+        # worker that knows it cannot share memory (containerized, remote)
+        # pins itself to tcp and the frontend falls back per connection.
+        self.transport = rpc.transport_mode(transport)
         self.server = server or RegionServer(
             name=f"worker-{os.getpid()}", **server_kwargs)
         self.listener = rpc.listener(host, port)
@@ -228,21 +310,29 @@ class WorkerNode:
             # peer why; drop the socket.
             conn.close()
             return
-        while not self._stop.is_set():
-            try:
-                msg = conn.recv()
-            except (rpc.ProtocolError, rpc.ConnectionClosed, OSError):
-                # ProtocolError included: once framing desyncs (oversized
-                # prefix, malformed node) nothing later on this socket can
-                # be trusted — drop the connection, keep the worker.
-                conn.close()
-                return
-            try:
-                self._dispatch(conn, msg)
-            except Exception as exc:    # never let one bad frame kill the loop
-                self._send_error(conn, msg.get("id"), exc)
-            if msg.get("op") == "shutdown":
-                return
+        writer = _ReplyWriter(conn)
+        try:
+            while not self._stop.is_set():
+                try:
+                    msg = conn.recv()
+                except (rpc.ProtocolError, rpc.ConnectionClosed, OSError):
+                    # ProtocolError included: once framing desyncs
+                    # (oversized prefix, malformed node) nothing later on
+                    # this socket can be trusted — drop the connection,
+                    # keep the worker.
+                    return
+                try:
+                    self._dispatch(conn, msg, writer)
+                except Exception as exc:  # never let one bad frame kill the loop
+                    self._send_error(conn, msg.get("id"), exc)
+                if msg.get("op") == "shutdown":
+                    return
+        finally:
+            # Every exit path — shutdown op included — releases the
+            # connection (and any attached shm rings) and stops its reply
+            # writer; the shutdown path used to leak the socket.
+            writer.close()
+            conn.close()
 
     def _send_error(self, conn: rpc.RpcConnection, mid, exc: Exception,
                     ) -> None:
@@ -252,26 +342,41 @@ class WorkerNode:
         except OSError:
             pass
 
-    def _dispatch(self, conn: rpc.RpcConnection, msg: dict) -> None:
-        op, mid = msg["op"], msg.get("id")
-        if op == "submit":
-            tenant = msg["tenant"]
-            pin_key = self._tenant_pin.get(tenant)
-            buffers = dict(self._pin_groups.get(pin_key, {}))
-            buffers.update(msg["buffers"])
-            fut = self.server.submit(tenant, buffers)
+    def _merged_buffers(self, tenant: str, buffers: Mapping[str, Any]
+                        ) -> dict:
+        pin_key = self._tenant_pin.get(tenant)
+        merged = dict(self._pin_groups.get(pin_key, {}))
+        merged.update(buffers)
+        return merged
 
-            def _done(f: Future, _conn=conn, _mid=mid) -> None:
-                exc = f.exception()
-                if exc is not None:
-                    self._send_error(_conn, _mid, exc)
-                else:
-                    try:
-                        _conn.send({"op": "result", "id": _mid,
-                                    "out": f.result()})
-                    except OSError:
-                        pass
-            fut.add_done_callback(_done)
+    def _dispatch(self, conn: rpc.RpcConnection, msg: dict,
+                  writer: _ReplyWriter) -> None:
+        op, mid = msg["op"], msg.get("id")
+        if op == "submit_batch":
+            # The hot path: one frame, N submissions, ONE admission-queue
+            # lock acquisition (submit_many) so the server's coalescer
+            # sees the whole frame at once. Per-entry failures come back
+            # as pre-failed futures — routed to the right caller by id,
+            # never rejecting the frame's other entries.
+            entries = msg["entries"]
+            items = [(e["tenant"],
+                      self._merged_buffers(e["tenant"], e["buffers"]))
+                     for e in entries]
+            futs = self.server.submit_many(items)
+            for e, fut in zip(entries, futs):
+                fut.add_done_callback(
+                    lambda f, _mid=e["id"]: writer.complete(_mid, f))
+        elif op == "submit":
+            # Single-request form (kept for probe/test paths): same reply
+            # plumbing as the batch path, so ordering and coalescing of
+            # replies is uniform.
+            fut = self.server.submit(
+                msg["tenant"],
+                self._merged_buffers(msg["tenant"], msg["buffers"]))
+            fut.add_done_callback(
+                lambda f, _mid=mid: writer.complete(_mid, f))
+        elif op == "shm-setup":
+            self._handle_shm_setup(conn, msg)
         elif op == "register":
             conn.send({"op": "result", "id": mid,
                        **self._handle_register(msg)})
@@ -293,6 +398,37 @@ class WorkerNode:
             raise ValueError(f"unknown op {op!r}")
 
     # ------------------------------------------------------------------- ops
+    def _handle_shm_setup(self, conn: rpc.RpcConnection, msg: dict) -> None:
+        """Attach (or refuse) the frontend's offered shared-memory rings.
+
+        Any failure — worker pinned to tcp, segments unreachable (different
+        host, different mount namespace), bogus names/sizes — is a clean
+        ``attached: False`` reply with a reason: the frontend falls back to
+        TCP and counts it; the connection survives either way.
+        """
+        mid = msg.get("id")
+        if self.transport == "tcp":
+            conn.send({"op": "result", "id": mid, "attached": False,
+                       "reason": "worker transport pinned to tcp"})
+            return
+        tx = rx = None
+        try:
+            from . import shm as _shm
+            size = int(msg["size"])
+            # The frontend's tx ring is what IT sends on → our receive
+            # side; its rx ring is our send side.
+            rx = _shm.ShmRing.attach(msg["tx"], size)
+            tx = _shm.ShmRing.attach(msg["rx"], size)
+        except Exception as exc:
+            for ring in (tx, rx):
+                if ring is not None:
+                    ring.close()
+            conn.send({"op": "result", "id": mid, "attached": False,
+                       "reason": f"{type(exc).__name__}: {exc}"})
+            return
+        conn.attach_rings(send_ring=tx, recv_ring=rx)
+        conn.send({"op": "result", "id": mid, "attached": True})
+
     def _handle_register(self, msg: dict) -> dict:
         name = msg["tenant"]
         tdg = _serialize.tdg_from_dict(msg["tdg"], self.registry)
@@ -358,6 +494,7 @@ class WorkerNode:
         s["worker"] = {"pid": os.getpid(), "port": self.port,
                        "hydrated_inband": self.hydrated_inband,
                        "topology": _serialize.topology_fingerprint(),
+                       "transport": self.transport,
                        "pin_groups": len(self._pin_groups),
                        "pinned_tenants": sorted(self._tenant_pin)}
         return s
@@ -438,35 +575,134 @@ class _TenantRecord:
         self.requests = 0
 
 
-class _WorkerHandle:
-    """Frontend-side view of one worker: connection + reply demux.
+#: Max submissions packed into one ``submit_batch`` frame. Large enough
+#: that a worker's whole admission-queue wave usually arrives as one frame;
+#: small enough that a frame never approaches the frame cap with typical
+#: tensor payloads.
+_WIRE_BATCH = 64
 
-    ``process`` is the local ``multiprocessing.Process`` or ``None`` for a
-    remote worker attached by address — the shutdown path branches on it
-    (reap vs. best-effort RPC + connection close).
+
+class _WorkerHandle:
+    """Frontend-side view of one worker: dispatcher, window, reply demux.
+
+    Submissions go through a per-worker queue drained by a dispatcher
+    thread that packs up to :data:`_WIRE_BATCH` of them into one
+    ``submit_batch`` frame, keeping at most ``window`` frames in flight on
+    the connection (pipelining: the wire round-trip overlaps worker
+    compute, and backpressure from a slow worker is a bounded window, not
+    an unbounded queue of unacked frames). The batching is *self-clocking*:
+    while the window is full the queue grows, so the next frame packs more
+    — load adapts frame occupancy with zero tuning.
+
+    Control requests (register/warmup/stats/ping/shutdown) bypass the
+    queue: they are rare, ordered, and JSON-coded. ``process`` is the local
+    ``multiprocessing.Process`` or ``None`` for a remote worker attached by
+    address — the shutdown path branches on it (reap vs. best-effort RPC +
+    connection close).
     """
 
     def __init__(self, idx: int, spawned: SpawnedWorker,
-                 ids: "itertools.count", on_death: Callable[[int], None]):
+                 ids: "itertools.count", on_death: Callable[[int], None],
+                 window: int | None = None):
         self.idx = idx
         self.kind = spawned.kind
         self.address = spawned.address
         self.info = spawned.info
         self.process = spawned.process
         self.conn = spawned.conn
+        self.transport = spawned.transport
+        self.shm_fallback = spawned.shm_fallback
         self.alive = True
         self._ids = ids
         self._on_death = on_death
+        self._window = rpc.window_size(window)
         self._lock = threading.Lock()
         self._pending: dict[int, Future] = {}
+        # mid -> shared [outstanding_count] cell of its frame: the window
+        # slot frees when every entry of the frame has been answered.
+        self._frame_of: dict[int, list] = {}
+        self._submit_q: deque[tuple[int, str, dict]] = deque()
+        self._q_cv = threading.Condition()
+        self._inflight_frames = 0
+        self.frames_sent = 0
+        self.entries_sent = 0
+        self.timeouts = 0
         self._reader = threading.Thread(target=self._read_loop,
                                         name=f"cluster-reader-{idx}",
                                         daemon=True)
         self._reader.start()
+        self._writer = threading.Thread(target=self._write_loop,
+                                        name=f"cluster-dispatch-{idx}",
+                                        daemon=True)
+        self._writer.start()
 
+    # --------------------------------------------------------------- submits
+    def submit_async(self, tenant: str, buffers: dict) -> Future:
+        """Queue one submission for the dispatcher; resolves to the reply
+        entry (``{"id": ..., "out": ...}``). O(1), lock scope is a dict
+        put + a queue append — the frontend's submit hot path never waits
+        on the wire."""
+        fut: Future = Future()
+        mid = next(self._ids)
+        with self._lock:
+            if not self.alive:
+                raise WorkerDied(f"worker {self.idx} is dead")
+            self._pending[mid] = fut
+        with self._q_cv:
+            self._submit_q.append((mid, tenant, buffers))
+            self._q_cv.notify_all()
+        return fut
+
+    def _write_loop(self) -> None:
+        """Dispatcher: pack queued submissions into batch frames, bounded
+        by the pipelining window."""
+        while True:
+            with self._q_cv:
+                while self.alive and (
+                        not self._submit_q
+                        or self._inflight_frames >= self._window):
+                    self._q_cv.wait()
+                if not self.alive:
+                    return
+                entries = []
+                while self._submit_q and len(entries) < _WIRE_BATCH:
+                    entries.append(self._submit_q.popleft())
+            # Drop entries whose future already finished (timed out,
+            # cancelled, failed by _mark_dead): sending them would waste
+            # worker compute on an answer nobody can receive.
+            live = []
+            with self._lock:
+                for mid, tenant, buffers in entries:
+                    fut = self._pending.get(mid)
+                    if fut is not None and not fut.done():
+                        live.append((mid, tenant, buffers))
+                    else:
+                        self._pending.pop(mid, None)
+                if live:
+                    cell = [len(live)]
+                    for mid, _, _ in live:
+                        self._frame_of[mid] = cell
+            if not live:
+                continue
+            with self._q_cv:
+                self._inflight_frames += 1
+            frame = {"op": "submit_batch",
+                     "entries": [{"id": mid, "tenant": t, "buffers": b}
+                                 for mid, t, b in live]}
+            try:
+                self.conn.send(frame, codec="binary")
+            except (OSError, rpc.ProtocolError):
+                self._mark_dead()
+                return
+            with self._lock:
+                self.frames_sent += 1
+                self.entries_sent += len(live)
+
+    # -------------------------------------------------------------- control
     def request_async(self, msg: dict) -> Future:
         fut: Future = Future()
         mid = next(self._ids)
+        fut._rpc_mid = mid          # lets request() disown it on timeout
         with self._lock:
             if not self.alive:
                 raise WorkerDied(f"worker {self.idx} is dead")
@@ -482,9 +718,30 @@ class _WorkerHandle:
         return fut
 
     def request(self, msg: dict, timeout: float | None = 120.0) -> dict:
-        reply = self.request_async(msg).result(timeout=timeout)
-        return reply
+        fut = self.request_async(msg)
+        try:
+            return fut.result(timeout=timeout)
+        except _FuturesTimeout:
+            # The bug this fixes: timing out used to leave the pending
+            # entry (and its Future) in the demux table forever — a stuck
+            # worker silently accumulated state. Disown the id so a late
+            # reply is dropped by the reader, fail the future, and COUNT
+            # it: a timeout is a worker-health signal, not ambient noise.
+            with self._lock:
+                still = self._pending.pop(fut._rpc_mid, None)
+            if still is None:
+                # The reply raced the timeout and the reader already
+                # resolved the future — take the result, it's here.
+                return fut.result(timeout=0)
+            with self._lock:
+                self.timeouts += 1
+            err = ClusterError(
+                f"worker {self.idx}: no reply to {msg.get('op')!r} "
+                f"within {timeout}s")
+            still.set_exception(err)
+            raise err from None
 
+    # ---------------------------------------------------------------- reader
     def _read_loop(self) -> None:
         while True:
             try:
@@ -495,18 +752,37 @@ class _WorkerHandle:
                 # pending futures fail fast and the router stops using it,
                 # instead of the reader dying with futures hung.
                 break
-            fut = None
-            with self._lock:
-                fut = self._pending.pop(msg.get("id"), None)
-            if fut is None:
-                continue            # reply to an already-abandoned request
-            if msg.get("op") == "error":
-                fut.set_exception(ClusterRemoteError(
-                    f"worker {self.idx}: {msg.get('error')}"))
+            if not isinstance(msg, dict):
+                continue
+            if msg.get("op") == "result_batch":
+                for entry in msg.get("entries", ()):
+                    self._complete(entry.get("id"), entry)
             else:
-                fut.set_result(msg)
+                self._complete(msg.get("id"), msg)
         self._mark_dead()
 
+    def _complete(self, mid, msg: dict) -> None:
+        """Resolve one reply entry; release its frame's window slot when
+        the frame is fully answered."""
+        with self._lock:
+            fut = self._pending.pop(mid, None)
+            cell = self._frame_of.pop(mid, None)
+        if cell is not None:
+            cell[0] -= 1            # reader thread is the sole decrementer
+            if cell[0] == 0:
+                with self._q_cv:
+                    self._inflight_frames -= 1
+                    self._q_cv.notify_all()
+        if fut is None:
+            return                  # reply to an already-abandoned request
+        if msg.get("op") == "error" or (msg.get("op") is None
+                                        and "error" in msg):
+            fut.set_exception(ClusterRemoteError(
+                f"worker {self.idx}: {msg.get('error')}"))
+        else:
+            fut.set_result(msg)
+
+    # -------------------------------------------------------------- teardown
     def _mark_dead(self) -> None:
         with self._lock:
             if not self.alive:
@@ -514,13 +790,36 @@ class _WorkerHandle:
             self.alive = False
             pending = list(self._pending.values())
             self._pending.clear()
+            self._frame_of.clear()
+        with self._q_cv:
+            self._submit_q.clear()
+            self._inflight_frames = 0
+            self._q_cv.notify_all()     # dispatcher wakes, sees dead, exits
         for fut in pending:
             if not fut.done():
                 fut.set_exception(WorkerDied(
                     f"worker {self.idx} died with the request in flight"))
         self._on_death(self.idx)
 
+    def dispatch_stats(self) -> dict:
+        """Dispatcher-side wire stats: framing occupancy and window state."""
+        with self._q_cv:
+            queued = len(self._submit_q)
+            inflight = self._inflight_frames
+        with self._lock:
+            frames, entries = self.frames_sent, self.entries_sent
+            timeouts = self.timeouts
+        return {"frames_sent": frames, "entries_sent": entries,
+                "entries_per_frame": (round(entries / frames, 3)
+                                      if frames else 0.0),
+                "inflight_frames": inflight, "queued_entries": queued,
+                "window": self._window, "timeouts": timeouts}
+
     def close(self) -> None:
+        with self._lock:
+            self.alive = False
+        with self._q_cv:
+            self._q_cv.notify_all()     # release the dispatcher thread
         self.conn.close()
 
 
@@ -558,6 +857,20 @@ class ClusterFrontend:
         random per-frontend token (the frontend controls both ends, so
         local listeners are never left open to other users on this host);
         remote attaches then handshake with no token.
+    transport:
+        ``"tcp"`` | ``"shm"`` | ``"auto"`` (default:
+        ``$REPRO_RPC_TRANSPORT`` or auto). ``auto`` negotiates a
+        shared-memory tensor data plane with locally *spawned* workers
+        only; ``shm`` attempts it for every worker; a failed negotiation
+        always falls back to TCP (counted in ``stats()["frontend"]
+        ["shm_fallbacks"]``). The worker's own policy (its env/CLI) can
+        refuse independently.
+    window:
+        Max batch frames in flight per worker connection (default:
+        ``$REPRO_RPC_WINDOW`` or 8).
+    shm_bytes:
+        Per-direction shm ring size in bytes (default:
+        ``$REPRO_RPC_SHM_BYTES`` or 64 MiB).
     ship_artifacts:
         Ship held compiled artifacts to workers at (re-)registration.
         Default: on, unless ``REPRO_SHIP_ARTIFACTS=0``.
@@ -578,6 +891,9 @@ class ClusterFrontend:
                  pool_capacity: int = 64, fuse: bool | str = "auto",
                  ship_artifacts: bool | None = None,
                  token: str | None = None,
+                 transport: str | None = None,
+                 window: int | None = None,
+                 shm_bytes: int | None = None,
                  start_method: str = "spawn",
                  spawn_timeout: float = 120.0,
                  shutdown_grace: float = 10.0,
@@ -613,6 +929,10 @@ class ClusterFrontend:
         self.n_workers = len(specs)
         self.n_remote = len(specs) - n_local
         self.ship_artifacts = ship_artifacts
+        self.transport = rpc.transport_mode(transport)
+        self.window = rpc.window_size(window)
+        self._shm_bytes = (rpc.shm_ring_bytes(shm_bytes)
+                           if self.transport in ("shm", "auto") else None)
         self.registry_spec = registry if isinstance(registry, str) else None
         self.registry_kwargs = dict(registry_kwargs or {})
         self.local_registry = resolve_registry(registry, registry_kwargs)
@@ -641,9 +961,13 @@ class ClusterFrontend:
         local_spawner = (LocalSpawner(self.registry_spec,
                                       self.registry_kwargs,
                                       self._server_kwargs, local_token,
-                                      start_method=start_method)
+                                      start_method=start_method,
+                                      transport=self.transport,
+                                      shm_bytes=self._shm_bytes)
                          if n_local else None)
-        remote_spawner = RemoteSpawner(token) if self.n_remote else None
+        remote_spawner = (RemoteSpawner(token, transport=self.transport,
+                                        shm_bytes=self._shm_bytes)
+                          if self.n_remote else None)
         # Launch every local process before waiting on any port: worker
         # cold start (fresh interpreter + jax import) is seconds each, and
         # overlapping the spawns makes frontend startup cost ~one cold
@@ -662,7 +986,8 @@ class ClusterFrontend:
                     spawned = remote_spawner.attach(idx, spec[0], spec[1],
                                                     spawn_timeout)
                 self._handles.append(_WorkerHandle(idx, spawned, self._ids,
-                                                   self._note_death))
+                                                   self._note_death,
+                                                   window=self.window))
         except Exception:
             for h in self._handles:
                 h.close()
@@ -890,12 +1215,22 @@ class ClusterFrontend:
     def submit(self, tenant_name: str, buffers: Mapping[str, Any]) -> Future:
         """RPC front on ``RegionServer.submit``: returns a Future of the
         output buffer dict. A worker death mid-flight requeues the request
-        to a sibling (once) before surfacing the failure."""
-        record = self.tenant(tenant_name)
-        with self._lock:
-            if self._closed:
-                raise RuntimeError(f"frontend {self.name!r} is closed")
-            record.requests += 1
+        to a sibling (once) before surfacing the failure.
+
+        This is the frontend's hot path and it takes NO frontend-wide
+        lock: the tenant lookup is a GIL-atomic dict read, the closed
+        check a plain bool, and the request counter a racy-benign
+        increment — many submitting threads proceed in parallel straight
+        into their worker's submit queue (the per-worker handoff is the
+        only synchronization, and it is a queue append).
+        """
+        record = self._tenants.get(tenant_name)
+        if record is None:
+            raise KeyError(f"unknown tenant {tenant_name!r}; registered: "
+                           f"{sorted(self._tenants)}")
+        if self._closed:
+            raise RuntimeError(f"frontend {self.name!r} is closed")
+        record.requests += 1
         outer: Future = Future()
         self._submit_attempt(record, dict(buffers), outer, retries=1)
         return outer
@@ -904,8 +1239,7 @@ class ClusterFrontend:
                         outer: Future, retries: int) -> None:
         try:
             widx = self._worker_for(record)
-            inner = self._handles[widx].request_async(
-                {"op": "submit", "tenant": record.name, "buffers": buffers})
+            inner = self._handles[widx].submit_async(record.name, buffers)
         except WorkerDied as exc:
             self._retry_or_fail(record, buffers, outer, retries, exc,
                                 {record.worker} if record.worker is not None
@@ -1006,17 +1340,26 @@ class ClusterFrontend:
             hydrated_inband += s["worker"].get("hydrated_inband", 0)
         # Per-worker wire totals as observed from the frontend side of each
         # connection: REAL byte counts in both directions (rpc.RpcConnection
-        # accounts frame sizes, not message counts), so artifact-shipping
-        # and request traffic are attributable per worker.
+        # accounts frame sizes, not message counts), codec time
+        # (encode/decode seconds), shm data-plane bytes, and the
+        # dispatcher's framing stats (frames sent, entries per frame,
+        # in-flight window occupancy, timeouts) — so a millisecond of
+        # per-request overhead is attributable to codec, framing or
+        # transport per worker, not a wall-clock mystery.
         wire: dict[int, dict] = {}
         wire_total = {"bytes_sent": 0, "bytes_received": 0,
-                      "messages_sent": 0, "messages_received": 0}
+                      "messages_sent": 0, "messages_received": 0,
+                      "encode_seconds": 0.0, "decode_seconds": 0.0,
+                      "shm_bytes_sent": 0, "shm_bytes_received": 0,
+                      "frames_sent": 0, "entries_sent": 0, "timeouts": 0}
+        shm_fallbacks = 0
         for h in self._handles:
-            w = h.conn.wire_stats()
-            wire[h.idx] = {**w, "kind": h.kind,
+            w = {**h.conn.wire_stats(), **h.dispatch_stats()}
+            wire[h.idx] = {**w, "kind": h.kind, "shm_fallback": h.shm_fallback,
                            "address": f"{h.address[0]}:{h.address[1]}"}
             for k in wire_total:
                 wire_total[k] += w[k]
+            shm_fallbacks += 1 if h.shm_fallback else 0
         with self._lock:
             tenants = {r.name: {"worker": r.worker, "requests": r.requests,
                                 "has_artifact": r.artifact is not None}
@@ -1032,6 +1375,9 @@ class ClusterFrontend:
                 "artifact_bytes_shipped": self.artifact_bytes_shipped,
                 "pin_groups_shipped": self.pin_groups_shipped,
                 "ship_artifacts": self.ship_artifacts,
+                "transport": self.transport,
+                "window": self.window,
+                "shm_fallbacks": shm_fallbacks,
                 "wire": wire_total,
             }
         return {"frontend": frontend, "tenants": tenants,

@@ -99,6 +99,15 @@ class ServerMetrics:
             self.queue_depth_last = queue_depth
             self.queue_depth_peak = max(self.queue_depth_peak, queue_depth)
 
+    def on_admit_many(self, n: int, queue_depth: int) -> None:
+        """One batch-frame admission: ``n`` requests entered the queue at
+        once (the cluster wire path admits a whole frame under a single
+        lock acquisition — one metrics event to match)."""
+        with self._lock:
+            self.admitted += n
+            self.queue_depth_last = queue_depth
+            self.queue_depth_peak = max(self.queue_depth_peak, queue_depth)
+
     def on_batch(self, occupancy: int, coalesced: bool = True) -> None:
         """Record one dispatched admission group.
 

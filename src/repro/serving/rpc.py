@@ -5,36 +5,44 @@ things from a wire protocol, and nothing a heavyweight RPC stack would add:
 
 * **Framing** — one message per frame, length-prefixed (``struct``
   big-endian), so a reader never has to guess where a message ends. A
-  frame is::
+  frame body is::
 
-      [8B total] [4B header len] [header JSON utf-8]
-                 [8B blob0 len] [blob0] [8B blob1 len] [blob1] ...
+      [1B codec tag 'J'|'B'] [4B header len] [header]
+      [4B blob count] { [1B placement] [payload] } * count
+
+  where placement ``0`` inlines the blob (``[8B len] [bytes]``) and
+  placement ``1`` references the connection's shared-memory ring
+  (``[8B absolute pos] [8B len]`` — see :mod:`repro.serving.shm`). The
+  codec tag selects the header encoding: ``'J'`` is the JSON pytree
+  skeleton (control frames: handshake, register, stats), ``'B'`` is the
+  compact struct-packed binary codec below (the submit/result hot path,
+  where JSON encode dominated per-request cost).
 
 * **A pytree/tensor codec** — requests and replies carry buffer dicts whose
   leaves are jax/numpy arrays (including ``bfloat16`` and 0-d scalars),
   nested arbitrarily in dicts/lists/tuples. :func:`encode` walks the tree
-  into a JSON-able skeleton plus a list of raw binary blobs (array bytes out
+  into a header skeleton plus a list of raw binary blobs (array bytes out
   of ``ndarray.tobytes()``; ``bytes`` values pass through untouched — that
   is how ``.aot`` artifact payloads ship in-band), and :func:`decode`
   rebuilds it exactly: tuples stay tuples, dict keys keep their types,
   arrays come back as numpy with the recorded dtype/shape. Every blob an
   array node references is validated against ``dtype × shape`` before
   ``frombuffer`` sees it — a disagreeing length is a :class:`ProtocolError`,
-  never a numpy traceback from half-parsed attacker-controlled bytes.
+  never a numpy traceback from half-parsed attacker-controlled bytes. The
+  binary header codec holds the same line: truncated nodes, bad tags,
+  overrunning strings and bogus blob indices all surface as
+  :class:`ProtocolError`, never a raw ``struct.error``.
 
 * **Concurrent request/reply** — every message carries a caller-chosen
-  ``id``; :class:`RpcConnection` serializes *writes* with a lock and lets a
-  single reader thread dispatch replies by id, so many in-flight requests
-  share one socket (which is what lets a worker's ``RegionServer`` coalesce
-  requests that arrived over the same connection).
+  ``id``; :class:`RpcConnection` serializes *writes* with a lock held only
+  around ``sendall`` (frames are encoded outside it, so a slow encode
+  never convoys other senders) and lets a single reader thread dispatch
+  replies by id, so many in-flight requests share one socket.
 
 * **A handshake** — the first exchange on a fresh connection
   (:func:`client_handshake` / :func:`server_handshake`) pins the protocol
   version and, when the listener was started with a token, authenticates
-  the peer. Remote workers (``python -m repro.serving.worker``) accept TCP
-  connections from anywhere they are bound; the token is what keeps a
-  stray client from registering tenants or submitting work. Auth failures
-  surface as :class:`AuthError` on both sides.
+  the peer. Auth failures surface as :class:`AuthError` on both sides.
 
 Array payloads are decoded to **numpy** (zero-copy ``frombuffer`` + reshape,
 then a writable copy): the consumer is always about to hand them to jax,
@@ -43,7 +51,16 @@ registration) without an extra conversion step here.
 
 The frame cap defaults to :data:`MAX_FRAME_BYTES` (8 GiB) and is
 configurable via ``REPRO_RPC_MAX_FRAME`` (bytes) so deployments can bound
-what a corrupt or hostile length prefix may allocate.
+what a corrupt or hostile length prefix may allocate. Transport knobs —
+``REPRO_RPC_TRANSPORT`` (``tcp|shm|auto``), ``REPRO_RPC_WINDOW``
+(pipelining window), ``REPRO_RPC_SHM_BYTES`` / ``REPRO_RPC_SHM_MIN_BYTES``
+(ring size / per-blob shm threshold) — are parsed here next to the wire
+format they configure.
+
+The connection accounts real wire traffic in both directions plus codec
+time (``encode_seconds`` / ``decode_seconds``) and shm data-plane bytes,
+so a millisecond of per-request overhead is attributable to framing,
+codec, or transport instead of vanishing into a wall-clock delta.
 """
 from __future__ import annotations
 
@@ -59,6 +76,9 @@ import numpy as np
 
 _U32 = struct.Struct(">I")
 _U64 = struct.Struct(">Q")
+_I64 = struct.Struct(">q")
+_F64 = struct.Struct(">d")
+_SHM_REF = struct.Struct(">QQ")
 
 #: Default frame cap: a frame larger than this is a protocol error, not a
 #: request — refuse it instead of trying to allocate whatever a corrupt
@@ -68,16 +88,30 @@ _U64 = struct.Struct(">Q")
 MAX_FRAME_BYTES = 1 << 33
 
 _MAX_FRAME_ENV = "REPRO_RPC_MAX_FRAME"
+_TRANSPORT_ENV = "REPRO_RPC_TRANSPORT"
+_WINDOW_ENV = "REPRO_RPC_WINDOW"
+_SHM_BYTES_ENV = "REPRO_RPC_SHM_BYTES"
+_SHM_MIN_ENV = "REPRO_RPC_SHM_MIN_BYTES"
 
 #: Version pinned by the connection handshake. Bump when frames stop being
 #: mutually intelligible; the handshake turns a skew into a loud
 #: :class:`ProtocolError` instead of a hang or a garbage decode.
-PROTOCOL_VERSION = 1
+#: v2: codec-tagged frames, counted blob section with shm placements,
+#: binary header codec, batch submit/result ops.
+PROTOCOL_VERSION = 2
 
 #: Frame cap applied to the *hello* frame specifically: an unauthenticated
 #: peer gets 64 KiB to state its business, not the multi-GiB general cap —
 #: pre-auth allocation must not be attacker-sized.
 HELLO_MAX_BYTES = 1 << 16
+
+#: Frame codec tags (the frame's first body byte — the "magic").
+CODEC_JSON = 0x4A      # 'J'
+CODEC_BINARY = 0x42    # 'B'
+
+#: Blob placements inside the frame's blob section.
+_PLACE_INLINE = 0
+_PLACE_SHM = 1
 
 
 def max_frame_bytes() -> int:
@@ -105,6 +139,62 @@ def max_frame_bytes() -> int:
     return cap
 
 
+def transport_mode(explicit: str | None = None) -> str:
+    """Resolve the transport selection: explicit arg, else env, else auto.
+
+    ``tcp`` never sets up a shared-memory data plane; ``shm`` attempts it
+    for every worker (falling back to tcp, counted, when a segment cannot
+    attach); ``auto`` attempts it only for locally *spawned* workers —
+    the one case where same-host is guaranteed rather than asserted.
+    """
+    raw = explicit if explicit is not None \
+        else os.environ.get(_TRANSPORT_ENV, "auto")
+    mode = str(raw).strip().lower()
+    if mode not in ("tcp", "shm", "auto"):
+        raise ValueError(
+            f"transport must be tcp|shm|auto, got {raw!r} "
+            f"(from {_TRANSPORT_ENV} when not passed explicitly)")
+    return mode
+
+
+def window_size(explicit: int | None = None) -> int:
+    """Pipelining window: max batch frames in flight per connection."""
+    raw = explicit if explicit is not None \
+        else os.environ.get(_WINDOW_ENV, "8")
+    try:
+        window = int(raw)
+    except (TypeError, ValueError):
+        raise ValueError(
+            f"{_WINDOW_ENV}={raw!r} is not an integer window") from None
+    if window < 1:
+        raise ValueError(f"pipelining window must be >= 1, got {window}")
+    return window
+
+
+def shm_ring_bytes(explicit: int | None = None) -> int:
+    """Per-direction shm ring size (``REPRO_RPC_SHM_BYTES``, default 64 MiB)."""
+    from .shm import DEFAULT_RING_BYTES
+
+    raw = explicit if explicit is not None \
+        else os.environ.get(_SHM_BYTES_ENV, str(DEFAULT_RING_BYTES))
+    try:
+        size = int(raw)
+    except (TypeError, ValueError):
+        raise ValueError(
+            f"{_SHM_BYTES_ENV}={raw!r} is not an integer byte count") from None
+    if size < 1 << 12:
+        raise ValueError(f"shm ring of {size} bytes is too small to be useful")
+    return size
+
+
+def _shm_min_bytes() -> int:
+    """Per-blob threshold below which shm placement is not worth the ack."""
+    try:
+        return max(0, int(os.environ.get(_SHM_MIN_ENV, "1024")))
+    except ValueError:
+        return 1024
+
+
 class ConnectionClosed(ConnectionError):
     """The peer closed the socket (EOF mid-frame or before one)."""
 
@@ -117,7 +207,7 @@ class AuthError(ProtocolError):
     """The handshake failed authentication (missing or wrong token)."""
 
 
-# --------------------------------------------------------------------- codec
+# ---------------------------------------------------------------- JSON codec
 
 def _enc(obj: Any, blobs: list[bytes]) -> Any:
     if obj is None or isinstance(obj, (bool, str)):
@@ -150,6 +240,26 @@ def _blob(blobs: list[bytes], idx: Any) -> bytes:
     return blobs[idx]
 
 
+def _make_array(dtype_name: Any, shape: Any, blob: bytes) -> np.ndarray:
+    """Validated array materialization shared by both header codecs."""
+    # np.dtype resolves "bfloat16" etc. because jax imports ml_dtypes,
+    # which registers its extension dtypes with numpy.
+    dtype = np.dtype(dtype_name)
+    if not isinstance(shape, list) or not all(
+            isinstance(d, int) and not isinstance(d, bool) and d >= 0
+            for d in shape):
+        raise ProtocolError(f"array node has invalid shape {shape!r}")
+    want = dtype.itemsize
+    for d in shape:
+        want *= d
+    if len(blob) != want:
+        raise ProtocolError(
+            f"array blob of {len(blob)} bytes disagrees with "
+            f"dtype {dtype} x shape {tuple(shape)} ({want} bytes)")
+    arr = np.frombuffer(blob, dtype=dtype)
+    return arr.reshape(tuple(shape)).copy()
+
+
 def _dec(node: Any, blobs: list[bytes]) -> Any:
     t = node["t"]
     if t == "p":
@@ -163,36 +273,307 @@ def _dec(node: Any, blobs: list[bytes]) -> Any:
     if t == "d":
         return {_dec(k, blobs): _dec(v, blobs) for k, v in node["v"]}
     if t == "a":
-        # np.dtype resolves "bfloat16" etc. because jax imports ml_dtypes,
-        # which registers its extension dtypes with numpy.
-        dtype = np.dtype(node["d"])
-        shape = node["s"]
-        if not isinstance(shape, list) or not all(
-                isinstance(d, int) and not isinstance(d, bool) and d >= 0
-                for d in shape):
-            raise ProtocolError(f"array node has invalid shape {shape!r}")
-        blob = _blob(blobs, node["i"])
-        want = dtype.itemsize
-        for d in shape:
-            want *= d
-        if len(blob) != want:
-            raise ProtocolError(
-                f"array blob of {len(blob)} bytes disagrees with "
-                f"dtype {dtype} x shape {tuple(shape)} ({want} bytes)")
-        arr = np.frombuffer(blob, dtype=dtype)
-        return arr.reshape(tuple(shape)).copy()
+        return _make_array(node["d"], node["s"], _blob(blobs, node["i"]))
     raise ProtocolError(f"unknown codec node type {t!r}")
 
 
-def encode(obj: Any) -> bytes:
-    """Serialize ``obj`` (JSON-able skeleton + binary tensor blobs) to a frame body."""
+# -------------------------------------------------------------- binary codec
+#
+# The hot-path header encoding: one tag byte per node, fixed-width scalars,
+# u32-counted containers. A submit/result frame's header is a few hundred
+# bytes of struct packing instead of a json.dumps over a nested node tree —
+# measured at roughly an order of magnitude less encode time for typical
+# batch frames, which matters because encode used to run under the write
+# lock and now merely runs per frame instead of per request.
+
+_B_NONE = 0x00
+_B_FALSE = 0x01
+_B_TRUE = 0x02
+_B_INT = 0x03       # 8B signed big-endian
+_B_FLOAT = 0x04     # 8B IEEE double
+_B_STR = 0x05       # u32 len + utf-8
+_B_BYTES = 0x06     # u32 blob index
+_B_TUPLE = 0x07     # u32 count + nodes
+_B_LIST = 0x08      # u32 count + nodes
+_B_DICT = 0x09      # u32 count + (key node, value node) pairs
+_B_ARRAY = 0x0A     # u32 blob idx, u8 dtype len + ascii, u8 ndim, u32*dims
+
+
+def _benc(obj: Any, out: list[bytes], blobs: list[bytes]) -> None:
+    if obj is None:
+        out.append(b"\x00")
+    elif obj is False:
+        out.append(b"\x01")
+    elif obj is True:
+        out.append(b"\x02")
+    elif isinstance(obj, int) and not isinstance(obj, np.generic):
+        try:
+            out.append(bytes((_B_INT,)) + _I64.pack(obj))
+        except struct.error:
+            raise TypeError(
+                f"rpc binary codec cannot encode int {obj!r} "
+                "(exceeds 64-bit range; use the json codec)") from None
+    elif isinstance(obj, float) and not isinstance(obj, np.generic):
+        out.append(bytes((_B_FLOAT,)) + _F64.pack(obj))
+    elif isinstance(obj, str):
+        raw = obj.encode("utf-8")
+        out.append(struct.pack(">BI", _B_STR, len(raw)))
+        out.append(raw)
+    elif isinstance(obj, (bytes, bytearray, memoryview)):
+        blobs.append(bytes(obj))
+        out.append(struct.pack(">BI", _B_BYTES, len(blobs) - 1))
+    elif isinstance(obj, tuple):
+        out.append(struct.pack(">BI", _B_TUPLE, len(obj)))
+        for x in obj:
+            _benc(x, out, blobs)
+    elif isinstance(obj, list):
+        out.append(struct.pack(">BI", _B_LIST, len(obj)))
+        for x in obj:
+            _benc(x, out, blobs)
+    elif isinstance(obj, dict):
+        out.append(struct.pack(">BI", _B_DICT, len(obj)))
+        for k, v in obj.items():
+            _benc(k, out, blobs)
+            _benc(v, out, blobs)
+    elif hasattr(obj, "shape") and hasattr(obj, "dtype"):
+        arr = np.asarray(obj)
+        blobs.append(arr.tobytes())
+        dt = str(arr.dtype).encode("ascii")
+        out.append(struct.pack(">BI", _B_ARRAY, len(blobs) - 1))
+        out.append(struct.pack(">B", len(dt)))
+        out.append(dt)
+        out.append(struct.pack(">B", arr.ndim))
+        if arr.ndim:
+            out.append(struct.pack(f">{arr.ndim}I", *arr.shape))
+    else:
+        raise TypeError(
+            f"rpc codec cannot encode {type(obj).__name__}: {obj!r}")
+
+
+def _bdec(data: bytes, pos: int, blobs: list[bytes]) -> tuple[Any, int]:
+    if pos >= len(data):
+        raise ProtocolError("binary header: truncated node (no tag byte)")
+    tag = data[pos]
+    pos += 1
+    if tag == _B_NONE:
+        return None, pos
+    if tag == _B_FALSE:
+        return False, pos
+    if tag == _B_TRUE:
+        return True, pos
+    if tag == _B_INT:
+        if pos + 8 > len(data):
+            raise ProtocolError("binary header: truncated int node")
+        return _I64.unpack_from(data, pos)[0], pos + 8
+    if tag == _B_FLOAT:
+        if pos + 8 > len(data):
+            raise ProtocolError("binary header: truncated float node")
+        return _F64.unpack_from(data, pos)[0], pos + 8
+    if tag == _B_STR:
+        if pos + 4 > len(data):
+            raise ProtocolError("binary header: truncated string length")
+        (n,) = _U32.unpack_from(data, pos)
+        pos += 4
+        if pos + n > len(data):
+            raise ProtocolError(
+                f"binary header: string of {n} bytes overruns the header")
+        try:
+            return data[pos:pos + n].decode("utf-8"), pos + n
+        except UnicodeDecodeError as exc:
+            raise ProtocolError(
+                f"binary header: string is not valid utf-8 ({exc})") from exc
+    if tag == _B_BYTES:
+        if pos + 4 > len(data):
+            raise ProtocolError("binary header: truncated blob index")
+        (idx,) = _U32.unpack_from(data, pos)
+        return _blob(blobs, idx), pos + 4
+    if tag in (_B_TUPLE, _B_LIST, _B_DICT):
+        if pos + 4 > len(data):
+            raise ProtocolError("binary header: truncated container count")
+        (n,) = _U32.unpack_from(data, pos)
+        pos += 4
+        # Each element costs >= 1 byte, so a count beyond the remaining
+        # header is a lie — fail fast instead of looping 4 billion times.
+        if n > len(data) - pos:
+            raise ProtocolError(
+                f"binary header: container count {n} overruns the header")
+        if tag == _B_DICT:
+            items = {}
+            for _ in range(n):
+                k, pos = _bdec(data, pos, blobs)
+                v, pos = _bdec(data, pos, blobs)
+                try:
+                    items[k] = v
+                except TypeError as exc:
+                    raise ProtocolError(
+                        f"binary header: unhashable dict key ({exc})") from exc
+            return items, pos
+        vals = []
+        for _ in range(n):
+            v, pos = _bdec(data, pos, blobs)
+            vals.append(v)
+        return (tuple(vals) if tag == _B_TUPLE else vals), pos
+    if tag == _B_ARRAY:
+        if pos + 5 > len(data):
+            raise ProtocolError("binary header: truncated array node")
+        (idx,) = _U32.unpack_from(data, pos)
+        dt_len = data[pos + 4]
+        pos += 5
+        if pos + dt_len + 1 > len(data):
+            raise ProtocolError("binary header: truncated array dtype")
+        try:
+            dtype_name = data[pos:pos + dt_len].decode("ascii")
+        except UnicodeDecodeError as exc:
+            raise ProtocolError(
+                f"binary header: array dtype is not ascii ({exc})") from exc
+        pos += dt_len
+        ndim = data[pos]
+        pos += 1
+        if pos + 4 * ndim > len(data):
+            raise ProtocolError("binary header: truncated array dims")
+        shape = list(struct.unpack_from(f">{ndim}I", data, pos)) if ndim \
+            else []
+        pos += 4 * ndim
+        try:
+            return _make_array(dtype_name, shape, _blob(blobs, idx)), pos
+        except ProtocolError:
+            raise
+        except (TypeError, ValueError) as exc:
+            raise ProtocolError(
+                f"malformed codec node ({type(exc).__name__}: {exc})") from exc
+    raise ProtocolError(f"unknown binary codec tag 0x{tag:02x}")
+
+
+# ------------------------------------------------------------ frame assembly
+
+def _encode_frame(obj: Any, codec: str = "json", ring=None,
+                  shm_min: int = 0) -> tuple[bytes, int]:
+    """Build one frame body; returns ``(body, shm_payload_bytes)``.
+
+    ``ring`` (the connection's send ring) routes blobs of at least
+    ``shm_min`` bytes through the shared-memory data plane; everything else
+    — and anything exceeding the ring's contiguity bound — is inlined.
+    Ring allocation order equals frame order because each ring has exactly
+    one producing thread (see :mod:`repro.serving.shm`).
+    """
     blobs: list[bytes] = []
-    header = json.dumps(_enc(obj, blobs)).encode("utf-8")
-    parts = [_U32.pack(len(header)), header]
+    if codec == "json":
+        header = json.dumps(_enc(obj, blobs)).encode("utf-8")
+        tag = CODEC_JSON
+    elif codec == "binary":
+        hparts: list[bytes] = []
+        _benc(obj, hparts, blobs)
+        header = b"".join(hparts)
+        tag = CODEC_BINARY
+    else:
+        raise ValueError(f"unknown frame codec {codec!r}")
+    parts = [bytes((tag,)), _U32.pack(len(header)), header,
+             _U32.pack(len(blobs))]
+    shm_bytes = 0
     for b in blobs:
-        parts.append(_U64.pack(len(b)))
-        parts.append(b)
-    return b"".join(parts)
+        if ring is not None and shm_min <= len(b) <= ring.max_blob:
+            pos = ring.alloc(len(b))
+            ring.write(pos, b)
+            parts.append(bytes((_PLACE_SHM,)))
+            parts.append(_SHM_REF.pack(pos, len(b)))
+            shm_bytes += len(b)
+        else:
+            parts.append(bytes((_PLACE_INLINE,)))
+            parts.append(_U64.pack(len(b)))
+            parts.append(b)
+    return b"".join(parts), shm_bytes
+
+
+def _decode_frame(data: bytes, ring=None) -> tuple[Any, int | None, int]:
+    """Parse one frame body; returns ``(obj, shm_ack_end, shm_bytes)``.
+
+    ``shm_ack_end`` is the highest absolute ring position this frame
+    consumed (``None`` for a pure-TCP frame) — the receiver acks it back
+    so the sender can reuse the span. Every malformed shape a peer could
+    produce raises :class:`ProtocolError`.
+    """
+    if len(data) < 1 + _U32.size:
+        raise ProtocolError("truncated frame: missing header length")
+    tag = data[0]
+    if tag not in (CODEC_JSON, CODEC_BINARY):
+        raise ProtocolError(
+            f"unknown frame codec tag 0x{tag:02x} (bad magic byte)")
+    (hlen,) = _U32.unpack_from(data, 1)
+    off = 1 + _U32.size
+    if off + hlen > len(data):
+        raise ProtocolError("truncated frame: header overruns body")
+    header_bytes = data[off:off + hlen]
+    off += hlen
+    if off + _U32.size > len(data):
+        raise ProtocolError("truncated frame: missing blob count")
+    (nblobs,) = _U32.unpack_from(data, off)
+    off += _U32.size
+    blobs: list[bytes] = []
+    ack_end: int | None = None
+    shm_bytes = 0
+    for _ in range(nblobs):
+        if off + 1 > len(data):
+            raise ProtocolError("truncated frame: missing blob placement")
+        placement = data[off]
+        off += 1
+        if placement == _PLACE_INLINE:
+            if off + _U64.size > len(data):
+                raise ProtocolError("truncated frame: blob length")
+            (blen,) = _U64.unpack_from(data, off)
+            off += _U64.size
+            if off + blen > len(data):
+                raise ProtocolError("truncated frame: blob overruns body")
+            blobs.append(data[off:off + blen])
+            off += blen
+        elif placement == _PLACE_SHM:
+            if off + _SHM_REF.size > len(data):
+                raise ProtocolError("truncated frame: shm blob reference")
+            pos, blen = _SHM_REF.unpack_from(data, off)
+            off += _SHM_REF.size
+            if ring is None:
+                raise ProtocolError(
+                    "frame references a shm blob but this connection has "
+                    "no ring attached")
+            blobs.append(ring.read(pos, blen))
+            shm_bytes += blen
+            end = pos + blen
+            ack_end = end if ack_end is None else max(ack_end, end)
+        else:
+            raise ProtocolError(f"unknown blob placement {placement!r}")
+    if off != len(data):
+        raise ProtocolError(
+            f"frame has {len(data) - off} trailing bytes after the blob "
+            "section")
+    if tag == CODEC_JSON:
+        try:
+            header = json.loads(header_bytes.decode("utf-8"))
+        except (ValueError, UnicodeDecodeError) as exc:
+            raise ProtocolError(
+                f"frame header is not valid JSON: {exc}") from exc
+        try:
+            return _dec(header, blobs), ack_end, shm_bytes
+        except ProtocolError:
+            raise
+        except (KeyError, TypeError, ValueError, RecursionError) as exc:
+            raise ProtocolError(
+                f"malformed codec node ({type(exc).__name__}: {exc})") from exc
+    try:
+        obj, end_pos = _bdec(header_bytes, 0, blobs)
+    except ProtocolError:
+        raise
+    except (struct.error, IndexError, TypeError, ValueError,
+            RecursionError) as exc:
+        raise ProtocolError(
+            f"malformed codec node ({type(exc).__name__}: {exc})") from exc
+    if end_pos != len(header_bytes):
+        raise ProtocolError(
+            f"binary header has {len(header_bytes) - end_pos} trailing bytes")
+    return obj, ack_end, shm_bytes
+
+
+def encode(obj: Any, codec: str = "json") -> bytes:
+    """Serialize ``obj`` to a frame body (all blobs inlined — no ring)."""
+    return _encode_frame(obj, codec=codec)[0]
 
 
 def decode(data: bytes) -> Any:
@@ -200,38 +581,13 @@ def decode(data: bytes) -> Any:
 
     Anything a peer could have actually put on the wire fails as
     :class:`ProtocolError` — malformed JSON, missing node keys, bogus
-    dtypes — never as a raw ``KeyError``/``TypeError`` from half-parsed
-    bytes (the reader loops treat ``ProtocolError`` as a fatal connection
-    error; an unexpected exception type would kill them silently).
+    dtypes, truncated binary nodes — never as a raw ``KeyError`` /
+    ``struct.error`` from half-parsed bytes (the reader loops treat
+    ``ProtocolError`` as a fatal connection error; an unexpected exception
+    type would kill them silently). Frames carrying shm blob references
+    require a connection with an attached ring and are rejected here.
     """
-    if len(data) < _U32.size:
-        raise ProtocolError("truncated frame: missing header length")
-    (hlen,) = _U32.unpack_from(data, 0)
-    off = _U32.size
-    if off + hlen > len(data):
-        raise ProtocolError("truncated frame: header overruns body")
-    try:
-        header = json.loads(data[off:off + hlen].decode("utf-8"))
-    except (ValueError, UnicodeDecodeError) as exc:
-        raise ProtocolError(f"frame header is not valid JSON: {exc}") from exc
-    off += hlen
-    blobs: list[bytes] = []
-    while off < len(data):
-        if off + _U64.size > len(data):
-            raise ProtocolError("truncated frame: blob length")
-        (blen,) = _U64.unpack_from(data, off)
-        off += _U64.size
-        if off + blen > len(data):
-            raise ProtocolError("truncated frame: blob overruns body")
-        blobs.append(data[off:off + blen])
-        off += blen
-    try:
-        return _dec(header, blobs)
-    except ProtocolError:
-        raise
-    except (KeyError, TypeError, ValueError) as exc:
-        raise ProtocolError(
-            f"malformed codec node ({type(exc).__name__}: {exc})") from exc
+    return _decode_frame(data)[0]
 
 
 # ------------------------------------------------------------------- framing
@@ -303,18 +659,28 @@ def recv_msg(sock: socket.socket) -> Any:
 class RpcConnection:
     """One socket shared by many in-flight requests.
 
-    Writes are serialized under a lock (frames must not interleave); reads
-    are left to exactly one owner — either a caller that knows it is the
-    only reader (:meth:`request`, the worker-side sync pattern) or a
-    dedicated reader thread that matches replies to requests by ``id`` (the
-    frontend pattern — see ``cluster._WorkerHandle``). Mixing both on one
+    Writes are serialized under a lock held only around the ``sendall``
+    (frames must not interleave, but encoding happens OUTSIDE the lock —
+    a large frame's codec work never convoys other senders); reads are
+    left to exactly one owner — either a caller that knows it is the only
+    reader (:meth:`request`, the worker-side sync pattern) or a dedicated
+    reader thread that matches replies to requests by ``id`` (the frontend
+    pattern — see ``cluster._WorkerHandle``). Mixing both on one
     connection is a caller bug.
 
     The connection accounts real wire traffic in both directions:
     ``bytes_sent`` / ``bytes_received`` are on-wire byte totals (length
-    prefixes included) and ``messages_sent`` / ``messages_received`` count
-    frames — the per-worker wire totals ``ClusterFrontend.stats()``
-    surfaces.
+    prefixes included; shm data-plane bytes are tallied separately in
+    ``shm_bytes_sent`` / ``shm_bytes_received``), ``messages_sent`` /
+    ``messages_received`` count frames, and ``encode_seconds`` /
+    ``decode_seconds`` accumulate codec time — the per-worker wire totals
+    ``ClusterFrontend.stats()`` surfaces.
+
+    When a shared-memory data plane is attached (:meth:`attach_rings`),
+    the connection handles the transport's bookkeeping frames internally:
+    :meth:`recv` acks consumed ring spans back to the peer and applies the
+    peer's acks to the send ring without ever surfacing either to the
+    caller.
     """
 
     def __init__(self, sock: socket.socket):
@@ -324,18 +690,72 @@ class RpcConnection:
         self._bytes_received = 0
         self._messages_sent = 0
         self._messages_received = 0
+        self._encode_seconds = 0.0
+        self._decode_seconds = 0.0
+        self._shm_bytes_sent = 0
+        self._shm_bytes_received = 0
+        self._send_ring = None
+        self._recv_ring = None
+        self._shm_min = _shm_min_bytes()
 
-    def send(self, obj: Any) -> None:
+    def attach_rings(self, send_ring, recv_ring) -> None:
+        """Arm the shared-memory data plane (both directions)."""
+        self._send_ring = send_ring
+        self._recv_ring = recv_ring
+
+    @property
+    def transport(self) -> str:
+        return "shm" if self._send_ring is not None else "tcp"
+
+    def send(self, obj: Any, codec: str = "json") -> None:
+        t0 = time.perf_counter()
+        ring = self._send_ring if codec == "binary" else None
+        body, shm_bytes = _encode_frame(obj, codec=codec, ring=ring,
+                                        shm_min=self._shm_min)
+        cap = max_frame_bytes()
+        if len(body) > cap:
+            raise ProtocolError(
+                f"frame of {len(body)} bytes exceeds the {cap}-byte cap "
+                f"(raise {_MAX_FRAME_ENV} if this payload is legitimate)")
+        enc_s = time.perf_counter() - t0
+        payload = _U64.pack(len(body)) + body
         with self._wlock:
-            self._bytes_sent += send_msg(self.sock, obj)
+            self.sock.sendall(payload)
+            self._bytes_sent += len(payload)
             self._messages_sent += 1
+            self._encode_seconds += enc_s
+            self._shm_bytes_sent += shm_bytes
 
     def recv(self, cap: int | None = None,
              deadline: float | None = None) -> Any:
-        msg, nbytes = recv_msg_sized(self.sock, cap=cap, deadline=deadline)
-        self._bytes_received += nbytes
-        self._messages_received += 1
-        return msg
+        while True:
+            (n,) = _U64.unpack(_recv_exact(self.sock, _U64.size, deadline))
+            eff_cap = max_frame_bytes() if cap is None else cap
+            if n > eff_cap:
+                raise ProtocolError(
+                    f"peer announced a {n}-byte frame exceeding the "
+                    f"{eff_cap}-byte cap ({_MAX_FRAME_ENV}); refusing")
+            data = _recv_exact(self.sock, n, deadline)
+            t0 = time.perf_counter()
+            msg, ack_end, shm_bytes = _decode_frame(data,
+                                                    ring=self._recv_ring)
+            self._decode_seconds += time.perf_counter() - t0
+            self._bytes_received += _U64.size + n
+            self._messages_received += 1
+            self._shm_bytes_received += shm_bytes
+            if ack_end is not None:
+                # The blobs were copied out of the ring during decode;
+                # release the span so the peer's next alloc can reuse it.
+                try:
+                    self.send({"op": "shm-ack", "pos": ack_end})
+                except OSError:
+                    pass        # connection is dying; the loop will notice
+            if isinstance(msg, dict) and msg.get("op") == "shm-ack":
+                ring, pos = self._send_ring, msg.get("pos")
+                if ring is not None and isinstance(pos, int) and pos >= 0:
+                    ring.ack(pos)
+                continue        # transport bookkeeping, not a message
+            return msg
 
     def request(self, obj: Any) -> Any:
         """Sync send-then-recv for single-reader callers (no id matching)."""
@@ -363,7 +783,12 @@ class RpcConnection:
         return {"bytes_sent": self._bytes_sent,
                 "bytes_received": self._bytes_received,
                 "messages_sent": self._messages_sent,
-                "messages_received": self._messages_received}
+                "messages_received": self._messages_received,
+                "encode_seconds": self._encode_seconds,
+                "decode_seconds": self._decode_seconds,
+                "shm_bytes_sent": self._shm_bytes_sent,
+                "shm_bytes_received": self._shm_bytes_received,
+                "transport": self.transport}
 
     def close(self) -> None:
         try:
@@ -371,6 +796,13 @@ class RpcConnection:
         except OSError:
             pass
         self.sock.close()
+        # Closing the rings wakes any sender blocked in alloc() with a
+        # ProtocolError, so a dead connection can never strand a
+        # dispatcher thread waiting for an ack that will not come.
+        for ring in (self._send_ring, self._recv_ring):
+            if ring is not None:
+                ring.close()
+        self._send_ring = self._recv_ring = None
 
 
 # ----------------------------------------------------------------- handshake

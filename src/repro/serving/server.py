@@ -297,8 +297,9 @@ class RegionServer:
         tenant.aot_sig = aot_sig
 
     # ------------------------------------------------------------ admission
-    def submit(self, tenant_name: str, buffers: Mapping[str, Any]) -> Future:
-        """Enqueue one request; resolves to the region's output dict."""
+    def _make_request(self, tenant_name: str,
+                      buffers: Mapping[str, Any]) -> "_Request":
+        """Validate + canonicalize one submission into a queue entry."""
         tenant = self.tenant(tenant_name)
         missing = [s for s in tenant.input_slots if s not in buffers]
         if missing:
@@ -309,16 +310,58 @@ class RegionServer:
                  if k in tenant.slot_map}
         key = (tenant.sig, tenant.payload_ids, buffers_signature(canon),
                tenant.kernel_mode)
-        req = _Request(tenant, buffers, canon, key)
+        return _Request(tenant, buffers, canon, key)
+
+    def submit(self, tenant_name: str, buffers: Mapping[str, Any]) -> Future:
+        """Enqueue one request; resolves to the region's output dict."""
+        req = self._make_request(tenant_name, buffers)
         with self._cv:
             if self._closed:
                 raise RuntimeError(f"server {self.name!r} is closed")
             self._queue.append(req)
-            tenant.requests += 1
+            req.tenant.requests += 1
             depth = len(self._queue)
             self._cv.notify_all()
         self.metrics.on_admit(depth)
         return req.future
+
+    def submit_many(self, items: list[tuple[str, Mapping[str, Any]]]
+                    ) -> list[Future]:
+        """Admit a whole batch frame under ONE queue-lock acquisition.
+
+        ``items`` is ``[(tenant_name, buffers), ...]``; the return list is
+        positionally aligned with it. Per-entry validation failures
+        (unknown tenant, missing input slots) come back as pre-failed
+        futures — one bad entry in a wire batch must not reject its
+        neighbours, and the cluster tier needs a per-entry error to route
+        back to the right caller.
+        """
+        results: list[Future] = []
+        admitted: list[_Request] = []
+        for tenant_name, buffers in items:
+            try:
+                req = self._make_request(tenant_name, buffers)
+            except Exception as exc:
+                fut: Future = Future()
+                fut.set_exception(exc)
+                results.append(fut)
+                continue
+            admitted.append(req)
+            results.append(req.future)
+        if admitted:
+            with self._cv:
+                if self._closed:
+                    err = RuntimeError(f"server {self.name!r} is closed")
+                    for req in admitted:
+                        req.future.set_exception(err)
+                    return results
+                for req in admitted:
+                    self._queue.append(req)
+                    req.tenant.requests += 1
+                depth = len(self._queue)
+                self._cv.notify_all()
+            self.metrics.on_admit_many(len(admitted), depth)
+        return results
 
     def serve(self, tenant_name: str, buffers: Mapping[str, Any],
               timeout: float | None = 60.0) -> dict:

@@ -81,6 +81,24 @@ class SpawnedWorker:
     conn: rpc.RpcConnection
     process: Any = None
     info: dict = dataclasses.field(default_factory=dict)   # handshake ack
+    transport: str = "tcp"         # negotiated data plane: "tcp" | "shm"
+    shm_fallback: bool = False     # shm was attempted and refused/failed
+
+
+def _negotiate_transport(conn: rpc.RpcConnection, attempt: bool,
+                         shm_bytes: int | None) -> tuple[str, bool]:
+    """Try the shm data plane right after the handshake (single-threaded
+    window: no reader thread exists yet, so the setup round-trip owns the
+    connection). Returns ``(transport, fallback)`` — a refusal or attach
+    failure is a TCP fallback, never an error; a *connection* failure
+    mid-negotiation propagates (dead worker, not a transport downgrade)."""
+    if not attempt:
+        return "tcp", False
+    from . import shm
+
+    if shm.negotiate_rings(conn, size=shm_bytes):
+        return "shm", False
+    return "tcp", True
 
 
 class SpawnError(RuntimeError):
@@ -116,11 +134,19 @@ class LocalSpawner:
     def __init__(self, registry_spec: str,
                  registry_kwargs: Mapping[str, Any] | None,
                  server_kwargs: Mapping[str, Any] | None,
-                 token: str | None, start_method: str = "spawn"):
+                 token: str | None, start_method: str = "spawn",
+                 transport: str = "auto", shm_bytes: int | None = None):
         self.registry_spec = registry_spec
         self.registry_kwargs = dict(registry_kwargs or {})
         self.server_kwargs = dict(server_kwargs or {})
         self.token = token
+        # "shm" and "auto" both attempt the shared-memory data plane for
+        # spawned workers — same host is guaranteed here. The worker's own
+        # policy (inherited env, since a spawned child shares os.environ
+        # semantics of its start method, or an explicit --transport) can
+        # still refuse, which lands as a counted TCP fallback.
+        self.transport = rpc.transport_mode(transport)
+        self.shm_bytes = shm_bytes
         self._ctx = multiprocessing.get_context(start_method)
 
     def launch(self, idx: int, name: str) -> tuple:
@@ -144,12 +170,15 @@ class LocalSpawner:
         conn = rpc.connect("127.0.0.1", port, timeout=timeout)
         try:
             info = rpc.client_handshake(conn, token=self.token)
+            transport, fallback = _negotiate_transport(
+                conn, self.transport in ("shm", "auto"), self.shm_bytes)
         except Exception:
             conn.close()
             raise
         return SpawnedWorker(idx=idx, kind="local",
                              address=("127.0.0.1", port), conn=conn,
-                             process=proc, info=info)
+                             process=proc, info=info,
+                             transport=transport, shm_fallback=fallback)
 
 
 class RemoteSpawner:
@@ -161,8 +190,15 @@ class RemoteSpawner:
     frontend surfaces in :meth:`ClusterFrontend.health`.
     """
 
-    def __init__(self, token: str | None):
+    def __init__(self, token: str | None, transport: str = "auto",
+                 shm_bytes: int | None = None):
         self.token = token
+        # Remote default is tcp: "auto" only means shm for workers we
+        # spawned ourselves (same host guaranteed). An explicit "shm"
+        # still *attempts* it remotely — a "remote" address can point at
+        # this host, and a wrong guess is just a counted fallback.
+        self.transport = rpc.transport_mode(transport)
+        self.shm_bytes = shm_bytes
 
     def attach(self, idx: int, host: str, port: int,
                timeout: float) -> SpawnedWorker:
@@ -175,8 +211,11 @@ class RemoteSpawner:
             ) from exc
         try:
             info = rpc.client_handshake(conn, token=self.token)
+            transport, fallback = _negotiate_transport(
+                conn, self.transport == "shm", self.shm_bytes)
         except Exception:
             conn.close()
             raise
         return SpawnedWorker(idx=idx, kind="remote", address=(host, port),
-                             conn=conn, info=info)
+                             conn=conn, info=info,
+                             transport=transport, shm_fallback=fallback)

@@ -146,6 +146,12 @@ def main(argv=None) -> int:
                     help="RegionServer admission window")
     ap.add_argument("--pool-capacity", type=int, default=64,
                     help="warm executable pool LRU bound")
+    ap.add_argument("--transport", default=None,
+                    choices=("tcp", "shm", "auto"),
+                    help="data-plane policy for THIS worker (default: "
+                         "$REPRO_RPC_TRANSPORT or auto): tcp refuses "
+                         "frontend shm-setup offers, shm/auto attach when "
+                         "the segments are reachable")
     args = ap.parse_args(argv)
 
     host, port = parse_bind(args.bind)
@@ -153,6 +159,7 @@ def main(argv=None) -> int:
                        if args.registry_kwargs else None)
     registry = resolve_registry(args.registry, registry_kwargs)
     node = WorkerNode(registry, host=host, port=port, token=args.token,
+                      transport=args.transport,
                       max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
                       pool_capacity=args.pool_capacity)
     if args.port_file:

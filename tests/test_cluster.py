@@ -9,6 +9,7 @@ repro.serving.worker`` over localhost TCP — no ``multiprocessing`` handle),
 which is exactly the multi-host attach path. Multi-worker soak lives behind
 the ``slow`` marker.
 """
+import itertools
 import json
 import os
 import pickle
@@ -26,11 +27,11 @@ from repro.core import (ReplayExecutor, TopologyMismatch,
                         executable_from_bytes,
                         executable_serialization_available,
                         topology_fingerprint, warmup_and_save)
-from repro.serving import (ClusterFrontend, ClusterRemoteError, RegionServer,
-                           StickyRouter, rpc)
-from repro.serving.cluster import WorkerNode, resolve_registry
+from repro.serving import (ClusterError, ClusterFrontend, ClusterRemoteError,
+                           RegionServer, ShmRing, StickyRouter, rpc)
+from repro.serving.cluster import WorkerNode, _WorkerHandle, resolve_registry
 from repro.serving.demo import DEMO_REGISTRY, demo_affine, demo_mix, demo_region
-from repro.serving.spawner import parse_worker_spec
+from repro.serving.spawner import SpawnedWorker, parse_worker_spec
 from repro.serving.worker import spawn_worker_subprocess
 
 REGISTRY_SPEC = "repro.serving.demo:DEMO_REGISTRY"
@@ -116,10 +117,16 @@ class TestRpcCodec:
 
 
 def _frame(header_obj, blobs=()):
-    """Hand-roll a frame body (adversarial tests build invalid ones)."""
+    """Hand-roll a v2 JSON frame body (adversarial tests build invalid ones).
+
+    Layout: ``[1B tag 'J'][u32 hlen][header][u32 nblobs]`` then per blob
+    ``[1B placement=inline][u64 len][bytes]``.
+    """
     header = json.dumps(header_obj).encode("utf-8")
-    parts = [struct.pack(">I", len(header)), header]
+    parts = [b"J", struct.pack(">I", len(header)), header,
+             struct.pack(">I", len(blobs))]
     for b in blobs:
+        parts.append(b"\x00")
         parts.append(struct.pack(">Q", len(b)))
         parts.append(b)
     return b"".join(parts)
@@ -135,7 +142,12 @@ class TestRpcFramingAdversarial:
 
     def test_header_overruns_body(self):
         with pytest.raises(rpc.ProtocolError, match="header overruns"):
-            rpc.decode(struct.pack(">I", 100) + b"{}")
+            rpc.decode(b"J" + struct.pack(">I", 100) + b"{}")
+
+    def test_bad_magic_tag_rejected(self):
+        with pytest.raises(rpc.ProtocolError, match="codec tag"):
+            rpc.decode(b"\x00" + struct.pack(">I", 2) + b"{}"
+                       + struct.pack(">I", 0))
 
     def test_truncated_blob_length(self):
         good = _frame({"t": "b", "i": 0}, [b"payload"])
@@ -192,7 +204,8 @@ class TestRpcFramingAdversarial:
             rpc.decode(bad)
 
     def test_non_json_header_is_protocol_error(self):
-        body = struct.pack(">I", 4) + b"\xff\xfe{{"
+        body = (b"J" + struct.pack(">I", 4) + b"\xff\xfe{{"
+                + struct.pack(">I", 0))
         with pytest.raises(rpc.ProtocolError, match="not valid JSON"):
             rpc.decode(body)
 
@@ -301,9 +314,16 @@ class TestRpcAccounting:
             # REAL byte symmetry: everything a put on the wire, b counted.
             assert a.bytes_sent == b.bytes_received
             assert b.bytes_received > 128 + 100     # not a message count
-            assert b.wire_stats() == {
-                "bytes_sent": 0, "bytes_received": b.bytes_received,
-                "messages_sent": 0, "messages_received": 2}
+            ws = b.wire_stats()
+            assert ws["bytes_sent"] == 0
+            assert ws["bytes_received"] == b.bytes_received
+            assert ws["messages_sent"] == 0
+            assert ws["messages_received"] == 2
+            assert ws["decode_seconds"] > 0.0
+            assert ws["transport"] == "tcp"
+            aw = a.wire_stats()
+            assert aw["encode_seconds"] > 0.0
+            assert aw["shm_bytes_sent"] == 0
         finally:
             a.close()
             b.close()
@@ -969,3 +989,482 @@ class TestCloseEscalation:
         fe.close()
         assert not proc.is_alive()
         assert proc.exitcode is not None           # reaped, not abandoned
+
+
+# ---------------------------------------------------------------------------
+# Binary header codec (no processes)
+# ---------------------------------------------------------------------------
+
+class TestBinaryCodec:
+    """The hot-path codec must be a bit-exact substitute for JSON framing:
+    same objects out, same blob discipline, smaller headers."""
+
+    def _roundtrip(self, obj):
+        return rpc.decode(rpc.encode(obj, codec="binary"))
+
+    def test_scalars_containers_and_tuple_keys(self):
+        obj = {"op": "submit_batch", "id": 3, "none": None, "flag": True,
+               "f": 2.5, "s": "text", "tup": (1, 2), "lst": [1, [2, 3]],
+               ("k", 1): "tuple-key", "neg": -(1 << 40)}
+        back = self._roundtrip(obj)
+        assert back == obj
+        assert isinstance(back["tup"], tuple)
+        assert isinstance(back["lst"], list)
+
+    def test_arrays_bytes_and_dtypes(self):
+        obj = {
+            "f32": jnp.asarray(np.arange(6, dtype=np.float32).reshape(2, 3)),
+            "bf16": jnp.asarray([[1.5, -2.0]], jnp.bfloat16),
+            "i32_0d": jnp.asarray(7, jnp.int32),
+            "blob": b"\x00\x01binary\xff",
+        }
+        back = self._roundtrip(obj)
+        assert back["blob"] == obj["blob"]
+        assert back["f32"].dtype == np.float32
+        np.testing.assert_array_equal(back["f32"], np.asarray(obj["f32"]))
+        assert str(back["bf16"].dtype) == "bfloat16"
+        assert back["i32_0d"].shape == () and int(back["i32_0d"]) == 7
+        back["f32"][0, 0] = 9.0          # decoded arrays stay writable copies
+
+    def test_parity_with_json_codec_on_a_submit_frame(self):
+        frame = {"op": "submit_batch", "entries": [
+            {"id": 11, "tenant": "t", "buffers":
+                {"x0": np.arange(12, dtype=np.float32).reshape(3, 4)}}]}
+        via_bin = rpc.decode(rpc.encode(frame, codec="binary"))
+        via_json = rpc.decode(rpc.encode(frame, codec="json"))
+        np.testing.assert_array_equal(
+            via_bin["entries"][0]["buffers"]["x0"],
+            via_json["entries"][0]["buffers"]["x0"])
+        assert via_bin["entries"][0]["id"] == via_json["entries"][0]["id"]
+        # the point of the codec: same bytes in the blobs, smaller header
+        assert len(rpc.encode(frame, codec="binary")) < \
+            len(rpc.encode(frame, codec="json"))
+
+    def test_out_of_range_int_points_at_json(self):
+        with pytest.raises(TypeError, match="64-bit"):
+            rpc.encode({"n": 1 << 70}, codec="binary")
+
+    def test_unencodable_rejected(self):
+        with pytest.raises(TypeError, match="cannot encode"):
+            rpc.encode({"fn": lambda: None}, codec="binary")
+
+
+def _bin_frame(header, blobs=()):
+    """Hand-roll a v2 binary frame body around a raw header byte string."""
+    parts = [b"B", struct.pack(">I", len(header)), header,
+             struct.pack(">I", len(blobs))]
+    for b in blobs:
+        parts.append(b"\x00")
+        parts.append(struct.pack(">Q", len(b)))
+        parts.append(b)
+    return b"".join(parts)
+
+
+class TestBinaryHeaderAdversarial:
+    """Every malformed binary header a peer could send must surface as
+    ProtocolError — never a struct.error / KeyError traceback."""
+
+    def test_unknown_tag(self):
+        with pytest.raises(rpc.ProtocolError, match="unknown binary codec"):
+            rpc.decode(_bin_frame(b"\x7f"))
+
+    def test_truncated_int_node(self):
+        with pytest.raises(rpc.ProtocolError, match="truncated int"):
+            rpc.decode(_bin_frame(b"\x03\x00\x00"))
+
+    def test_string_overruns_header(self):
+        header = b"\x05" + struct.pack(">I", 999) + b"ab"
+        with pytest.raises(rpc.ProtocolError, match="overruns the header"):
+            rpc.decode(_bin_frame(header))
+
+    def test_string_invalid_utf8(self):
+        header = b"\x05" + struct.pack(">I", 2) + b"\xff\xfe"
+        with pytest.raises(rpc.ProtocolError, match="not valid utf-8"):
+            rpc.decode(_bin_frame(header))
+
+    def test_container_count_lies(self):
+        header = b"\x08" + struct.pack(">I", 0xFFFF0000)
+        with pytest.raises(rpc.ProtocolError, match="container count"):
+            rpc.decode(_bin_frame(header))
+
+    def test_blob_index_out_of_range(self):
+        header = b"\x06" + struct.pack(">I", 3)
+        with pytest.raises(rpc.ProtocolError, match="out of range"):
+            rpc.decode(_bin_frame(header))
+
+    def test_trailing_header_bytes(self):
+        with pytest.raises(rpc.ProtocolError, match="trailing bytes"):
+            rpc.decode(_bin_frame(b"\x00\x00"))
+
+    def test_unhashable_dict_key(self):
+        # {[]: None} — a list node in key position decodes but cannot hash
+        header = (b"\x09" + struct.pack(">I", 1)
+                  + b"\x08" + struct.pack(">I", 0) + b"\x00")
+        with pytest.raises(rpc.ProtocolError, match="unhashable"):
+            rpc.decode(_bin_frame(header))
+
+    def test_bogus_array_dtype(self):
+        dt = b"no-such"
+        header = (b"\x0a" + struct.pack(">I", 0) + bytes([len(dt)]) + dt
+                  + bytes([1]) + struct.pack(">I", 4))
+        with pytest.raises(rpc.ProtocolError, match="malformed codec node"):
+            rpc.decode(_bin_frame(header, blobs=(b"\x00" * 16,)))
+
+    def test_array_blob_size_mismatch(self):
+        dt = b"float32"
+        header = (b"\x0a" + struct.pack(">I", 0) + bytes([len(dt)]) + dt
+                  + bytes([1]) + struct.pack(">I", 4))
+        with pytest.raises(rpc.ProtocolError, match="disagrees with"):
+            rpc.decode(_bin_frame(header, blobs=(b"\x00" * 3,)))
+
+    def test_shm_reference_without_a_ring(self):
+        # placement=1 blob on a ring-less decode: clean refusal, no deref
+        header = b"\x06" + struct.pack(">I", 0)
+        body = (b"B" + struct.pack(">I", len(header)) + header
+                + struct.pack(">I", 1) + b"\x01" + struct.pack(">QQ", 0, 16))
+        with pytest.raises(rpc.ProtocolError, match="no ring attached"):
+            rpc.decode(body)
+
+
+# ---------------------------------------------------------------------------
+# Shared-memory ring (no processes)
+# ---------------------------------------------------------------------------
+
+class TestShmRing:
+    def test_roundtrip_attach_and_stats(self):
+        ring = ShmRing.create(4096)
+        try:
+            pos = ring.alloc(100)
+            ring.write(pos, b"x" * 100)
+            assert ring.read(pos, 100) == b"x" * 100
+            # a second attachment sees the same bytes (the cross-process
+            # contract, exercised in-process)
+            peer = ShmRing.attach(ring.name, ring.size)
+            assert peer.read(pos, 100) == b"x" * 100
+            peer.close()
+            st = ring.stats()
+            assert st["allocated"] == 100 and st["outstanding"] == 100
+            ring.ack(pos + 100)
+            assert ring.stats()["outstanding"] == 0
+        finally:
+            ring.close()
+
+    def test_alloc_pads_to_segment_end_instead_of_wrapping(self):
+        ring = ShmRing.create(4096)
+        try:
+            a = ring.alloc(1500)
+            ring.ack(a + 1500)
+            b = ring.alloc(1500)
+            ring.ack(b + 1500)
+            c = ring.alloc(1500)            # 3000 + 1500 > 4096: must pad
+            assert c % ring.size == 0       # lands at the segment start
+            ring.write(c, b"z" * 1500)
+            assert ring.read(c, 1500) == b"z" * 1500
+        finally:
+            ring.close()
+
+    def test_full_ring_blocks_until_peer_acks(self):
+        ring = ShmRing.create(4096)
+        try:
+            first = ring.alloc(2000)
+            ring.alloc(2000)
+            released = threading.Event()
+
+            def _late_ack():
+                time.sleep(0.3)
+                released.set()
+                ring.ack(first + 2000)
+
+            threading.Thread(target=_late_ack, daemon=True).start()
+            t0 = time.monotonic()
+            pos = ring.alloc(2000, timeout=30)   # blocks until the ack
+            assert released.is_set()
+            assert time.monotonic() - t0 >= 0.2
+            assert pos % ring.size == 0
+        finally:
+            ring.close()
+
+    def test_oversized_blob_is_a_value_error(self):
+        ring = ShmRing.create(4096)
+        try:
+            with pytest.raises(ValueError, match="contiguity bound"):
+                ring.alloc(3000)                 # > size // 2
+        finally:
+            ring.close()
+
+    def test_reads_are_bounds_checked(self):
+        ring = ShmRing.create(4096)
+        try:
+            with pytest.raises(rpc.ProtocolError, match="sane segment span"):
+                ring.read(0, 10 ** 9)
+            with pytest.raises(rpc.ProtocolError, match="sane segment span"):
+                ring.read(-1, 4)
+            with pytest.raises(rpc.ProtocolError, match="overruns"):
+                ring.read(4090, 100)
+        finally:
+            ring.close()
+
+    def test_closed_ring_fails_allocators(self):
+        ring = ShmRing.create(4096)
+        ring.close()
+        with pytest.raises(rpc.ProtocolError, match="closed"):
+            ring.alloc(16)
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher: batching, pipelining window, reply demux (socketpair, no jax)
+# ---------------------------------------------------------------------------
+
+def _handle_pair(window=None):
+    """A _WorkerHandle wired to a fake worker: the test drives the peer
+    end of a socketpair with raw protocol frames."""
+    sa, sb = socket.socketpair()
+    deaths = []
+    handle = _WorkerHandle(
+        0,
+        SpawnedWorker(idx=0, kind="remote", address=("fake", 0),
+                      conn=rpc.RpcConnection(sa)),
+        itertools.count(1), deaths.append, window=window)
+    return handle, rpc.RpcConnection(sb), deaths
+
+
+class TestDispatcherWirePath:
+    def test_window_pressure_packs_and_replies_demux_out_of_order(self):
+        h, peer, _ = _handle_pair(window=1)
+        try:
+            f1 = h.submit_async("t", {})
+            frame1 = peer.recv()
+            assert frame1["op"] == "submit_batch"
+            assert len(frame1["entries"]) == 1
+            # window=1 with frame1 unanswered: these five must queue, and
+            # the dispatcher must NOT put another frame on the wire
+            futs = [h.submit_async("t", {"n": np.float32(i)})
+                    for i in range(5)]
+            time.sleep(0.25)
+            ds = h.dispatch_stats()
+            assert ds["inflight_frames"] == 1
+            assert ds["queued_entries"] == 5
+            # answering frame1 frees the window slot -> the backlog goes
+            # out pre-coalesced: five submissions, ONE frame
+            peer.send({"op": "result_batch", "entries": [
+                {"id": frame1["entries"][0]["id"], "out": {"ok": 1}}]},
+                codec="binary")
+            assert f1.result(30)["out"]["ok"] == 1
+            frame2 = peer.recv()
+            ids = [e["id"] for e in frame2["entries"]]
+            assert len(ids) == 5
+            # out-of-order completion: reply reversed, each future still
+            # resolves to ITS entry by id
+            peer.send({"op": "result_batch", "entries": [
+                {"id": m, "out": {"echo": m}} for m in reversed(ids)]},
+                codec="binary")
+            for fut, mid in zip(futs, ids):
+                got = fut.result(30)
+                assert got["id"] == mid and got["out"]["echo"] == mid
+            ds = h.dispatch_stats()
+            assert ds["frames_sent"] == 2 and ds["entries_sent"] == 6
+            assert ds["inflight_frames"] == 0 and ds["queued_entries"] == 0
+            assert ds["entries_per_frame"] == 3.0
+        finally:
+            h.close()
+            peer.close()
+
+    def test_error_entries_fail_only_their_future(self):
+        h, peer, _ = _handle_pair()
+        try:
+            f_ok = h.submit_async("t", {})
+            f_bad = h.submit_async("t", {})
+            got = []
+            while sum(len(f["entries"]) for f in got) < 2:
+                got.append(peer.recv())
+            mids = [e["id"] for f in got for e in f["entries"]]
+            peer.send({"op": "result_batch", "entries": [
+                {"id": mids[0], "out": {"y": 1}},
+                {"id": mids[1], "error": "KeyError: nope"}]}, codec="binary")
+            assert f_ok.result(30)["out"]["y"] == 1
+            with pytest.raises(ClusterRemoteError, match="nope"):
+                f_bad.result(30)
+            assert h.alive                  # a remote error is not a death
+        finally:
+            h.close()
+            peer.close()
+
+    def test_control_timeout_disowns_pending_and_is_counted(self):
+        h, peer, _ = _handle_pair()
+        try:
+            with pytest.raises(ClusterError, match="no reply"):
+                h.request({"op": "ping"}, timeout=0.3)
+            # the fixed leak: the demux table must NOT retain the entry
+            with h._lock:
+                assert not h._pending
+            assert h.dispatch_stats()["timeouts"] == 1
+            # the late reply arrives anyway; the reader drops it silently
+            late = peer.recv()
+            peer.send({"op": "result", "id": late["id"], "pong": True})
+
+            def _answer_next():
+                msg = peer.recv()
+                peer.send({"op": "result", "id": msg["id"], "pong": True})
+
+            t = threading.Thread(target=_answer_next, daemon=True)
+            t.start()
+            # ...and the connection is still healthy for the next request
+            assert h.request({"op": "ping"}, timeout=30)["pong"] is True
+            t.join(timeout=10)
+            assert h.alive
+        finally:
+            h.close()
+            peer.close()
+
+
+# ---------------------------------------------------------------------------
+# Batch admission (in-process RegionServer, no processes)
+# ---------------------------------------------------------------------------
+
+class TestSubmitManyAdmission:
+    def test_mixed_batch_is_positionally_aligned(self):
+        with RegionServer(max_batch=4, name="many") as server:
+            tdg = demo_region("many[0]")
+            server.register_tenant("m", tdg)
+            good_a, good_b = _bufs(300), _bufs(301)
+            futs = server.submit_many([
+                ("m", good_a),
+                ("ghost", good_a),                  # unknown tenant
+                ("m", {"x0": good_a["x0"]}),        # missing input slots
+                ("m", good_b),
+            ])
+            assert len(futs) == 4
+            _check(futs[0].result(300), tdg, good_a)
+            with pytest.raises(KeyError, match="ghost"):
+                futs[1].result(300)
+            with pytest.raises(KeyError, match="missing"):
+                futs[2].result(300)
+            _check(futs[3].result(300), tdg, good_b)
+            assert server.metrics.snapshot()["admitted"] >= 2
+
+
+# ---------------------------------------------------------------------------
+# Wire path on a live cluster (module-scoped frontend)
+# ---------------------------------------------------------------------------
+
+class TestWirePathCluster:
+    def test_burst_parity_and_wire_stats(self, frontend, shared_w):
+        tdg = demo_region("wire[0]")
+        frontend.register_tenant("wire", tdg, pinned={"w": shared_w})
+        before = frontend.stats()["frontend"]["wire"]
+        bufs_list = [{f"x{s}": jnp.asarray(
+            np.random.default_rng(700 + 10 * i + s)
+            .standard_normal((DIM, DIM)), jnp.float32) for s in range(2)}
+            for i in range(24)]
+        futs = [frontend.submit("wire", b) for b in bufs_list]
+        for b, f in zip(bufs_list, futs):
+            _check(f.result(300), tdg, {**b, "w": shared_w})
+        st = frontend.stats()
+        after = st["frontend"]["wire"]
+        # every submission went through the batch path, never one frame
+        # per request more than the burst size
+        assert after["entries_sent"] - before["entries_sent"] >= 24
+        assert after["frames_sent"] - before["frames_sent"] <= 24
+        assert after["frames_sent"] <= after["entries_sent"]
+        assert after["encode_seconds"] > 0.0
+        assert after["decode_seconds"] > 0.0
+        assert after["timeouts"] == 0
+        fr = st["frontend"]
+        assert fr["transport"] in ("tcp", "shm", "auto")
+        assert fr["window"] >= 1
+        for row in st["wire"].values():
+            assert row["window"] == fr["window"]
+            assert row["entries_per_frame"] >= 1.0 or row["frames_sent"] == 0
+            assert row["transport"] in ("tcp", "shm")
+            assert row["inflight_frames"] == 0      # drained after the burst
+
+
+# ---------------------------------------------------------------------------
+# Shared-memory transport end to end (own 1-worker frontends)
+# ---------------------------------------------------------------------------
+
+class TestShmTransport:
+    def test_shm_data_plane_carries_tensors_with_parity(self):
+        big = 32                # 32x32 f32 = 4 KiB/blob: over the shm floor
+        with ClusterFrontend(workers=1, registry=REGISTRY_SPEC,
+                             transport="shm", name="test-shm") as fe:
+            row = fe.stats()["wire"][0]
+            if row["transport"] != "shm":
+                pytest.skip("shm attach refused on this host")
+            tdg = demo_region("shm[0]")
+            fe.register_tenant("sm", tdg)
+            rng = np.random.default_rng(42)
+            bufs = {k: jnp.asarray(rng.standard_normal((big, big)),
+                                   jnp.float32) for k in ("x0", "x1", "w")}
+            out = fe.serve("sm", bufs)
+            _check(out, tdg, bufs)
+            st = fe.stats()
+            row = st["wire"][0]
+            assert row["shm_bytes_sent"] >= 3 * big * big * 4
+            assert row["shm_bytes_received"] > 0    # replies rode shm too
+            assert st["frontend"]["shm_fallbacks"] == 0
+            assert st["frontend"]["wire"]["shm_bytes_sent"] == \
+                row["shm_bytes_sent"]
+
+    def test_tcp_pinned_worker_forces_counted_fallback(self, monkeypatch):
+        # The spawned worker inherits the env pin and refuses the rings;
+        # the frontend must land on tcp, count it, and keep full parity.
+        monkeypatch.setenv("REPRO_RPC_TRANSPORT", "tcp")
+        with ClusterFrontend(workers=1, registry=REGISTRY_SPEC,
+                             transport="shm", name="test-shm-fb") as fe:
+            st = fe.stats()
+            assert st["wire"][0]["transport"] == "tcp"
+            assert st["frontend"]["shm_fallbacks"] == 1
+            tdg = demo_region("shmfb[0]")
+            fe.register_tenant("fb", tdg)
+            bufs = _bufs(500)
+            _check(fe.serve("fb", bufs), tdg, bufs)
+            assert fe.stats()["wire"][0]["shm_bytes_sent"] == 0
+
+
+class TestShmSetupRefusal:
+    """shm-setup is peer-controlled input: a bogus offer must be refused
+    with a reason on a connection that stays fully usable."""
+
+    def _spin_node(self, **kwargs):
+        node = WorkerNode(DEMO_REGISTRY, max_batch=1, **kwargs)
+        t = threading.Thread(target=node.serve_forever, daemon=True)
+        t.start()
+        return node, t
+
+    def _shutdown(self, conn, t):
+        conn.request({"op": "shutdown", "id": 99})
+        conn.close()
+        t.join(timeout=10)
+
+    def test_unattachable_segments_refused_not_fatal(self):
+        node, t = self._spin_node()
+        conn = rpc.connect("127.0.0.1", node.port)
+        try:
+            rpc.client_handshake(conn)
+            reply = conn.request({"op": "shm-setup", "id": 7,
+                                  "tx": "repro-ring-no-such-segment",
+                                  "rx": "repro-ring-no-such-segment",
+                                  "size": 4096})
+            assert reply["attached"] is False
+            assert reply["reason"]
+            # the refusal must not poison the connection
+            assert conn.request({"op": "ping", "id": 8})["port"] == node.port
+        finally:
+            self._shutdown(conn, t)
+
+    def test_tcp_pinned_node_refuses_real_segments(self):
+        node, t = self._spin_node(transport="tcp")
+        conn = rpc.connect("127.0.0.1", node.port)
+        tx, rx = ShmRing.create(4096), ShmRing.create(4096)
+        try:
+            rpc.client_handshake(conn)
+            reply = conn.request({"op": "shm-setup", "id": 7,
+                                  "tx": tx.name, "rx": rx.name,
+                                  "size": 4096})
+            assert reply["attached"] is False
+            assert "tcp" in reply["reason"]
+        finally:
+            tx.close()
+            rx.close()
+            self._shutdown(conn, t)
