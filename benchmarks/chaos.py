@@ -1,0 +1,478 @@
+"""Chaos soak: seeded faults against the self-healing cluster tier.
+
+    PYTHONPATH=src python -m benchmarks.chaos [--smoke] [--out PATH]
+
+The self-healing machinery (heartbeat leases, supervised respawn, request
+deadlines, retry/backoff, load shedding — ``repro.serving.cluster`` +
+``repro.serving.faults``) is exercised end to end by a three-phase soak:
+
+* **baseline** — a clean 2-worker fleet serves warm-shipped tenants with
+  no faults armed; records throughput and checks exact parity against
+  ``ReplayExecutor``. This is the yardstick the recovered fleet is held
+  to.
+
+* **chaos** — a seeded :class:`~repro.serving.faults.FaultPlan` is
+  exported via ``REPRO_FAULT_PLAN`` before the fleet starts (workers
+  inherit it; the frontend arms it too), ``REPRO_QUEUE_BOUND`` bounds the
+  workers' admission queues, and a burst of deadline-bounded requests is
+  driven through while one worker is SIGKILLed mid-burst. The plan drops
+  a submit frame at a worker, drops a result frame at the frontend,
+  stalls a shm ring ack and delays sends — every recovery path (death
+  requeue, retry backoff, deadline shedding, queue shedding, ring-credit
+  self-healing, supervised warm respawn) runs in one soak. The gate is
+  the robustness contract: **every request resolves** — a correct result
+  (exact parity) or a *typed* error (``DeadlineExceeded`` / ``QueueFull``
+  / ``ClusterError``) — no hangs, no bare futures timeouts, no foreign
+  exceptions.
+
+* **recovery** — faults are disarmed, the supervisor has respawned the
+  killed slot, and the same tenants are driven again. Gates: the
+  replacement came back *warm* (the respawn re-shipped the frontend-held
+  artifact: zero intern misses on the replacement, ``aot_served >= 1``,
+  zero hydrate failures), results keep exact parity, and throughput is
+  within tolerance of the baseline (the fleet healed, not limped).
+
+After ``frontend.close()`` the harness asserts nothing leaked: every
+worker pid ever spawned (including the replacement) is gone, and no
+``repro-ring-*`` shared-memory segments created by this process remain
+in ``/dev/shm``.
+
+Determinism: the fault plan is seeded and fires on exact per-point event
+counters; the kill lands at a fixed request index. Counts of *which*
+typed error each shed request gets vary with scheduling (single-core CI
+hosts), so gates assert the resolution contract and recovery invariants,
+never exact error tallies.
+
+The report lands in ``BENCH_chaos.json``; ``--smoke`` is the CI-sized
+variant wired into ``scripts/ci.sh --bench-smoke``.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import signal
+import tempfile
+import time
+
+import numpy as np
+
+from repro.serving import faults as faults_mod
+
+REGISTRY_SPEC = "repro.serving.demo:DEMO_REGISTRY"
+
+#: The seeded chaos schedule. ``after`` offsets skip the per-tenant warm
+#: serves (frames 1-2 at each point), so faults land inside the burst.
+CHAOS_RULES = [
+    {"role": "worker", "point": "recv", "op": "submit_batch",
+     "after": 3, "count": 1, "action": "drop"},
+    {"role": "worker", "point": "send", "op": "result_batch",
+     "after": 1, "count": 2, "action": "delay", "secs": 0.05},
+    {"role": "worker", "point": "ring_ack", "after": 2, "count": 1,
+     "action": "drop"},
+    {"role": "frontend", "point": "recv", "op": "result_batch",
+     "after": 4, "count": 1, "action": "drop"},
+]
+CHAOS_SEED = 2026
+
+
+def _make_tenants(n_tenants: int, dim: int, waves: int, width: int,
+                  workdir: str):
+    """Warm-artifact tenants over distinct structures (spread by router).
+
+    Each tenant is warmed ONCE in this process (``warmup_and_save``) and
+    registered from the artifact, so the frontend holds the bytes it
+    needs to re-ship at respawn — the warm-respawn gate depends on that.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import ReplayExecutor, warmup_and_save
+    from repro.serving.demo import DEMO_REGISTRY, demo_region
+
+    rng = np.random.default_rng(0)
+    shared_w = jnp.asarray(rng.standard_normal((dim, dim)), jnp.float32)
+    tenants = []
+    for i in range(n_tenants):
+        tdg = demo_region(f"chaos[{i}]", waves=waves + i, width=width)
+        bufs = {f"x{k}": jnp.asarray(rng.standard_normal((dim, dim)),
+                                     jnp.float32) for k in range(width)}
+        warm_path = os.path.join(workdir, f"chaos{i}.json")
+        warmup_and_save(tdg, {**bufs, "w": shared_w}, warm_path,
+                        DEMO_REGISTRY)
+        expected = {k: np.asarray(v) for k, v in
+                    ReplayExecutor(tdg).run({**bufs, "w": shared_w}).items()}
+        tenants.append({"name": f"c{i}", "warm_path": warm_path,
+                        "bufs": bufs, "expected": expected})
+    return tenants, shared_w
+
+
+def _check_parity(out: dict, expected: dict) -> None:
+    for k in expected:
+        np.testing.assert_allclose(np.asarray(out[k]), expected[k],
+                                   rtol=2e-4, atol=2e-4)
+
+
+def _new_frontend(workers: int, name: str, deadline_s: float,
+                  heartbeat_secs: float = 0.5):
+    from repro.serving import ClusterFrontend
+    return ClusterFrontend(workers=workers, registry=REGISTRY_SPEC,
+                           max_batch=4, max_wait_ms=5.0,
+                           heartbeat_secs=heartbeat_secs, lease_misses=3,
+                           respawn_max=5, request_deadline=deadline_s,
+                           retry_budget=2, name=name)
+
+
+def _register_all(frontend, tenants, shared_w) -> None:
+    for t in tenants:
+        frontend.register_tenant(t["name"], warm_path=t["warm_path"],
+                                 pinned={"w": shared_w})
+
+
+def _drive_rounds(frontend, tenants, rounds: int) -> float:
+    """Sequential warm serves (parity-checked); returns requests/sec."""
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        for t in tenants:
+            out = frontend.serve(t["name"], t["bufs"], timeout=300)
+            _check_parity(out, t["expected"])
+    wall = time.perf_counter() - t0
+    return rounds * len(tenants) / max(wall, 1e-9)
+
+
+def _wait_pids_gone(pids, timeout_s: float = 30.0) -> list[int]:
+    """Pids from ``pids`` still alive after ``timeout_s`` (leak check)."""
+    deadline = time.monotonic() + timeout_s
+    leaked = set(pids)
+    while leaked and time.monotonic() < deadline:
+        for pid in list(leaked):
+            try:
+                os.kill(pid, 0)
+            except OSError:
+                leaked.discard(pid)
+        if leaked:
+            time.sleep(0.2)
+    return sorted(leaked)
+
+
+def bench_baseline(tenants, shared_w, rounds: int,
+                   deadline_s: float) -> dict:
+    frontend = _new_frontend(2, "bench-chaos-base", deadline_s)
+    try:
+        _register_all(frontend, tenants, shared_w)
+        _drive_rounds(frontend, tenants, 1)            # warm off the clock
+        rps = _drive_rounds(frontend, tenants, rounds)
+        stats = frontend.stats()
+    finally:
+        frontend.close()
+    return {"throughput_rps": rps, "requests": rounds * len(tenants),
+            "aot_served": stats["aggregate"]["aot_served"],
+            "intern_misses": sum(w["intern"]["misses"]
+                                 for w in stats["workers"].values()
+                                 if w is not None)}
+
+
+def bench_chaos_and_recovery(tenants, shared_w, n_requests: int,
+                             deadline_s: float, recovery_rounds: int) -> dict:
+    """The soak: armed fleet, mid-burst SIGKILL, resolution + recovery."""
+    from repro.serving import (ClusterError, DeadlineExceeded, FaultPlan,
+                               QueueFull)
+
+    plan = FaultPlan(rules=CHAOS_RULES, seed=CHAOS_SEED)
+    os.environ[faults_mod.FAULT_PLAN_ENV] = plan.to_json()
+    os.environ["REPRO_QUEUE_BOUND"] = "16"
+    pids: set[int] = set()
+    try:
+        frontend = _new_frontend(2, "bench-chaos-soak", deadline_s)
+        try:
+            _register_all(frontend, tenants, shared_w)
+            pids.update(h.process.pid for h in frontend._handles
+                        if h.process is not None)
+            # One warm serve per tenant: proves the fleet is up and moves
+            # the frame counters past the rules' `after` offsets.
+            for t in tenants:
+                _check_parity(frontend.serve(t["name"], t["bufs"],
+                                             timeout=300), t["expected"])
+
+            victim = frontend.stats()["tenants"][tenants[0]["name"]]["worker"]
+            victim_pid = frontend._handles[victim].process.pid
+
+            # Burst in small waves so the dispatcher cuts several wire
+            # frames (one giant coalesced frame would starve the per-frame
+            # fault counters of events).
+            futures = []
+            kill_at = n_requests // 3
+            killed_at = None
+            for i in range(n_requests):
+                t = tenants[i % len(tenants)]
+                futures.append((t, frontend.submit(
+                    t["name"], t["bufs"], deadline_s=deadline_s)))
+                if i % 4 == 3:
+                    time.sleep(0.02)
+                if i == kill_at:
+                    os.kill(victim_pid, signal.SIGKILL)
+                    killed_at = i
+                    # The replacement must bootstrap CLEAN: its env must
+                    # not re-arm the plan (fresh counters would re-fire
+                    # rules during the recovery phase).
+                    os.environ.pop(faults_mod.FAULT_PLAN_ENV, None)
+
+            # Resolution contract: every future resolves — result or
+            # typed error — within deadline + supervisor slack. A bare
+            # futures TimeoutError here is a hang and fails the soak.
+            ok = 0
+            typed: dict[str, int] = {}
+            other: list[str] = []
+            wait = deadline_s + 90.0
+            t0 = time.perf_counter()
+            for t, fut in futures:
+                exc = fut.exception(timeout=max(1.0,
+                                                wait - (time.perf_counter()
+                                                        - t0)))
+                if exc is None:
+                    _check_parity(fut.result(), t["expected"])
+                    ok += 1
+                elif isinstance(exc, (DeadlineExceeded, QueueFull,
+                                      ClusterError)):
+                    name = type(exc).__name__
+                    typed[name] = typed.get(name, 0) + 1
+                else:
+                    other.append(f"{type(exc).__name__}: {exc}")
+            resolve_wall = time.perf_counter() - t0
+
+            # Wait for the supervisor to respawn the killed slot.
+            t0 = time.perf_counter()
+            while time.perf_counter() - t0 < 120.0:
+                if frontend.respawns >= 1 and \
+                        all(h.alive for h in frontend._handles):
+                    break
+                time.sleep(0.1)
+            recovery_wait_s = time.perf_counter() - t0
+            pids.update(h.process.pid for h in frontend._handles
+                        if h.process is not None)
+
+            # Capture what fired (the armed plan is the env round-trip of
+            # `plan`, installed at frontend construction), then disarm
+            # everything before timing the healed fleet.
+            armed = faults_mod.active()
+            fired = armed.fired() if armed is not None else []
+            faults_mod.clear()
+
+            recovery_rps = _drive_rounds(frontend, tenants, recovery_rounds)
+            stats = frontend.stats()
+        finally:
+            frontend.close()
+            faults_mod.clear()
+    finally:
+        os.environ.pop(faults_mod.FAULT_PLAN_ENV, None)
+        os.environ.pop("REPRO_QUEUE_BOUND", None)
+
+    # Every pid this soak ever spawned must be gone after close().
+    leaked = _wait_pids_gone(pids)
+
+    victim_stats = stats["workers"].get(victim) or {}
+    fe = stats["frontend"]
+    return {
+        "requests": n_requests,
+        "killed_at_request": killed_at,
+        "victim": victim,
+        "ok": ok,
+        "typed_errors": typed,
+        "other_errors": other,
+        "resolve_wall_s": resolve_wall,
+        "recovery_wait_s": recovery_wait_s,
+        "worker_deaths": fe["worker_deaths"],
+        "respawns": fe["respawns"],
+        "respawn_failures": fe["respawn_failures"],
+        "requeues": fe["requeues"],
+        "retries": fe["retries"],
+        "heartbeat_misses": fe["heartbeat_misses"],
+        "deadline_failures": fe["deadline_failures"],
+        "shed": stats["aggregate"].get("shed", 0),
+        "deadline_sheds": stats["aggregate"].get("deadline_sheds", 0),
+        "recovery_throughput_rps": recovery_rps,
+        "victim_intern_misses": victim_stats.get("intern", {}).get(
+            "misses", -1),
+        "victim_aot_served": victim_stats.get("metrics", {}).get(
+            "aot_served", -1),
+        "aot_hydrate_failures": stats["aggregate"]["aot_hydrate_failures"],
+        "artifacts_shipped": fe["artifacts_shipped"],
+        "plan": {"seed": CHAOS_SEED, "rules": CHAOS_RULES,
+                 "frontend_fired": fired},
+        "leaked_pids": sorted(leaked),
+    }
+
+
+def bench_warm_respawn(tenant, shared_w, deadline_s: float) -> dict:
+    """Kill a ONE-worker fleet's only worker; the replacement must serve.
+
+    With no sibling to requeue to, the retry backoff has to wait out the
+    supervised respawn, and the respawn's re-registration re-ships the
+    frontend-held artifact — so the replacement serving at all proves the
+    whole loop, and serving *warm* (zero intern misses, ``aot_served >=
+    1`` in a process that never compiled) proves the artifact ship. The
+    2-worker soak can't gate this: its victim's tenants requeue to the
+    sibling and stay there (sticky routing), so the replacement idles.
+    """
+    from repro.serving import ClusterError, DeadlineExceeded
+
+    frontend = _new_frontend(1, "bench-chaos-respawn", deadline_s,
+                             heartbeat_secs=0.3)
+    pids = set()
+    try:
+        frontend.register_tenant(tenant["name"], warm_path=tenant["warm_path"],
+                                 pinned={"w": shared_w})
+        pids.add(frontend._handles[0].process.pid)
+        _check_parity(frontend.serve(tenant["name"], tenant["bufs"],
+                                     timeout=300), tenant["expected"])
+        t0 = time.perf_counter()
+        os.kill(frontend._handles[0].process.pid, signal.SIGKILL)
+        # A real client retries typed errors; the in-frontend retry
+        # budget alone can expire while the slot is still respawning.
+        out = None
+        client_attempts = 0
+        while out is None:
+            client_attempts += 1
+            try:
+                out = frontend.serve(tenant["name"], tenant["bufs"],
+                                     timeout=deadline_s)
+            except (ClusterError, DeadlineExceeded):
+                if time.perf_counter() - t0 > 90.0:
+                    raise
+                time.sleep(0.25)
+        respawn_to_serve_s = time.perf_counter() - t0
+        _check_parity(out, tenant["expected"])
+        pids.add(frontend._handles[0].process.pid)
+        stats = frontend.stats()
+    finally:
+        frontend.close()
+    worker = stats["workers"][0] or {}
+    return {
+        "respawn_to_serve_s": respawn_to_serve_s,
+        "client_attempts": client_attempts,
+        "respawns": stats["frontend"]["respawns"],
+        "retries": stats["frontend"]["retries"],
+        "shm_fallbacks": stats["frontend"]["shm_fallbacks"],
+        "intern_misses": worker.get("intern", {}).get("misses", -1),
+        "aot_served": worker.get("metrics", {}).get("aot_served", -1),
+        "aot_hydrate_failures": stats["aggregate"]["aot_hydrate_failures"],
+        "leaked_pids": _wait_pids_gone(pids),
+    }
+
+
+def run(n_requests: int = 48, baseline_rounds: int = 4,
+        recovery_rounds: int = 4, dim: int = 16, waves: int = 2,
+        width: int = 3, deadline_s: float = 25.0,
+        out_path: str = "BENCH_chaos.json") -> dict:
+    shm_before = set(glob.glob(f"/dev/shm/repro-ring-{os.getpid()}-*"))
+    workdir = tempfile.mkdtemp(prefix="bench_chaos_")
+    tenants, shared_w = _make_tenants(2, dim, waves, width, workdir)
+
+    print("# phase 1/4: baseline (clean 2-worker fleet, warm-shipped)",
+          flush=True)
+    baseline = bench_baseline(tenants, shared_w, baseline_rounds, deadline_s)
+    print(f"  {baseline['throughput_rps']:.1f} req/s | aot_served "
+          f"{baseline['aot_served']} | intern misses "
+          f"{baseline['intern_misses']}", flush=True)
+
+    print("# phase 2/4: chaos soak (seeded fault plan + mid-burst SIGKILL)",
+          flush=True)
+    chaos = bench_chaos_and_recovery(tenants, shared_w, n_requests,
+                                     deadline_s, recovery_rounds)
+    print(f"  {chaos['ok']}/{chaos['requests']} ok | typed "
+          f"{chaos['typed_errors']} | deaths {chaos['worker_deaths']} | "
+          f"respawns {chaos['respawns']} | requeues {chaos['requeues']} | "
+          f"retries {chaos['retries']} | shed {chaos['shed']} | "
+          f"deadline sheds {chaos['deadline_sheds']}", flush=True)
+
+    print("# phase 3/4: recovery (faults disarmed, respawned fleet)",
+          flush=True)
+    ratio = chaos["recovery_throughput_rps"] / max(
+        baseline["throughput_rps"], 1e-9)
+    print(f"  {chaos['recovery_throughput_rps']:.1f} req/s "
+          f"({ratio:.2f}x baseline) | victim intern misses "
+          f"{chaos['victim_intern_misses']} | leaked pids "
+          f"{chaos['leaked_pids']}", flush=True)
+
+    print("# phase 4/4: warm respawn (1-worker fleet, replacement must "
+          "serve)", flush=True)
+    respawn = bench_warm_respawn(tenants[0], shared_w, deadline_s)
+    print(f"  kill -> warm serve {respawn['respawn_to_serve_s']:.2f} s "
+          f"({respawn['client_attempts']} client attempts) | intern misses "
+          f"{respawn['intern_misses']} | aot_served {respawn['aot_served']} "
+          f"| shm fallbacks {respawn['shm_fallbacks']}", flush=True)
+
+    shm_leaked = sorted(set(glob.glob(
+        f"/dev/shm/repro-ring-{os.getpid()}-*")) - shm_before)
+    report = {"bench": "chaos", "dim": dim, "waves": waves, "width": width,
+              "deadline_s": deadline_s, "baseline": baseline, "chaos": chaos,
+              "recovery_ratio": ratio, "warm_respawn": respawn,
+              "shm_leaked": shm_leaked}
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"# wrote {out_path}", flush=True)
+    return report
+
+
+def _assert_gates(report: dict, recovery_tolerance: float) -> None:
+    chaos = report["chaos"]
+    # The robustness contract: every request in the soak resolved — a
+    # parity-checked result or a typed error. No hangs, nothing foreign.
+    assert chaos["ok"] + sum(chaos["typed_errors"].values()) \
+        == chaos["requests"], chaos
+    assert not chaos["other_errors"], chaos
+    assert chaos["ok"] >= 1, chaos
+    # The kill was noticed (lease expiry or broken pipe), the slot was
+    # respawned by the supervisor, and inflight work moved to a sibling.
+    assert chaos["worker_deaths"] >= 1, chaos
+    assert chaos["respawns"] >= 1, chaos
+    assert chaos["requeues"] >= 1, chaos
+    # The soak's replacement never lowered anything (its tenants moved to
+    # the sibling; if anything reached it, it was hydrated, not compiled).
+    assert chaos["victim_intern_misses"] == 0, chaos
+    assert chaos["aot_hydrate_failures"] == 0, chaos
+    # The healed fleet performs: recovery throughput within tolerance of
+    # the clean baseline (single-core CI jitters; this is a limp check,
+    # not a benchmark).
+    assert report["recovery_ratio"] >= recovery_tolerance, report
+    # Warm respawn (1-worker fleet): the replacement hydrated the
+    # re-shipped artifact and served from AOT — it never compiled.
+    respawn = report["warm_respawn"]
+    assert respawn["respawns"] >= 1, respawn
+    assert respawn["intern_misses"] == 0, respawn
+    assert respawn["aot_served"] >= 1, respawn
+    assert respawn["aot_hydrate_failures"] == 0, respawn
+    # Nothing leaked: no worker processes, no shm segments.
+    assert not chaos["leaked_pids"], chaos
+    assert not respawn["leaked_pids"], respawn
+    assert not report["shm_leaked"], report
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized soak: smaller burst, looser recovery "
+                         "tolerance; same resolution/respawn/leak gates")
+    ap.add_argument("--out", default="BENCH_chaos.json")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        report = run(n_requests=32, baseline_rounds=3, recovery_rounds=3,
+                     dim=16, waves=2, width=3, deadline_s=25.0,
+                     out_path=args.out)
+        _assert_gates(report, recovery_tolerance=0.35)
+        print("# smoke ok: 100% resolution under seeded chaos + SIGKILL, "
+              "warm respawn (0 intern misses), no leaked pids/shm, "
+              "recovered throughput within tolerance")
+    else:
+        report = run(out_path=args.out)
+        _assert_gates(report, recovery_tolerance=0.5)
+        print(f"# acceptance: {report['chaos']['ok']}/"
+              f"{report['chaos']['requests']} results + typed errors "
+              f"{report['chaos']['typed_errors']}; respawns "
+              f"{report['chaos']['respawns']}; recovery "
+              f"{report['recovery_ratio']:.2f}x baseline; zero leaks")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,7 +3,7 @@
 # so local runs and CI cannot drift. Usage:
 #   scripts/ci.sh                 # default tier-1 run (slow sweeps excluded)
 #   scripts/ci.sh -m slow         # opt into the slow interpret-mode sweeps
-#   scripts/ci.sh --bench-smoke   # fusion + serving + cluster benchmark smokes (+ tier-1 run)
+#   scripts/ci.sh --bench-smoke   # fusion + serving + cluster + chaos benchmark smokes (+ tier-1 run)
 #   scripts/ci.sh --docs-smoke    # docs-and-examples smoke (+ tier-1 run)
 #   scripts/ci.sh tests/test_registry.py -q
 set -euo pipefail
@@ -20,11 +20,16 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
   # start, AND the remote-bootstrap path: a `python -m repro.serving.worker`
   # subprocess over localhost TCP must serve with parity, hydrate the
   # shipped artifact (zero intern misses) and be reaped by the frontend's
-  # shutdown RPC.
-  # Full runs: benchmarks.fusion / benchmarks.serving / benchmarks.cluster
+  # shutdown RPC. The chaos smoke soaks the self-healing tier under a
+  # seeded fault plan + mid-burst SIGKILL: every request must resolve
+  # (result or typed error), the supervisor must respawn the slot warm
+  # (zero intern misses, aot_served >= 1), recovered throughput must stay
+  # within tolerance, and no worker pids or shm segments may leak.
+  # Full runs: benchmarks.fusion / .serving / .cluster / .chaos
   python -m benchmarks.fusion --smoke --out /tmp/BENCH_fusion_smoke.json
   python -m benchmarks.serving --smoke --out /tmp/BENCH_serving_smoke.json
   python -m benchmarks.cluster --smoke --out /tmp/BENCH_cluster_smoke.json
+  python -m benchmarks.chaos --smoke --out /tmp/BENCH_chaos_smoke.json
 fi
 if [[ "${1:-}" == "--docs-smoke" ]]; then
   shift

@@ -11,15 +11,17 @@ processes instead of re-lowering per host.
 """
 from .cluster import (ClusterError, ClusterFrontend, ClusterRemoteError,
                       StickyRouter, WorkerDied, WorkerNode, resolve_registry)
+from .faults import FaultPlan, InjectedFault
 from .metrics import LatencyReservoir, ServerMetrics, percentile
 from .pool import PoolEntry, WarmPool
-from .server import RegionServer, Tenant
+from .server import DeadlineExceeded, QueueFull, RegionServer, Tenant
 from .shm import ShmRing
 from .spawner import (LocalSpawner, RemoteSpawner, SpawnedWorker, SpawnError,
                       parse_worker_spec)
 
 __all__ = [
-    "RegionServer", "Tenant",
+    "RegionServer", "Tenant", "DeadlineExceeded", "QueueFull",
+    "FaultPlan", "InjectedFault",
     "WarmPool", "PoolEntry",
     "ServerMetrics", "LatencyReservoir", "percentile",
     "ClusterFrontend", "WorkerNode", "StickyRouter", "resolve_registry",

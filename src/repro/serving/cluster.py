@@ -80,6 +80,23 @@ frontend and workers), ``REPRO_RPC_MAX_FRAME`` (wire frame cap),
 ``REPRO_RPC_TRANSPORT`` / ``REPRO_RPC_WINDOW`` / ``REPRO_RPC_SHM_BYTES``
 / ``REPRO_RPC_SHM_MIN_BYTES`` (transport selection, pipelining window and
 shm ring sizing — see :mod:`repro.serving.rpc`).
+
+**Self-healing.** A supervisor thread leases every worker via heartbeat
+probes (``REPRO_HEARTBEAT_SECS`` × ``REPRO_LEASE_MISSES`` of silence
+declares a worker dead — proactively, not just on socket error, and
+without mistaking slow for dead: probes are answered inline on the
+worker's connection thread, never queued behind replay). Dead *local*
+workers are respawned in place with capped exponential backoff (at most
+``REPRO_RESPAWN_MAX`` attempts per slot), re-registered with their routed
+tenants and re-shipped the frontend-held warm artifacts, so a replacement
+serves AOT-warm from its first request. Every submission carries an
+absolute deadline (``REPRO_REQUEST_DEADLINE`` seconds, propagated in the
+wire frame as a relative ttl); expired work is shed at every hop, and
+``WorkerDied`` failures retry on a sibling/respawned worker with jittered
+backoff under a per-request budget (``REPRO_RETRY_BUDGET``). The worker's
+admission queue is bounded (``REPRO_QUEUE_BOUND``) with explicit
+``QueueFull`` shedding. Deterministic fault injection for all of the
+above lives in :mod:`repro.serving.faults` (``REPRO_FAULT_PLAN``).
 """
 from __future__ import annotations
 
@@ -87,9 +104,11 @@ import importlib
 import itertools
 import json
 import os
+import random
 import secrets
 import socket
 import threading
+import time
 from collections import deque
 from concurrent.futures import Future
 from concurrent.futures import TimeoutError as _FuturesTimeout
@@ -97,14 +116,44 @@ from typing import Any, Callable, Mapping, Sequence
 
 from ..core import serialize as _serialize
 from ..core.tdg import TDG, structure_signature
+from . import faults as _faults
 from . import rpc
-from .server import RegionServer
+from .server import DeadlineExceeded, QueueFull, RegionServer
 from .spawner import (LocalSpawner, RemoteSpawner, SpawnedWorker,
                       parse_worker_spec)
 
 _WORKERS_ENV = "REPRO_CLUSTER_WORKERS"
 _SHIP_ENV = "REPRO_SHIP_ARTIFACTS"
 _TOKEN_ENV = "REPRO_RPC_TOKEN"
+_RESPAWN_ENV = "REPRO_RESPAWN_MAX"
+_DEADLINE_ENV = "REPRO_REQUEST_DEADLINE"
+_RETRY_ENV = "REPRO_RETRY_BUDGET"
+
+#: Respawn backoff: first retry after ~_BACKOFF_BASE seconds, doubling per
+#: consecutive failure, capped — a worker slot that keeps dying retries at
+#: a bounded, jittered cadence instead of hammering the host.
+_BACKOFF_BASE = 0.25
+_BACKOFF_CAP = 5.0
+
+
+def _env_float(name: str, default: float) -> float:
+    raw = os.environ.get(name, "").strip()
+    if not raw:
+        return default
+    try:
+        return float(raw)
+    except ValueError:
+        raise ValueError(f"{name}={raw!r} is not a number") from None
+
+
+def _env_int(name: str, default: int) -> int:
+    raw = os.environ.get(name, "").strip()
+    if not raw:
+        return default
+    try:
+        return int(raw)
+    except ValueError:
+        raise ValueError(f"{name}={raw!r} is not an integer") from None
 
 
 class ClusterError(RuntimeError):
@@ -239,6 +288,10 @@ class WorkerNode:
         self.registry = registry
         self.token = token
         self.handshake_timeout = handshake_timeout
+        # Arm any env-shipped chaos plan, with this process's role: a
+        # spawned worker inherits REPRO_FAULT_PLAN from the frontend's
+        # environment, so one export arms the whole fleet.
+        _faults.init_from_env("worker")
         # The worker's OWN transport policy (its env / CLI, not the
         # frontend's): "tcp" refuses shm-setup offers, "shm"/"auto" attach
         # when the segments are reachable. Independence is deliberate — a
@@ -352,16 +405,33 @@ class WorkerNode:
     def _dispatch(self, conn: rpc.RpcConnection, msg: dict,
                   writer: _ReplyWriter) -> None:
         op, mid = msg["op"], msg.get("id")
-        if op == "submit_batch":
+        if op == rpc.HEARTBEAT_OP:
+            # Lease probe: answered INLINE on this connection thread, never
+            # queued behind replay work — which is exactly what lets the
+            # supervisor tell slow (acks heartbeats, results late) from
+            # dead (acks nothing). The lightest round-trip the wire has.
+            conn.send({"op": rpc.HEARTBEAT_ACK_OP, "id": mid})
+        elif op == "submit_batch":
             # The hot path: one frame, N submissions, ONE admission-queue
             # lock acquisition (submit_many) so the server's coalescer
             # sees the whole frame at once. Per-entry failures come back
             # as pre-failed futures — routed to the right caller by id,
-            # never rejecting the frame's other entries.
+            # never rejecting the frame's other entries. Each entry may
+            # carry a relative "ttl" (seconds of deadline remaining at
+            # send time — relative because monotonic clocks do not compare
+            # across hosts); it converts to a worker-local absolute
+            # deadline here, and already-expired entries are shed by the
+            # server before they cost a replay.
             entries = msg["entries"]
-            items = [(e["tenant"],
-                      self._merged_buffers(e["tenant"], e["buffers"]))
-                     for e in entries]
+            now = time.monotonic()
+            items = []
+            for e in entries:
+                ttl = e.get("ttl")
+                deadline = now + ttl if isinstance(ttl, (int, float)) \
+                    and not isinstance(ttl, bool) else None
+                items.append((e["tenant"],
+                              self._merged_buffers(e["tenant"], e["buffers"]),
+                              deadline))
             futs = self.server.submit_many(items)
             for e, fut in zip(entries, futs):
                 fut.add_done_callback(
@@ -381,7 +451,24 @@ class WorkerNode:
             conn.send({"op": "result", "id": mid,
                        **self._handle_register(msg)})
         elif op == "warmup":
-            conn.send({"op": "result", "id": mid, **self._handle_warmup(msg)})
+            # Off-thread: a warmup is a full trace+compile — minutes,
+            # sometimes. Handling it inline would silence this connection's
+            # heartbeat acks for the duration and get a perfectly healthy
+            # worker declared dead mid-compile. The connection's write lock
+            # makes the cross-thread reply send safe.
+            def _do_warmup(msg=msg, mid=mid):
+                try:
+                    reply = {"op": "result", "id": mid,
+                             **self._handle_warmup(msg)}
+                except Exception as exc:
+                    self._send_error(conn, mid, exc)
+                    return
+                try:
+                    conn.send(reply)
+                except (OSError, rpc.ProtocolError):
+                    pass        # connection died while we compiled
+            threading.Thread(target=_do_warmup, name="worker-warmup",
+                             daemon=True).start()
         elif op == "stats":
             conn.send({"op": "result", "id": mid, "stats": self.stats()})
         elif op == "ping":
@@ -605,6 +692,7 @@ class _WorkerHandle:
                  ids: "itertools.count", on_death: Callable[[int], None],
                  window: int | None = None):
         self.idx = idx
+        self.spawned = spawned          # kept whole for respawn()
         self.kind = spawned.kind
         self.address = spawned.address
         self.info = spawned.info
@@ -618,15 +706,24 @@ class _WorkerHandle:
         self._window = rpc.window_size(window)
         self._lock = threading.Lock()
         self._pending: dict[int, Future] = {}
+        # mid -> absolute monotonic deadline, for the supervisor's sweep
+        # (fails pending futures whose reply never arrived in time — the
+        # backstop that turns a dropped result frame into a typed error
+        # instead of a hang).
+        self._deadlines: dict[int, float] = {}
         # mid -> shared [outstanding_count] cell of its frame: the window
         # slot frees when every entry of the frame has been answered.
         self._frame_of: dict[int, list] = {}
-        self._submit_q: deque[tuple[int, str, dict]] = deque()
+        self._submit_q: deque[tuple[int, str, dict, float | None]] = deque()
         self._q_cv = threading.Condition()
         self._inflight_frames = 0
         self.frames_sent = 0
         self.entries_sent = 0
         self.timeouts = 0
+        # Lease state (supervisor-owned: one thread calls heartbeat_tick).
+        self.heartbeat_misses = 0           # consecutive
+        self.heartbeat_misses_total = 0
+        self._hb_fut: Future | None = None
         self._reader = threading.Thread(target=self._read_loop,
                                         name=f"cluster-reader-{idx}",
                                         daemon=True)
@@ -637,19 +734,24 @@ class _WorkerHandle:
         self._writer.start()
 
     # --------------------------------------------------------------- submits
-    def submit_async(self, tenant: str, buffers: dict) -> Future:
+    def submit_async(self, tenant: str, buffers: dict,
+                     deadline: float | None = None) -> Future:
         """Queue one submission for the dispatcher; resolves to the reply
         entry (``{"id": ..., "out": ...}``). O(1), lock scope is a dict
         put + a queue append — the frontend's submit hot path never waits
-        on the wire."""
+        on the wire. ``deadline`` is an absolute ``time.monotonic()``
+        instant; it rides to the worker as a relative ttl and backs the
+        supervisor's no-reply sweep here."""
         fut: Future = Future()
         mid = next(self._ids)
         with self._lock:
             if not self.alive:
                 raise WorkerDied(f"worker {self.idx} is dead")
             self._pending[mid] = fut
+            if deadline is not None:
+                self._deadlines[mid] = deadline
         with self._q_cv:
-            self._submit_q.append((mid, tenant, buffers))
+            self._submit_q.append((mid, tenant, buffers, deadline))
             self._q_cv.notify_all()
         return fut
 
@@ -668,27 +770,45 @@ class _WorkerHandle:
                 while self._submit_q and len(entries) < _WIRE_BATCH:
                     entries.append(self._submit_q.popleft())
             # Drop entries whose future already finished (timed out,
-            # cancelled, failed by _mark_dead): sending them would waste
-            # worker compute on an answer nobody can receive.
+            # cancelled, failed by _mark_dead) or whose deadline has
+            # already passed: sending them would waste worker compute on
+            # an answer nobody can receive.
             live = []
+            expired: list[Future] = []
+            now = time.monotonic()
             with self._lock:
-                for mid, tenant, buffers in entries:
+                for mid, tenant, buffers, deadline in entries:
                     fut = self._pending.get(mid)
-                    if fut is not None and not fut.done():
-                        live.append((mid, tenant, buffers))
-                    else:
+                    if fut is None or fut.done():
                         self._pending.pop(mid, None)
+                        self._deadlines.pop(mid, None)
+                        continue
+                    if deadline is not None and deadline <= now:
+                        self._pending.pop(mid, None)
+                        self._deadlines.pop(mid, None)
+                        expired.append(fut)
+                        continue
+                    live.append((mid, tenant, buffers, deadline))
                 if live:
                     cell = [len(live)]
-                    for mid, _, _ in live:
+                    for mid, _, _, _ in live:
                         self._frame_of[mid] = cell
+            for fut in expired:
+                fut.set_exception(DeadlineExceeded(
+                    f"worker {self.idx}: deadline passed while queued at "
+                    "the frontend"))
             if not live:
                 continue
             with self._q_cv:
                 self._inflight_frames += 1
+            # The ttl is recomputed at PACK time (not submit time), so
+            # frontend queue wait is charged against the budget; relative
+            # seconds because monotonic clocks do not compare across hosts.
             frame = {"op": "submit_batch",
-                     "entries": [{"id": mid, "tenant": t, "buffers": b}
-                                 for mid, t, b in live]}
+                     "entries": [
+                         {"id": mid, "tenant": t, "buffers": b,
+                          **({"ttl": d - now} if d is not None else {})}
+                         for mid, t, b, d in live]}
             try:
                 self.conn.send(frame, codec="binary")
             except (OSError, rpc.ProtocolError):
@@ -766,21 +886,102 @@ class _WorkerHandle:
         the frame is fully answered."""
         with self._lock:
             fut = self._pending.pop(mid, None)
+            self._deadlines.pop(mid, None)
+            # Each mid is popped from _frame_of exactly once, under this
+            # lock — so the cell decrement is single-shot per mid even
+            # though the reader AND the supervisor's deadline sweep can
+            # both retire entries.
             cell = self._frame_of.pop(mid, None)
-        if cell is not None:
-            cell[0] -= 1            # reader thread is the sole decrementer
-            if cell[0] == 0:
-                with self._q_cv:
-                    self._inflight_frames -= 1
-                    self._q_cv.notify_all()
+            freed = False
+            if cell is not None:
+                cell[0] -= 1
+                freed = cell[0] == 0
+        if freed:
+            with self._q_cv:
+                self._inflight_frames -= 1
+                self._q_cv.notify_all()
         if fut is None:
             return                  # reply to an already-abandoned request
         if msg.get("op") == "error" or (msg.get("op") is None
                                         and "error" in msg):
-            fut.set_exception(ClusterRemoteError(
-                f"worker {self.idx}: {msg.get('error')}"))
+            fut.set_exception(self._remote_error(msg.get("error")))
         else:
             fut.set_result(msg)
+
+    def _remote_error(self, detail) -> Exception:
+        """Map a worker error string back to a typed exception.
+
+        Worker-side errors cross the wire as ``"TypeName: detail"``;
+        deadline and shedding failures must come back as their own types
+        (``DeadlineExceeded`` is terminal, ``QueueFull`` means back off —
+        neither should be retried as if the worker had died)."""
+        if isinstance(detail, str):
+            for cls in (DeadlineExceeded, QueueFull):
+                if detail.startswith(cls.__name__ + ":"):
+                    return cls(f"worker {self.idx}: {detail}")
+        return ClusterRemoteError(f"worker {self.idx}: {detail}")
+
+    # ------------------------------------------------------------ liveness
+    def expire_deadlines(self, now: float) -> int:
+        """Fail pending futures whose deadline passed with no reply.
+
+        The supervisor calls this every tick. It is what turns a reply
+        that will never arrive (dropped result frame, wedged worker) into
+        a clean ``DeadlineExceeded`` instead of a caller hang — and it
+        releases the affected frames' window slots so the dispatcher is
+        not left jammed behind entries nobody is waiting for."""
+        expired: list[Future] = []
+        freed = 0
+        with self._lock:
+            if not self.alive:
+                return 0
+            for mid in [m for m, d in self._deadlines.items() if d <= now]:
+                fut = self._pending.pop(mid, None)
+                del self._deadlines[mid]
+                cell = self._frame_of.pop(mid, None)
+                if cell is not None:
+                    cell[0] -= 1
+                    if cell[0] == 0:
+                        freed += 1
+                if fut is not None and not fut.done():
+                    expired.append(fut)
+        if freed:
+            with self._q_cv:
+                self._inflight_frames -= freed
+                self._q_cv.notify_all()
+        for fut in expired:
+            fut.set_exception(DeadlineExceeded(
+                f"worker {self.idx}: no reply before the request deadline"))
+        return len(expired)
+
+    def heartbeat_tick(self, miss_budget: int) -> bool:
+        """One lease tick: account the previous probe, launch the next.
+
+        Returns ``True`` when the lease is exhausted — ``miss_budget``
+        consecutive probes unanswered — and the caller should declare this
+        worker dead. Unanswered probes are *disowned* (popped from the
+        demux table) so a wedged worker cannot accumulate pending state;
+        a probe answered within the tick resets the miss streak, which is
+        what keeps a merely slow worker leased."""
+        prev = self._hb_fut
+        if prev is not None:
+            if prev.done() and prev.exception() is None:
+                self.heartbeat_misses = 0
+            else:
+                self.heartbeat_misses += 1
+                self.heartbeat_misses_total += 1
+                mid = getattr(prev, "_rpc_mid", None)
+                if not prev.done() and mid is not None:
+                    with self._lock:
+                        self._pending.pop(mid, None)
+                if self.heartbeat_misses >= miss_budget:
+                    self._hb_fut = None
+                    return True
+        try:
+            self._hb_fut = self.request_async(rpc.heartbeat_frame(0))
+        except (WorkerDied, OSError):
+            return True         # the socket already told us
+        return False
 
     # -------------------------------------------------------------- teardown
     def _mark_dead(self) -> None:
@@ -790,11 +991,19 @@ class _WorkerHandle:
             self.alive = False
             pending = list(self._pending.values())
             self._pending.clear()
+            self._deadlines.clear()
             self._frame_of.clear()
         with self._q_cv:
             self._submit_q.clear()
             self._inflight_frames = 0
             self._q_cv.notify_all()     # dispatcher wakes, sees dead, exits
+        # Close the connection NOW, not lazily at frontend teardown: this
+        # is what unlinks the shm ring segments (a worker killed mid-frame
+        # can never ack, so the segments would otherwise leak until the
+        # frontend exits) and what wakes a dispatcher thread blocked in
+        # ring alloc() waiting on credit the dead worker will never send —
+        # the stranded-on-ring-credit half of the death bug.
+        self.conn.close()
         for fut in pending:
             if not fut.done():
                 fut.set_exception(WorkerDied(
@@ -816,11 +1025,40 @@ class _WorkerHandle:
                 "window": self._window, "timeouts": timeouts}
 
     def close(self) -> None:
+        """Orderly teardown that can never hang on (or silently drop) an
+        inflight pipelined window.
+
+        The race this closes: the dispatcher thread may be mid-``send``
+        (possibly blocked on shm ring credit) while ``close()`` tears the
+        socket down — and any future still queued or pending would
+        otherwise just never resolve. Sequence: go not-alive and *disown*
+        every queued/pending entry under the locks, wake the dispatcher,
+        then close the connection (which unblocks a ring-credit wait), and
+        only then fail the captured futures with a typed error.
+        """
         with self._lock:
             self.alive = False
+            pending = list(self._pending.values())
+            self._pending.clear()
+            self._deadlines.clear()
+            self._frame_of.clear()
         with self._q_cv:
+            self._submit_q.clear()      # dispatcher has nothing left to pack
+            self._inflight_frames = 0
             self._q_cv.notify_all()     # release the dispatcher thread
+        # Give a dispatcher that is between "popped entries" and "send" a
+        # beat to hit the dead connection on its own...
+        self._writer.join(timeout=0.5)
+        # ...then close the connection: wakes a send blocked on ring
+        # credit (ShmRing.close notifies allocators) and stops the reader.
         self.conn.close()
+        self._writer.join(timeout=5.0)
+        self._reader.join(timeout=5.0)
+        for fut in pending:
+            if not fut.done():
+                fut.set_exception(ClusterError(
+                    f"worker {self.idx}: frontend closed with the request "
+                    "in flight"))
 
 
 class ClusterFrontend:
@@ -897,7 +1135,16 @@ class ClusterFrontend:
                  start_method: str = "spawn",
                  spawn_timeout: float = 120.0,
                  shutdown_grace: float = 10.0,
+                 heartbeat_secs: float | None = None,
+                 lease_misses: int | None = None,
+                 respawn_max: int | None = None,
+                 request_deadline: float | None = None,
+                 retry_budget: int | None = None,
                  name: str = "cluster-frontend"):
+        # Arm any env-shipped chaos plan with the frontend role before the
+        # fleet spawns (spawned workers inherit the same env and arm as
+        # "worker" — one export faults both tiers deterministically).
+        _faults.init_from_env("frontend")
         if workers is None:
             workers = int(os.environ.get(_WORKERS_ENV, "2"))
         if isinstance(workers, int):
@@ -958,6 +1205,26 @@ class ClusterFrontend:
         self.artifacts_shipped = 0
         self.artifact_bytes_shipped = 0
         self.pin_groups_shipped = 0
+        # Self-healing knobs (ctor beats env beats default). heartbeat=0
+        # disables the supervisor entirely; respawn_max bounds restart
+        # attempts per worker slot; request_deadline<=0 means unbounded.
+        self._hb_secs = rpc.heartbeat_secs(heartbeat_secs)
+        self._lease_misses = rpc.lease_misses(lease_misses)
+        self._respawn_max = (respawn_max if respawn_max is not None
+                             else _env_int(_RESPAWN_ENV, 3))
+        deadline_default = _env_float(_DEADLINE_ENV, 120.0)
+        self._request_deadline = (request_deadline
+                                  if request_deadline is not None
+                                  else deadline_default)
+        self._retry_budget = (retry_budget if retry_budget is not None
+                              else _env_int(_RETRY_ENV, 2))
+        self.retries = 0
+        self.respawns = 0
+        self.respawn_failures = 0
+        self.heartbeat_misses = 0
+        self.deadline_failures = 0
+        self._respawn_state: dict[int, dict] = {}
+        self._spawn_timeout = spawn_timeout
         local_spawner = (LocalSpawner(self.registry_spec,
                                       self.registry_kwargs,
                                       self._server_kwargs, local_token,
@@ -965,6 +1232,7 @@ class ClusterFrontend:
                                       transport=self.transport,
                                       shm_bytes=self._shm_bytes)
                          if n_local else None)
+        self._local_spawner = local_spawner     # retained for respawns
         remote_spawner = (RemoteSpawner(token, transport=self.transport,
                                         shm_bytes=self._shm_bytes)
                           if self.n_remote else None)
@@ -1002,8 +1270,104 @@ class ClusterFrontend:
                     proc.kill()
                     proc.join(timeout=shutdown_grace)  # reap, don't zombie
             raise
+        # The supervisor: a single daemon thread that ticks every
+        # heartbeat_secs — probing leases, sweeping expired deadlines, and
+        # respawning declared-dead local workers. One thread for the whole
+        # fleet (not per-worker): probes are answered inline on the
+        # worker's connection thread, so a tick is N cheap sends.
+        self._supervisor_stop = threading.Event()
+        self._supervisor: threading.Thread | None = None
+        if self._hb_secs > 0:
+            self._supervisor = threading.Thread(
+                target=self._supervise, name="cluster-supervisor",
+                daemon=True)
+            self._supervisor.start()
 
-    # ------------------------------------------------------------- lifecycle
+    # ------------------------------------------------------------ supervisor
+    def _supervise(self) -> None:
+        """Lease probes + deadline sweep + respawn, every heartbeat tick.
+
+        The lease is what distinguishes *dead* from *slow*: a worker busy
+        with replay still answers heartbeats inline on its connection
+        thread, so only ``lease_misses`` consecutive silent ticks —
+        ``heartbeat_secs × lease_misses`` of total silence — expire the
+        lease and declare the worker dead proactively, instead of waiting
+        for a socket error that a wedged-but-connected process never
+        produces.
+        """
+        while not self._supervisor_stop.wait(self._hb_secs):
+            if self._closed:
+                return
+            now = time.monotonic()
+            for h in list(self._handles):
+                if h.alive:
+                    self.deadline_failures += h.expire_deadlines(now)
+                    before = h.heartbeat_misses_total
+                    expired = h.heartbeat_tick(self._lease_misses)
+                    self.heartbeat_misses += h.heartbeat_misses_total - before
+                    if expired:
+                        h._mark_dead()
+                if not h.alive and h.kind == "local" and not self._closed:
+                    self._maybe_respawn(h)
+
+    def _maybe_respawn(self, handle: "_WorkerHandle") -> None:
+        """Restart a dead local worker's slot, warm, with capped backoff.
+
+        The replacement comes back *warm*: every tenant routed to this slot
+        is re-registered with the frontend-held TDG + artifact bytes, so
+        its first request hydrates instead of re-lowering. The new handle
+        is only published after re-registration — a submit racing the
+        respawn either sees the dead handle (and fails over / retries) or
+        a fully re-registered live one, never a half-registered worker.
+        """
+        idx = handle.idx
+        state = self._respawn_state.setdefault(
+            idx, {"attempts": 0, "next": 0.0})
+        now = time.monotonic()
+        if (self._local_spawner is None or handle.spawned.spawner is None
+                or state["attempts"] >= self._respawn_max
+                or now < state["next"]):
+            return
+        state["attempts"] += 1
+        delay = min(_BACKOFF_CAP,
+                    _BACKOFF_BASE * (2 ** (state["attempts"] - 1)))
+        state["next"] = now + delay * (1.0 + random.random())
+        try:
+            spawned = handle.spawned.respawn(timeout=self._spawn_timeout)
+        except Exception:
+            self.respawn_failures += 1
+            return
+        if self._closed:        # close() won the race; don't leak the child
+            try:
+                spawned.conn.close()
+            finally:
+                if spawned.process is not None:
+                    spawned.process.terminate()
+                    spawned.process.join(timeout=self.shutdown_grace)
+                    if spawned.process.is_alive():
+                        spawned.process.kill()
+            return
+        new_handle = _WorkerHandle(idx, spawned, self._ids,
+                                   self._note_death, window=self.window)
+        with self._lock:
+            # The replacement is a blank process: every pin group must
+            # re-ship on next reference.
+            self._shipped_pins = {(w, k) for (w, k) in self._shipped_pins
+                                  if w != idx}
+            routed = [r for r in self._tenants.values() if r.worker == idx]
+        try:
+            for record in routed:
+                self._register_on(idx, record, handle=new_handle)
+        except Exception:
+            # Re-registration failed (replacement died immediately?):
+            # count it, tear the new handle down, leave the slot dead for
+            # the next tick's backoff.
+            self.respawn_failures += 1
+            new_handle.close()
+            return
+        self._handles[idx] = new_handle
+        state["attempts"] = 0       # healthy again: reset the backoff
+        self.respawns += 1
     def __enter__(self) -> "ClusterFrontend":
         return self
 
@@ -1028,6 +1392,12 @@ class ClusterFrontend:
             if self._closed:
                 return
             self._closed = True
+        # Stop the supervisor BEFORE touching handles: a respawn racing
+        # the teardown would re-create workers we are about to reap.
+        self._supervisor_stop.set()
+        if self._supervisor is not None:
+            self._supervisor.join(timeout=max(self.shutdown_grace,
+                                              2 * self._hb_secs + 5.0))
         for h in self._handles:
             if h.alive:
                 try:
@@ -1140,7 +1510,12 @@ class ClusterFrontend:
                 self._pin_data[key] = pinned
             return key
 
-    def _register_on(self, widx: int, record: _TenantRecord) -> dict:
+    def _register_on(self, widx: int, record: _TenantRecord,
+                     handle: "_WorkerHandle | None" = None) -> dict:
+        # ``handle`` overrides the published table during a respawn: the
+        # replacement must be fully registered BEFORE it appears in
+        # self._handles (submits racing the respawn must never see a
+        # half-registered worker).
         msg = {"op": "register", "tenant": record.name,
                "tdg": record.tdg_dict,
                "outputs": list(record.outputs) if record.outputs else None,
@@ -1153,8 +1528,15 @@ class ClusterFrontend:
             if ship_pin:
                 msg["pinned"] = self._pin_data[record.pin_key]
         if self.ship_artifacts and record.artifact is not None:
-            msg["artifact"] = record.artifact
-        reply = self._handles[widx].request(msg)
+            artifact = record.artifact
+            if _faults.ENABLED:
+                # Chaos hook: a "corrupt" rule poisons the shipped bytes —
+                # the worker must reject them loudly (aot_hydrate_failures)
+                # and re-lower, never crash.
+                artifact = _faults.corrupt_artifact(artifact)
+            msg["artifact"] = artifact
+        reply = (handle if handle is not None
+                 else self._handles[widx]).request(msg)
         record.worker = widx
         with self._lock:
             if ship_pin:
@@ -1212,10 +1594,16 @@ class ClusterFrontend:
         self._register_on(widx, record)
         return widx
 
-    def submit(self, tenant_name: str, buffers: Mapping[str, Any]) -> Future:
+    def submit(self, tenant_name: str, buffers: Mapping[str, Any],
+               deadline_s: float | None = None) -> Future:
         """RPC front on ``RegionServer.submit``: returns a Future of the
         output buffer dict. A worker death mid-flight requeues the request
-        to a sibling (once) before surfacing the failure.
+        to a sibling (or the slot's respawned replacement) with jittered
+        backoff, up to the per-request retry budget; the request's
+        deadline bounds the whole affair (``deadline_s`` seconds from now,
+        default ``request_deadline`` / ``REPRO_REQUEST_DEADLINE``; pass 0
+        to disable). Payloads are pure functions over explicit buffers, so
+        a retried request is safe to re-execute.
 
         This is the frontend's hot path and it takes NO frontend-wide
         lock: the tenant lookup is a GIL-atomic dict read, the closed
@@ -1231,19 +1619,26 @@ class ClusterFrontend:
         if self._closed:
             raise RuntimeError(f"frontend {self.name!r} is closed")
         record.requests += 1
+        budget = deadline_s if deadline_s is not None \
+            else self._request_deadline
+        deadline = (time.monotonic() + budget
+                    if budget is not None and budget > 0 else None)
         outer: Future = Future()
-        self._submit_attempt(record, dict(buffers), outer, retries=1)
+        self._submit_attempt(record, dict(buffers), outer,
+                             retries=self._retry_budget, deadline=deadline)
         return outer
 
     def _submit_attempt(self, record: _TenantRecord, buffers: dict,
-                        outer: Future, retries: int) -> None:
+                        outer: Future, retries: int,
+                        deadline: float | None) -> None:
         try:
             widx = self._worker_for(record)
-            inner = self._handles[widx].submit_async(record.name, buffers)
+            inner = self._handles[widx].submit_async(record.name, buffers,
+                                                     deadline=deadline)
         except WorkerDied as exc:
             self._retry_or_fail(record, buffers, outer, retries, exc,
                                 {record.worker} if record.worker is not None
-                                else set())
+                                else set(), deadline)
             return
         except Exception as exc:
             outer.set_exception(exc)
@@ -1253,8 +1648,11 @@ class ClusterFrontend:
             exc = f.exception()
             if isinstance(exc, WorkerDied):
                 self._retry_or_fail(record, buffers, outer, retries, exc,
-                                    {widx})
+                                    {widx}, deadline)
             elif exc is not None:
+                # DeadlineExceeded and QueueFull land here too: terminal by
+                # design (the deadline has passed / the fleet is telling us
+                # to back off — re-dispatching would amplify the overload).
                 outer.set_exception(exc)
             else:
                 outer.set_result(f.result()["out"])
@@ -1262,21 +1660,67 @@ class ClusterFrontend:
 
     def _retry_or_fail(self, record: _TenantRecord, buffers: dict,
                        outer: Future, retries: int, exc: Exception,
-                       exclude: set[int]) -> None:
-        if retries <= 0:
-            outer.set_exception(exc)
+                       exclude: set[int], deadline: float | None) -> None:
+        """Retry a ``WorkerDied`` request elsewhere, after jittered backoff.
+
+        Runs on reader/callback threads, so it never sleeps: the delay is
+        a ``threading.Timer``. The backoff matters on two axes — a mass
+        death doesn't thundering-herd the surviving siblings, and it gives
+        the supervisor a beat to respawn the slot (the exclusion set is
+        re-intersected with the *live* fleet at fire time, so a respawned
+        same-slot worker is eligible again — without that, a one-worker
+        fleet could never recover).
+        """
+        if retries <= 0 or (deadline is not None
+                            and time.monotonic() >= deadline):
+            outer.set_exception(
+                exc if deadline is None or time.monotonic() < deadline
+                else DeadlineExceeded(
+                    f"tenant {record.name!r}: deadline passed during "
+                    f"failover ({exc})"))
             return
-        try:
-            self._failover(record, exclude=exclude)
-        except Exception as fail_exc:
-            outer.set_exception(fail_exc)
-            return
-        self._submit_attempt(record, buffers, outer, retries - 1)
+        with self._lock:
+            self.retries += 1
+        attempt = self._retry_budget - retries + 1
+        delay = min(_BACKOFF_CAP, _BACKOFF_BASE * (2 ** (attempt - 1)))
+        delay *= 0.5 + random.random()      # jitter: 0.5x..1.5x
+
+        def _fire() -> None:
+            if self._closed:
+                outer.set_exception(ClusterError(
+                    f"frontend {self.name!r} closed during failover"))
+                return
+            try:
+                excl = set(exclude) & self._alive()
+                self._failover(record, exclude=excl)
+            except ClusterError:
+                # No candidate yet (lone worker still respawning): burn a
+                # retry and try again after another backoff.
+                self._retry_or_fail(record, buffers, outer, retries - 1,
+                                    exc, exclude, deadline)
+                return
+            except Exception as fail_exc:
+                outer.set_exception(fail_exc)
+                return
+            self._submit_attempt(record, buffers, outer, retries - 1,
+                                 deadline)
+        t = threading.Timer(delay, _fire)
+        t.daemon = True
+        t.start()
 
     def serve(self, tenant_name: str, buffers: Mapping[str, Any],
               timeout: float | None = 120.0) -> dict:
-        """Synchronous :meth:`submit`."""
-        return self.submit(tenant_name, buffers).result(timeout=timeout)
+        """Synchronous :meth:`submit`; ``timeout`` doubles as the request
+        deadline, so a worker that can never answer yields a typed
+        ``DeadlineExceeded`` rather than a bare futures timeout. The wait
+        itself gets one supervisor tick of slack past the deadline — the
+        sweep is what converts "no reply" into the typed error, and it
+        must win the race against the raw futures timeout.
+        """
+        fut = self.submit(tenant_name, buffers, deadline_s=timeout)
+        wait = (timeout + max(2 * self._hb_secs, 1.0)
+                if timeout is not None else None)
+        return fut.result(timeout=wait)
 
     # -------------------------------------------------------------- metrics
     def health(self) -> list[dict]:
@@ -1322,7 +1766,8 @@ class ClusterFrontend:
                 per_worker[h.idx] = None
         metric_keys = ("admitted", "completed", "failed", "batches",
                        "coalesced_requests", "batch_fallbacks", "aot_served",
-                       "aot_hydrate_failures", "aot_topology_rejects")
+                       "aot_hydrate_failures", "aot_topology_rejects",
+                       "shed", "deadline_sheds")
         agg = {k: 0 for k in metric_keys}
         pool = {"hits": 0, "misses": 0, "evictions": 0, "hydrations": 0,
                 "entries": 0}
@@ -1371,6 +1816,19 @@ class ClusterFrontend:
                 "alive": len(self._alive()),
                 "worker_deaths": self.worker_deaths,
                 "requeues": self.requeues,
+                "retries": self.retries,
+                "respawns": self.respawns,
+                "respawn_failures": self.respawn_failures,
+                "heartbeat_misses": self.heartbeat_misses,
+                "deadline_failures": self.deadline_failures,
+                "supervisor": {
+                    "enabled": self._hb_secs > 0,
+                    "heartbeat_secs": self._hb_secs,
+                    "lease_misses": self._lease_misses,
+                    "respawn_max": self._respawn_max,
+                    "request_deadline": self._request_deadline,
+                    "retry_budget": self._retry_budget,
+                },
                 "artifacts_shipped": self.artifacts_shipped,
                 "artifact_bytes_shipped": self.artifact_bytes_shipped,
                 "pin_groups_shipped": self.pin_groups_shipped,

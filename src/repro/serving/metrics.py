@@ -86,6 +86,8 @@ class ServerMetrics:
         self.aot_served = 0           # requests served by a hydrated .aot
         self.aot_hydrate_failures = 0  # sidecar present but unusable -> lazy
         self.aot_topology_rejects = 0  # artifact for a different topology
+        self.shed = 0                 # rejected at admission: queue bound hit
+        self.deadline_sheds = 0       # dropped unexecuted: deadline expired
         self.occupancy_sum = 0
         self.occupancy_max = 0
         self.queue_depth_peak = 0
@@ -139,6 +141,22 @@ class ServerMetrics:
         with self._lock:
             self.batch_fallbacks += 1
 
+    def on_shed(self, n: int = 1) -> None:
+        """``n`` requests refused at admission because the queue was at its
+        configured bound — the backpressure signal. A shed request was
+        never admitted, so it does not count in ``admitted``/``failed``."""
+        with self._lock:
+            self.shed += n
+
+    def on_deadline_shed(self, n: int = 1) -> None:
+        """``n`` admitted requests dropped *before execution* because their
+        deadline had already passed — replaying them would burn compute on
+        an answer nobody is waiting for. Counted in ``failed`` too (their
+        futures resolve with ``DeadlineExceeded``); this counter isolates
+        the deadline-driven subset."""
+        with self._lock:
+            self.deadline_sheds += n
+
     def on_aot_hydrate_failure(self) -> None:
         """A warm artifact existed but could not be hydrated.
 
@@ -179,6 +197,8 @@ class ServerMetrics:
                 "aot_served": self.aot_served,
                 "aot_hydrate_failures": self.aot_hydrate_failures,
                 "aot_topology_rejects": self.aot_topology_rejects,
+                "shed": self.shed,
+                "deadline_sheds": self.deadline_sheds,
                 "batch_occupancy_mean": round(mean_occ, 3),
                 "batch_occupancy_max": self.occupancy_max,
                 "queue_depth_peak": self.queue_depth_peak,

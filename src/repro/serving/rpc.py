@@ -55,7 +55,20 @@ what a corrupt or hostile length prefix may allocate. Transport knobs —
 ``REPRO_RPC_TRANSPORT`` (``tcp|shm|auto``), ``REPRO_RPC_WINDOW``
 (pipelining window), ``REPRO_RPC_SHM_BYTES`` / ``REPRO_RPC_SHM_MIN_BYTES``
 (ring size / per-blob shm threshold) — are parsed here next to the wire
-format they configure.
+format they configure, as are the *liveness* knobs the cluster supervisor
+consumes: ``REPRO_HEARTBEAT_SECS`` (lease probe period, ``<= 0`` disables)
+and ``REPRO_LEASE_MISSES`` (consecutive unanswered probes before a worker
+is declared dead). Heartbeat frames themselves (:data:`HEARTBEAT_OP`,
+:func:`heartbeat_frame`) are the lightest message the protocol carries —
+a two-key header, no blobs — and are answered on the worker's *connection*
+thread, never queued behind replay work, which is exactly what lets the
+supervisor tell a slow worker (acks heartbeats, results late) from a dead
+one (acks nothing).
+
+Both :meth:`RpcConnection.send` and :meth:`RpcConnection.recv` carry a
+fault-injection hook (:mod:`repro.serving.faults`) behind a single
+module-bool guard — zero work on the hot path unless a chaos plan is
+armed.
 
 The connection accounts real wire traffic in both directions plus codec
 time (``encode_seconds`` / ``decode_seconds``) and shm data-plane bytes,
@@ -73,6 +86,8 @@ import time
 from typing import Any
 
 import numpy as np
+
+from . import faults as _faults
 
 _U32 = struct.Struct(">I")
 _U64 = struct.Struct(">Q")
@@ -92,6 +107,18 @@ _TRANSPORT_ENV = "REPRO_RPC_TRANSPORT"
 _WINDOW_ENV = "REPRO_RPC_WINDOW"
 _SHM_BYTES_ENV = "REPRO_RPC_SHM_BYTES"
 _SHM_MIN_ENV = "REPRO_RPC_SHM_MIN_BYTES"
+_HEARTBEAT_ENV = "REPRO_HEARTBEAT_SECS"
+_LEASE_ENV = "REPRO_LEASE_MISSES"
+
+#: The heartbeat frame op. A probe is ``{"op": "hb", "id": N}``; the ack
+#: echoes the id with ``{"op": "hb-ack", "id": N}``.
+HEARTBEAT_OP = "hb"
+HEARTBEAT_ACK_OP = "hb-ack"
+
+
+def heartbeat_frame(mid: int) -> dict:
+    """One lease probe (the smallest frame the protocol carries)."""
+    return {"op": HEARTBEAT_OP, "id": mid}
 
 #: Version pinned by the connection handshake. Bump when frames stop being
 #: mutually intelligible; the handshake turns a skew into a loud
@@ -185,6 +212,37 @@ def shm_ring_bytes(explicit: int | None = None) -> int:
     if size < 1 << 12:
         raise ValueError(f"shm ring of {size} bytes is too small to be useful")
     return size
+
+
+def heartbeat_secs(explicit: float | None = None) -> float:
+    """Lease probe period in seconds (``REPRO_HEARTBEAT_SECS``, default 2).
+
+    ``<= 0`` disables the supervisor's heartbeat machinery entirely (death
+    is then only noticed on socket error — the pre-supervisor behaviour).
+    """
+    raw = explicit if explicit is not None \
+        else os.environ.get(_HEARTBEAT_ENV, "2.0")
+    try:
+        return float(raw)
+    except (TypeError, ValueError):
+        raise ValueError(
+            f"{_HEARTBEAT_ENV}={raw!r} is not a number of seconds") from None
+
+
+def lease_misses(explicit: int | None = None) -> int:
+    """Consecutive unanswered probes before a worker is declared dead
+    (``REPRO_LEASE_MISSES``, default 3). The lease a worker holds is
+    ``heartbeat_secs * lease_misses`` of silence."""
+    raw = explicit if explicit is not None \
+        else os.environ.get(_LEASE_ENV, "3")
+    try:
+        misses = int(raw)
+    except (TypeError, ValueError):
+        raise ValueError(
+            f"{_LEASE_ENV}={raw!r} is not an integer miss budget") from None
+    if misses < 1:
+        raise ValueError(f"lease miss budget must be >= 1, got {misses}")
+    return misses
 
 
 def _shm_min_bytes() -> int:
@@ -708,6 +766,16 @@ class RpcConnection:
         return "shm" if self._send_ring is not None else "tcp"
 
     def send(self, obj: Any, codec: str = "json") -> None:
+        sends = 1
+        if _faults.ENABLED:
+            # Chaos hook: the plan may kill this process, delay the send,
+            # drop the frame on the floor (the peer never sees it — the
+            # wire analogue of a lost packet burst), or duplicate it.
+            action = _faults.on_point("send", _faults.frame_op(obj))
+            if action == "drop":
+                return
+            if action == "dup":
+                sends = 2
         t0 = time.perf_counter()
         ring = self._send_ring if codec == "binary" else None
         body, shm_bytes = _encode_frame(obj, codec=codec, ring=ring,
@@ -720,9 +788,10 @@ class RpcConnection:
         enc_s = time.perf_counter() - t0
         payload = _U64.pack(len(body)) + body
         with self._wlock:
-            self.sock.sendall(payload)
-            self._bytes_sent += len(payload)
-            self._messages_sent += 1
+            for _ in range(sends):
+                self.sock.sendall(payload)
+                self._bytes_sent += len(payload)
+                self._messages_sent += 1
             self._encode_seconds += enc_s
             self._shm_bytes_sent += shm_bytes
 
@@ -755,6 +824,13 @@ class RpcConnection:
                 if ring is not None and isinstance(pos, int) and pos >= 0:
                     ring.ack(pos)
                 continue        # transport bookkeeping, not a message
+            if _faults.ENABLED:
+                # Chaos hook (after decode, so a "drop" models a frame that
+                # made it across the wire but was lost before the app saw
+                # it — e.g. a result the frontend never resolves).
+                action = _faults.on_point("recv", _faults.frame_op(msg))
+                if action == "drop":
+                    continue
             return msg
 
     def request(self, obj: Any) -> Any:

@@ -59,6 +59,36 @@ from ..kernels import registry as _kreg
 from .metrics import ServerMetrics
 from .pool import PoolEntry, WarmPool
 
+#: Admission-queue bound (requests). ``0`` / unset = unbounded (the
+#: pre-backpressure behaviour). When the queue is at the bound, new
+#: submissions are refused with :class:`QueueFull` instead of growing the
+#: queue without limit under overload.
+QUEUE_BOUND_ENV = "REPRO_QUEUE_BOUND"
+
+
+class QueueFull(RuntimeError):
+    """Admission refused: the server's bounded queue is at capacity.
+
+    This is the load-shedding signal — the submitter should back off or
+    route elsewhere. Deliberately a *typed* error so the cluster frontend
+    can tell backpressure (don't retry the same worker immediately) from a
+    worker fault (retry a sibling)."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """The request's deadline passed before a result could be produced.
+
+    Raised into the request future either at admission/dispatch time (the
+    request was shed unexecuted — see ``deadline_sheds``) or by the cluster
+    frontend's deadline sweep when a reply never arrived. Terminal: the
+    retry machinery never retries past a deadline."""
+
+
+def queue_bound_default() -> int:
+    """The env-configured admission bound (0 = unbounded)."""
+    raw = os.environ.get(QUEUE_BOUND_ENV, "").strip()
+    return max(0, int(raw)) if raw else 0
+
 
 @dataclasses.dataclass
 class Tenant:
@@ -110,10 +140,10 @@ class Tenant:
 
 class _Request:
     __slots__ = ("tenant", "buffers", "canon_buffers", "key", "future",
-                 "t_submit", "served_aot")
+                 "t_submit", "served_aot", "deadline")
 
     def __init__(self, tenant: Tenant, buffers: dict, canon_buffers: dict,
-                 key: tuple):
+                 key: tuple, deadline: float | None = None):
         self.tenant = tenant
         self.buffers = buffers
         self.canon_buffers = canon_buffers
@@ -121,6 +151,7 @@ class _Request:
         self.future: Future = Future()
         self.t_submit = time.monotonic()
         self.served_aot = False
+        self.deadline = deadline       # absolute time.monotonic(), or None
 
 
 class RegionServer:
@@ -138,6 +169,11 @@ class RegionServer:
         dispatching a partial batch. Bounded head-of-line latency.
     pool_capacity:
         LRU bound on the warm-executable pool.
+    queue_bound:
+        Admission-queue bound (requests). ``None`` honours
+        ``REPRO_QUEUE_BOUND``; ``0`` means unbounded. At the bound, new
+        submissions are refused with :class:`QueueFull` (counted in the
+        ``shed`` metric) instead of growing the queue under overload.
     fuse:
         Wave-fusion policy handed to every lowering this server performs
         (single-request AND batched paths): ``True`` / ``False`` /
@@ -150,10 +186,13 @@ class RegionServer:
 
     def __init__(self, max_batch: int = 8, max_wait_ms: float = 2.0,
                  pool_capacity: int = 64, fuse: bool | str = "auto",
-                 name: str = "region-server", autostart: bool = True):
+                 name: str = "region-server", autostart: bool = True,
+                 queue_bound: int | None = None):
         self.name = name
         self.max_batch = max(1, int(max_batch))
         self.max_wait_s = max(0.0, float(max_wait_ms)) / 1e3
+        self.queue_bound = (queue_bound_default() if queue_bound is None
+                            else max(0, int(queue_bound)))
         self.fuse = fuse
         self.pool = WarmPool(capacity=pool_capacity)
         self.metrics = ServerMetrics()
@@ -297,8 +336,8 @@ class RegionServer:
         tenant.aot_sig = aot_sig
 
     # ------------------------------------------------------------ admission
-    def _make_request(self, tenant_name: str,
-                      buffers: Mapping[str, Any]) -> "_Request":
+    def _make_request(self, tenant_name: str, buffers: Mapping[str, Any],
+                      deadline: float | None = None) -> "_Request":
         """Validate + canonicalize one submission into a queue entry."""
         tenant = self.tenant(tenant_name)
         missing = [s for s in tenant.input_slots if s not in buffers]
@@ -310,14 +349,27 @@ class RegionServer:
                  if k in tenant.slot_map}
         key = (tenant.sig, tenant.payload_ids, buffers_signature(canon),
                tenant.kernel_mode)
-        return _Request(tenant, buffers, canon, key)
+        return _Request(tenant, buffers, canon, key, deadline=deadline)
 
-    def submit(self, tenant_name: str, buffers: Mapping[str, Any]) -> Future:
-        """Enqueue one request; resolves to the region's output dict."""
-        req = self._make_request(tenant_name, buffers)
+    def submit(self, tenant_name: str, buffers: Mapping[str, Any],
+               deadline: float | None = None) -> Future:
+        """Enqueue one request; resolves to the region's output dict.
+
+        ``deadline`` is an absolute ``time.monotonic()`` instant (or
+        ``None`` for no deadline): a request still undispatched when it
+        passes is shed (``DeadlineExceeded`` future, ``deadline_sheds``
+        counter) instead of wasting a replay. Raises :class:`QueueFull`
+        when the bounded admission queue is at capacity.
+        """
+        req = self._make_request(tenant_name, buffers, deadline=deadline)
         with self._cv:
             if self._closed:
                 raise RuntimeError(f"server {self.name!r} is closed")
+            if self.queue_bound and len(self._queue) >= self.queue_bound:
+                self.metrics.on_shed()
+                raise QueueFull(
+                    f"server {self.name!r} admission queue is at its bound "
+                    f"({self.queue_bound}); request shed")
             self._queue.append(req)
             req.tenant.requests += 1
             depth = len(self._queue)
@@ -325,42 +377,73 @@ class RegionServer:
         self.metrics.on_admit(depth)
         return req.future
 
-    def submit_many(self, items: list[tuple[str, Mapping[str, Any]]]
-                    ) -> list[Future]:
+    def submit_many(self, items: list[tuple]) -> list[Future]:
         """Admit a whole batch frame under ONE queue-lock acquisition.
 
-        ``items`` is ``[(tenant_name, buffers), ...]``; the return list is
-        positionally aligned with it. Per-entry validation failures
-        (unknown tenant, missing input slots) come back as pre-failed
-        futures — one bad entry in a wire batch must not reject its
-        neighbours, and the cluster tier needs a per-entry error to route
-        back to the right caller.
+        ``items`` entries are ``(tenant_name, buffers)`` or
+        ``(tenant_name, buffers, deadline)`` (absolute monotonic, ``None``
+        ok); the return list is positionally aligned with it. Per-entry
+        validation failures (unknown tenant, missing input slots) come back
+        as pre-failed futures — one bad entry in a wire batch must not
+        reject its neighbours, and the cluster tier needs a per-entry error
+        to route back to the right caller. Entries that do not fit under
+        the queue bound come back pre-failed with :class:`QueueFull`; an
+        entry whose deadline has *already* passed is shed at admission
+        (pre-failed ``DeadlineExceeded``) without touching the queue.
         """
         results: list[Future] = []
         admitted: list[_Request] = []
-        for tenant_name, buffers in items:
-            try:
-                req = self._make_request(tenant_name, buffers)
-            except Exception as exc:
+        now = time.monotonic()
+        n_expired = 0
+        for item in items:
+            tenant_name, buffers = item[0], item[1]
+            deadline = item[2] if len(item) > 2 else None
+            if deadline is not None and deadline <= now:
                 fut: Future = Future()
+                fut.set_exception(DeadlineExceeded(
+                    f"deadline passed before admission for tenant "
+                    f"{tenant_name!r}"))
+                results.append(fut)
+                n_expired += 1
+                continue
+            try:
+                req = self._make_request(tenant_name, buffers,
+                                         deadline=deadline)
+            except Exception as exc:
+                fut = Future()
                 fut.set_exception(exc)
                 results.append(fut)
                 continue
             admitted.append(req)
             results.append(req.future)
+        if n_expired:
+            self.metrics.on_deadline_shed(n_expired)
         if admitted:
+            overflow: list[_Request] = []
             with self._cv:
                 if self._closed:
                     err = RuntimeError(f"server {self.name!r} is closed")
                     for req in admitted:
                         req.future.set_exception(err)
                     return results
-                for req in admitted:
+                for i, req in enumerate(admitted):
+                    if self.queue_bound and \
+                            len(self._queue) >= self.queue_bound:
+                        overflow = admitted[i:]
+                        admitted = admitted[:i]
+                        break
                     self._queue.append(req)
                     req.tenant.requests += 1
                 depth = len(self._queue)
                 self._cv.notify_all()
-            self.metrics.on_admit_many(len(admitted), depth)
+            for req in overflow:
+                req.future.set_exception(QueueFull(
+                    f"server {self.name!r} admission queue is at its bound "
+                    f"({self.queue_bound}); request shed"))
+            if overflow:
+                self.metrics.on_shed(len(overflow))
+            if admitted:
+                self.metrics.on_admit_many(len(admitted), depth)
         return results
 
     def serve(self, tenant_name: str, buffers: Mapping[str, Any],
@@ -375,6 +458,7 @@ class RegionServer:
         return {
             "server": self.name,
             "max_batch": self.max_batch,
+            "queue_bound": self.queue_bound,
             "tenants": tenants,
             "metrics": self.metrics.snapshot(),
             "pool": self.pool.stats(),
@@ -425,6 +509,22 @@ class RegionServer:
 
     # ------------------------------------------------------------- execution
     def _execute_group(self, group: list[_Request]) -> None:
+        # Shed members whose deadline already passed BEFORE spending a
+        # replay on them: the submitter stopped waiting, so the only thing
+        # executing buys is wasted compute in front of live requests.
+        now = time.monotonic()
+        expired = [r for r in group if r.deadline is not None
+                   and r.deadline <= now]
+        if expired:
+            group = [r for r in group if r not in expired]
+            self.metrics.on_deadline_shed(len(expired))
+            for r in expired:
+                self.metrics.on_done(now - r.t_submit, failed=True)
+                r.future.set_exception(DeadlineExceeded(
+                    f"deadline passed while queued for tenant "
+                    f"{r.tenant.name!r}"))
+            if not group:
+                return
         coalesced = False
         try:
             if len(group) == 1:

@@ -50,6 +50,7 @@ import threading
 import time
 from multiprocessing import shared_memory
 
+from . import faults as _faults
 from .rpc import ProtocolError
 
 #: Default per-direction ring size (bytes); override with
@@ -175,6 +176,16 @@ class ShmRing:
 
     def ack(self, pos: int) -> None:
         """Apply a peer ack: everything up to absolute ``pos`` is consumed."""
+        if _faults.ENABLED:
+            # Chaos hook: dropping an ack stalls the ring — the credit it
+            # carried never lands, so a sender that fills the segment blocks
+            # in alloc() until a LATER cumulative ack arrives (acks are
+            # absolute positions, so one lost ack self-heals under further
+            # traffic; a stalled *idle* ring is what the connection-close
+            # wakeup and the supervisor's lease exist to break).
+            action = _faults.on_point("ring_ack")
+            if action == "drop":
+                return
         with self._cv:
             if pos > self._tail:
                 self._tail = pos

@@ -32,6 +32,7 @@ import multiprocessing
 import re
 from typing import Any, Mapping
 
+from . import faults as _faults
 from . import rpc
 
 #: ``host:port`` — hostname/IPv4 label followed by a port. (IPv6 literals
@@ -83,6 +84,26 @@ class SpawnedWorker:
     info: dict = dataclasses.field(default_factory=dict)   # handshake ack
     transport: str = "tcp"         # negotiated data plane: "tcp" | "shm"
     shm_fallback: bool = False     # shm was attempted and refused/failed
+    spawner: Any = None            # producer, for respawn(); None = remote
+
+    def respawn(self, timeout: float = 120.0) -> "SpawnedWorker":
+        """Start a replacement worker in this one's slot.
+
+        The self-healing contract the cluster supervisor builds on: reap
+        whatever is left of this worker's process, spawn a fresh one, and
+        hand back a new ready :class:`SpawnedWorker` with the same ``idx``.
+        The replacement's first connection is **TCP-only** even when the
+        spawner would normally negotiate shm — the death that got us here
+        may have been mid-ring-write, and a clean control plane first is
+        worth one counted ``shm_fallback`` (a later reconnect can upgrade).
+        Remote workers are never respawned from here: their lifecycle
+        belongs to whoever bootstrapped them (:class:`SpawnError`).
+        """
+        if self.spawner is None or self.kind != "local":
+            raise SpawnError(
+                f"worker {self.idx} ({self.kind}) cannot be respawned from "
+                "this frontend — its process lifecycle is owned elsewhere")
+        return self.spawner.respawn(self, timeout=timeout)
 
 
 def _negotiate_transport(conn: rpc.RpcConnection, attempt: bool,
@@ -150,6 +171,11 @@ class LocalSpawner:
         self._ctx = multiprocessing.get_context(start_method)
 
     def launch(self, idx: int, name: str) -> tuple:
+        if _faults.ENABLED:
+            # Chaos hook: a "fail" rule here simulates a host that cannot
+            # start workers (fork bomb protection, OOM) — the supervisor's
+            # respawn backoff is what this exercises.
+            _faults.on_point("spawn")
         parent_conn, child_conn = self._ctx.Pipe()
         proc = self._ctx.Process(
             target=_worker_main,
@@ -160,7 +186,8 @@ class LocalSpawner:
         child_conn.close()
         return idx, proc, parent_conn
 
-    def connect(self, pending: tuple, timeout: float) -> SpawnedWorker:
+    def connect(self, pending: tuple, timeout: float,
+                force_tcp: bool = False) -> SpawnedWorker:
         idx, proc, parent_conn = pending
         if not parent_conn.poll(timeout):
             raise SpawnError(f"worker {idx} did not report its RPC port "
@@ -168,17 +195,56 @@ class LocalSpawner:
         port = parent_conn.recv()
         parent_conn.close()
         conn = rpc.connect("127.0.0.1", port, timeout=timeout)
+        would_shm = self.transport in ("shm", "auto")
         try:
             info = rpc.client_handshake(conn, token=self.token)
             transport, fallback = _negotiate_transport(
-                conn, self.transport in ("shm", "auto"), self.shm_bytes)
+                conn, would_shm and not force_tcp, self.shm_bytes)
         except Exception:
             conn.close()
             raise
+        if force_tcp and would_shm:
+            fallback = True     # shm deliberately suppressed; still counted
         return SpawnedWorker(idx=idx, kind="local",
                              address=("127.0.0.1", port), conn=conn,
                              process=proc, info=info,
-                             transport=transport, shm_fallback=fallback)
+                             transport=transport, shm_fallback=fallback,
+                             spawner=self)
+
+    def respawn(self, old: SpawnedWorker, timeout: float = 120.0
+                ) -> SpawnedWorker:
+        """Reap ``old``'s process and spawn a ready replacement in its slot.
+
+        The replacement's first connection is TCP-only (see
+        :meth:`SpawnedWorker.respawn`). The old connection is NOT touched
+        here — the supervisor already closed it when it declared the worker
+        dead (that close is what unlinks the shm rings and wakes any
+        blocked dispatcher).
+        """
+        proc = old.process
+        if proc is not None and proc.is_alive():
+            # A declared-dead-but-breathing process (hung, stopped, or just
+            # slow past its lease) must not linger beside its replacement.
+            proc.terminate()
+            proc.join(timeout=5.0)
+            if proc.is_alive():
+                proc.kill()
+                proc.join(timeout=5.0)
+        elif proc is not None:
+            proc.join(timeout=5.0)      # reap the zombie
+        name = getattr(proc, "name", None) or f"repro-worker-{old.idx}"
+        pending = self.launch(old.idx, name)
+        try:
+            return self.connect(pending, timeout, force_tcp=True)
+        except Exception:
+            # The replacement never became ready; don't leak its process.
+            _, proc2, _ = pending
+            if proc2.is_alive():
+                proc2.terminate()
+                proc2.join(timeout=5.0)
+                if proc2.is_alive():
+                    proc2.kill()
+            raise
 
 
 class RemoteSpawner:

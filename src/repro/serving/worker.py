@@ -146,6 +146,10 @@ def main(argv=None) -> int:
                     help="RegionServer admission window")
     ap.add_argument("--pool-capacity", type=int, default=64,
                     help="warm executable pool LRU bound")
+    ap.add_argument("--queue-bound", type=int, default=None,
+                    help="admission-queue depth bound; submissions beyond "
+                         "it are shed with QueueFull (default: "
+                         "$REPRO_QUEUE_BOUND or unbounded)")
     ap.add_argument("--transport", default=None,
                     choices=("tcp", "shm", "auto"),
                     help="data-plane policy for THIS worker (default: "
@@ -161,7 +165,8 @@ def main(argv=None) -> int:
     node = WorkerNode(registry, host=host, port=port, token=args.token,
                       transport=args.transport,
                       max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
-                      pool_capacity=args.pool_capacity)
+                      pool_capacity=args.pool_capacity,
+                      queue_bound=args.queue_bound)
     if args.port_file:
         tmp = args.port_file + ".tmp"
         with open(tmp, "w") as f:

@@ -607,7 +607,11 @@ class TestHydrateFailureMetricInProcess:
 
 class TestWorkerDeathRequeue:
     def test_kill_requeues_to_sibling_with_parity(self):
+        # heartbeat_secs=0 pins the supervisor OFF: this test asserts the
+        # bare death->requeue contract (victim stays dead, tenant moves to
+        # the sibling for good); self-healing respawn has its own tests.
         with ClusterFrontend(workers=2, registry=REGISTRY_SPEC,
+                             heartbeat_secs=0,
                              name="test-kill") as fe:
             shared = jnp.asarray(
                 np.random.default_rng(7).standard_normal((DIM, DIM)),
@@ -635,6 +639,68 @@ class TestWorkerDeathRequeue:
             assert st["frontend"]["worker_deaths"] >= 1
             assert st["frontend"]["requeues"] >= 1
             assert st["frontend"]["alive"] == 1
+
+    def test_kill_mid_window_all_futures_resolve(self, monkeypatch):
+        # The hard case: the pipeline window holds SEVERAL inflight batch
+        # frames (tiny _WIRE_BATCH forces multi-frame windows) on a
+        # shm-transport worker when it is SIGKILLed mid-conversation.
+        # Every outstanding future must resolve — retried to the sibling
+        # with ground-truth parity, zero hangs — and the respawned
+        # replacement comes back on TCP, leaving a mixed shm+tcp fleet
+        # that still serves both tenants correctly.
+        import repro.serving.cluster as cluster_mod
+        monkeypatch.setattr(cluster_mod, "_WIRE_BATCH", 2)
+        with ClusterFrontend(workers=2, registry=REGISTRY_SPEC,
+                             transport="shm", window=4,
+                             heartbeat_secs=0.3, lease_misses=3,
+                             respawn_max=3, name="test-midwindow") as fe:
+            assert all(h.transport == "shm" for h in fe._handles)
+            shared = jnp.asarray(
+                np.random.default_rng(17).standard_normal((DIM, DIM)),
+                jnp.float32)
+            tdg_a = demo_region("mwA[0]")
+            tdg_b = demo_region("mwB[0]", body=demo_affine)
+            fe.register_tenant("mwA", tdg_a, pinned={"w": shared})
+            fe.register_tenant("mwB", tdg_b, pinned={"w": shared})
+            bufs = {f"x{s}": jnp.asarray(
+                np.random.default_rng(18 + s).standard_normal((DIM, DIM)),
+                jnp.float32) for s in range(2)}
+            send = {k: v for k, v in bufs.items() if k != "w"}
+            ground_a = ReplayExecutor(tdg_a).run({**bufs, "w": shared})
+            ground_b = ReplayExecutor(tdg_b).run({**bufs, "w": shared})
+            # warm both workers so the kill round is pure replay traffic
+            fe.serve("mwA", send, timeout=300)
+            fe.serve("mwB", send, timeout=300)
+            victim = fe.tenant("mwA").worker
+            respawns_before = fe.respawns
+            futs = [fe.submit("mwA", send) for _ in range(16)]
+            fe._handles[victim].process.kill()      # SIGKILL mid-window
+            for f in futs:
+                out = f.result(timeout=120)          # zero hangs
+                for key in ground_a:
+                    np.testing.assert_allclose(
+                        np.asarray(out[key]), np.asarray(ground_a[key]),
+                        rtol=2e-5, atol=2e-5)
+            st = fe.stats()["frontend"]
+            assert st["worker_deaths"] >= 1
+            assert st["requeues"] >= 1
+            # the replacement connects TCP-first: genuinely mixed fleet
+            deadline = time.monotonic() + 120
+            while fe.respawns == respawns_before \
+                    and time.monotonic() < deadline:
+                time.sleep(0.1)
+            assert fe.respawns > respawns_before
+            assert {h.transport for h in fe._handles} == {"shm", "tcp"}
+            out_a = fe.serve("mwA", send, timeout=120)
+            out_b = fe.serve("mwB", send, timeout=120)
+            for key in ground_a:
+                np.testing.assert_allclose(np.asarray(out_a[key]),
+                                           np.asarray(ground_a[key]),
+                                           rtol=2e-5, atol=2e-5)
+            for key in ground_b:
+                np.testing.assert_allclose(np.asarray(out_b[key]),
+                                           np.asarray(ground_b[key]),
+                                           rtol=2e-5, atol=2e-5)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,395 @@
+"""Self-healing cluster tier: fault plans, load shedding, leases, respawn.
+
+The unit suites exercise the deterministic :class:`FaultPlan` machinery and
+the ``RegionServer`` shedding paths with no processes at all; the
+process-spawning suites drive the real supervisor — a SIGSTOPped worker
+(lease expiry without a socket error), injected frame drops (deadline
+sweep), injected spawn failures (respawn backoff), and the shm-leak /
+close-race regressions — against spawned jax workers, so they share
+class-scoped frontends where they can and keep heartbeats fast.
+"""
+import json
+import os
+import signal
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ReplayExecutor
+from repro.serving import (ClusterFrontend, DeadlineExceeded, FaultPlan,
+                           InjectedFault, QueueFull, RegionServer)
+from repro.serving import faults
+from repro.serving.demo import DEMO_REGISTRY, demo_region
+
+REGISTRY_SPEC = "repro.serving.demo:DEMO_REGISTRY"
+DIM = 6
+
+
+def _bufs(seed, width=2):
+    rng = np.random.default_rng(seed)
+    b = {f"x{s}": jnp.asarray(rng.standard_normal((DIM, DIM)), jnp.float32)
+         for s in range(width)}
+    b["w"] = jnp.asarray(rng.standard_normal((DIM, DIM)), jnp.float32)
+    return b
+
+
+def _check(out, tdg, bufs):
+    want = ReplayExecutor(tdg).run(dict(bufs))
+    for k in want:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(want[k]),
+                                   rtol=2e-5, atol=2e-5)
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    """Every test starts and ends with fault injection disarmed."""
+    faults.clear()
+    yield
+    faults.clear()
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan unit behaviour (no processes)
+# ---------------------------------------------------------------------------
+
+class TestFaultPlan:
+    def test_validation_is_loud(self):
+        with pytest.raises(ValueError, match="point"):
+            FaultPlan([{"point": "teleport", "action": "drop"}])
+        with pytest.raises(ValueError, match="action"):
+            FaultPlan([{"point": "send", "action": "explode"}])
+        with pytest.raises(ValueError, match="role"):
+            FaultPlan([{"point": "send", "action": "drop", "role": "gpu"}])
+
+    def test_after_and_count_budgets(self):
+        plan = FaultPlan([{"point": "send", "op": "submit_batch",
+                           "after": 2, "count": 2, "action": "drop"}])
+        hits = [plan.consult("frontend", "send", "submit_batch") is not None
+                for _ in range(6)]
+        # events 1,2 skipped (after=2), events 3,4 fire (count=2), then spent
+        assert hits == [False, False, True, True, False, False]
+        assert plan.exhausted()
+
+    def test_op_none_counts_any_frame(self):
+        plan = FaultPlan([{"point": "recv", "after": 1, "count": 1,
+                           "action": "drop"}])
+        assert plan.consult("worker", "recv", "submit_batch") is None
+        assert plan.consult("worker", "recv", "result_batch") is not None
+
+    def test_role_filtering(self):
+        plan = FaultPlan([{"point": "send", "role": "worker",
+                           "action": "drop", "count": -1}])
+        assert plan.consult("frontend", "send", None) is None
+        assert plan.consult("worker", "send", None) is not None
+
+    def test_determinism_same_plan_same_schedule(self):
+        spec = [{"point": "send", "op": "submit_batch", "after": 1,
+                 "count": 2, "action": "drop"}]
+        fired = []
+        for _ in range(2):
+            plan = FaultPlan(spec, seed=7)
+            for _ in range(5):
+                plan.consult("frontend", "send", "submit_batch")
+            fired.append([(f["event"], f["action"]) for f in plan.fired()])
+        assert fired[0] == fired[1] == [(2, "drop"), (3, "drop")]
+
+    def test_corrupt_bytes_is_seeded(self):
+        data = bytes(range(256)) * 4
+        a = FaultPlan(seed=3).corrupt_bytes(data)
+        b = FaultPlan(seed=3).corrupt_bytes(data)
+        c = FaultPlan(seed=4).corrupt_bytes(data)
+        assert a == b and a != data and a != c
+
+    def test_json_roundtrip(self):
+        plan = FaultPlan([{"point": "spawn", "action": "fail", "count": 3}],
+                         seed=11)
+        again = FaultPlan.from_json(plan.to_json())
+        assert again.seed == 11
+        assert again.rules[0]["point"] == "spawn"
+        assert again.rules[0]["count"] == 3
+        with pytest.raises(ValueError, match="not valid JSON"):
+            FaultPlan.from_json("{nope")
+        with pytest.raises(ValueError, match="rules"):
+            FaultPlan.from_json('{"rules": "not-a-list"}')
+
+    def test_install_flips_the_guard(self):
+        assert faults.ENABLED is False
+        faults.install(FaultPlan(), role="frontend")
+        assert faults.ENABLED is True
+        assert faults.active() is not None
+        faults.clear()
+        assert faults.ENABLED is False
+        assert faults.on_point("send") is None     # disarmed: no-op
+
+    def test_explicit_install_wins_over_env(self, monkeypatch):
+        mine = FaultPlan(seed=42)
+        faults.install(mine, role="frontend")
+        monkeypatch.setenv(faults.FAULT_PLAN_ENV,
+                           FaultPlan(seed=1).to_json())
+        faults.init_from_env("frontend")
+        assert faults.active() is mine
+
+    def test_env_arms_when_nothing_installed(self, monkeypatch):
+        monkeypatch.setenv(faults.FAULT_PLAN_ENV,
+                           FaultPlan(seed=9).to_json())
+        faults.init_from_env("worker")
+        assert faults.ENABLED and faults.active().seed == 9
+
+    def test_fail_action_raises_injected_fault(self):
+        faults.install(FaultPlan([{"point": "spawn", "action": "fail"}]),
+                       role="frontend")
+        with pytest.raises(InjectedFault, match="spawn"):
+            faults.on_point("spawn")
+
+
+# ---------------------------------------------------------------------------
+# Load shedding + deadlines on the bare RegionServer (no processes)
+# ---------------------------------------------------------------------------
+
+class TestLoadShedding:
+    def test_submit_queue_bound_sheds_with_queue_full(self):
+        tdg = demo_region("qb[0]")
+        with RegionServer(max_batch=1, autostart=False,
+                          queue_bound=2) as server:
+            server.register_tenant("t", tdg)
+            b = _bufs(1)
+            server.submit("t", b)
+            server.submit("t", b)
+            with pytest.raises(QueueFull, match="bound"):
+                server.submit("t", b)
+            assert server.metrics.snapshot()["shed"] == 1
+            assert server.stats()["queue_bound"] == 2
+
+    def test_queue_bound_env_default(self, monkeypatch):
+        monkeypatch.setenv("REPRO_QUEUE_BOUND", "5")
+        with RegionServer(autostart=False) as server:
+            assert server.queue_bound == 5
+        with RegionServer(autostart=False, queue_bound=0) as server:
+            assert server.queue_bound == 0      # explicit beats env
+
+    def test_submit_many_overflow_prefails_tail(self):
+        tdg = demo_region("qm[0]")
+        with RegionServer(max_batch=1, autostart=False,
+                          queue_bound=2) as server:
+            server.register_tenant("t", tdg)
+            b = _bufs(2)
+            futs = server.submit_many([("t", b)] * 4)
+            done = [f for f in futs if f.done()]
+            assert len(done) == 2               # the overflow pair
+            for f in done:
+                with pytest.raises(QueueFull):
+                    f.result(0)
+            assert server.metrics.snapshot()["shed"] == 2
+
+    def test_expired_deadline_shed_at_admission(self):
+        tdg = demo_region("dl[0]")
+        with RegionServer(max_batch=1, autostart=False) as server:
+            server.register_tenant("t", tdg)
+            b = _bufs(3)
+            past = time.monotonic() - 1.0
+            futs = server.submit_many([("t", b, past), ("t", b, None)])
+            assert futs[0].done()
+            with pytest.raises(DeadlineExceeded, match="before admission"):
+                futs[0].result(0)
+            assert not futs[1].done()
+            assert server.metrics.snapshot()["deadline_sheds"] == 1
+
+    def test_expired_deadline_shed_at_dispatch(self):
+        # Queue the request with a deadline that passes while the
+        # dispatcher is stopped: starting the server must shed it without
+        # spending a replay, and serve the live companion normally.
+        tdg = demo_region("dd[0]")
+        with RegionServer(max_batch=1, autostart=False) as server:
+            server.register_tenant("t", tdg)
+            b = _bufs(4)
+            doomed = server.submit("t", b,
+                                   deadline=time.monotonic() + 0.05)
+            alive = server.submit("t", b)
+            time.sleep(0.1)
+            server.start()
+            with pytest.raises(DeadlineExceeded, match="while queued"):
+                doomed.result(60)
+            _check(alive.result(60), tdg, b)
+            snap = server.metrics.snapshot()
+            assert snap["deadline_sheds"] == 1
+            assert snap["failed"] == 1
+
+
+# ---------------------------------------------------------------------------
+# The live supervisor: leases, respawn, warm recovery (spawns workers)
+# ---------------------------------------------------------------------------
+
+def _wait_for(pred, timeout=90.0, tick=0.05):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(tick)
+    return False
+
+
+class TestSupervisorSelfHealing:
+    @pytest.fixture(scope="class")
+    def frontend(self):
+        fe = ClusterFrontend(workers=1, registry=REGISTRY_SPEC,
+                             heartbeat_secs=0.3, lease_misses=3,
+                             respawn_max=5, name="test-heal")
+        yield fe
+        fe.close()
+
+    def test_sigstop_lease_expiry_distinguishes_wedged_from_dead(
+            self, frontend):
+        # A SIGSTOPped worker produces NO socket error — the connection is
+        # healthy, the process is wedged. Only the heartbeat lease can
+        # notice; the supervisor must declare it dead and respawn it.
+        tdg = demo_region("heal[0]")
+        frontend.register_tenant("heal", tdg)
+        bufs = _bufs(10)
+        _check(frontend.serve("heal", bufs, timeout=120), tdg, bufs)
+        old_pid = frontend._handles[0].process.pid
+        deaths_before = frontend.worker_deaths
+        respawns_before = frontend.respawns
+        os.kill(old_pid, signal.SIGSTOP)
+        try:
+            assert _wait_for(lambda: frontend.worker_deaths > deaths_before)
+        finally:
+            # The spawner's terminate/kill escalation reaps a stopped
+            # process, but never leave it wedged if the assert fails.
+            try:
+                os.kill(old_pid, signal.SIGCONT)
+            except ProcessLookupError:
+                pass
+        assert frontend.heartbeat_misses >= 3   # the lease did the work
+        assert _wait_for(lambda: frontend.respawns > respawns_before
+                         and frontend._handles[0].alive)
+        new_pid = frontend._handles[0].process.pid
+        assert new_pid != old_pid
+        _check(frontend.serve("heal", bufs, timeout=120), tdg, bufs)
+        sup = frontend.stats()["frontend"]["supervisor"]
+        assert sup["enabled"] and sup["lease_misses"] == 3
+
+    def test_respawned_worker_is_reregistered_and_serves(self, frontend):
+        # After the respawn above, the same tenant keeps serving from the
+        # SAME slot (1-worker fleet: there is no sibling to hide behind).
+        tdg = demo_region("heal[0]")
+        bufs = _bufs(11)
+        _check(frontend.serve("heal", bufs, timeout=120), tdg, bufs)
+        assert frontend.tenant("heal").worker == 0
+
+
+class TestInjectedFaults:
+    def test_dropped_result_frame_becomes_deadline_exceeded(self):
+        # Drop the first result_batch the FRONTEND receives: the worker
+        # computed and answered, the reply evaporated. Without the
+        # supervisor's deadline sweep this hangs forever; with it the
+        # caller gets a typed DeadlineExceeded, the window slot frees, and
+        # the next request flows normally.
+        faults.install(FaultPlan([{"role": "frontend", "point": "recv",
+                                   "op": "result_batch", "count": 1,
+                                   "action": "drop"}]), role="frontend")
+        with ClusterFrontend(workers=1, registry=REGISTRY_SPEC,
+                             heartbeat_secs=0.3, lease_misses=3,
+                             retry_budget=0, name="test-drop") as fe:
+            tdg = demo_region("drop[0]")
+            fe.register_tenant("d", tdg)
+            bufs = _bufs(20)
+            with pytest.raises(DeadlineExceeded):
+                fe.serve("d", bufs, timeout=3.0)
+            assert faults.active().exhausted()
+            assert fe.deadline_failures >= 1
+            # the sweep released the frame slot: the connection still flows
+            _check(fe.serve("d", bufs, timeout=120), tdg, bufs)
+
+    def test_spawn_fault_burns_a_respawn_attempt_then_recovers(self):
+        # Kill the worker, and make the FIRST respawn attempt fail at
+        # launch (a host that momentarily cannot start processes). The
+        # supervisor must count the failure, back off, and succeed on the
+        # next attempt.
+        faults.install(FaultPlan([{"role": "frontend", "point": "spawn",
+                                   "after": 1, "count": 1,
+                                   "action": "fail"}]), role="frontend")
+        with ClusterFrontend(workers=1, registry=REGISTRY_SPEC,
+                             heartbeat_secs=0.3, lease_misses=3,
+                             respawn_max=5, name="test-spawnfault") as fe:
+            tdg = demo_region("sf[0]")
+            fe.register_tenant("s", tdg)
+            bufs = _bufs(21)
+            _check(fe.serve("s", bufs, timeout=120), tdg, bufs)
+            fe._handles[0].process.kill()
+            assert _wait_for(lambda: fe.respawn_failures >= 1)
+            assert _wait_for(lambda: fe.respawns >= 1
+                             and fe._handles[0].alive)
+            _check(fe.serve("s", bufs, timeout=120), tdg, bufs)
+            assert fe.stats()["frontend"]["respawn_failures"] >= 1
+
+
+class TestDeathCleanupRegressions:
+    """The two satellite bugfixes: shm-segment leaks on worker death, and
+    the close()-vs-dispatcher race."""
+
+    def test_worker_death_unlinks_shm_rings_and_falls_back_to_tcp(self):
+        with ClusterFrontend(workers=1, registry=REGISTRY_SPEC,
+                             transport="shm", heartbeat_secs=0.3,
+                             lease_misses=3, respawn_max=5,
+                             name="test-shmleak") as fe:
+            h = fe._handles[0]
+            assert h.transport == "shm"
+            ring_names = [r.name for r in (h.conn._send_ring,
+                                           h.conn._recv_ring)]
+            for nm in ring_names:
+                assert os.path.exists(f"/dev/shm/{nm}")
+            tdg = demo_region("leak[0]")
+            fe.register_tenant("l", tdg)
+            bufs = _bufs(30)
+            _check(fe.serve("l", bufs, timeout=120), tdg, bufs)
+            fallbacks_before = fe.stats()["frontend"]["shm_fallbacks"]
+            h.process.kill()
+            assert _wait_for(lambda: not h.alive)
+            # the death path (not frontend teardown) unlinked both rings
+            assert _wait_for(lambda: not any(
+                os.path.exists(f"/dev/shm/{nm}") for nm in ring_names),
+                timeout=30)
+            assert _wait_for(lambda: fe.respawns >= 1
+                             and fe._handles[0].alive)
+            # replacement's first connection is deliberately TCP, counted
+            assert fe._handles[0].transport == "tcp"
+            assert fe.stats()["frontend"]["shm_fallbacks"] > fallbacks_before
+            _check(fe.serve("l", bufs, timeout=120), tdg, bufs)
+
+    def test_close_with_inflight_window_never_hangs_or_drops_futures(self):
+        # Stall the worker (SIGSTOP) with a window's worth of submissions
+        # in flight, then close() the frontend: close must return promptly
+        # and every outstanding future must resolve to a typed error —
+        # never hang, never silently stay pending.
+        fe = ClusterFrontend(workers=1, registry=REGISTRY_SPEC,
+                             heartbeat_secs=0, shutdown_grace=5.0,
+                             name="test-closerace")
+        closed = False
+        try:
+            tdg = demo_region("cr[0]")
+            fe.register_tenant("c", tdg)
+            bufs = _bufs(31)
+            _check(fe.serve("c", bufs, timeout=120), tdg, bufs)
+            os.kill(fe._handles[0].process.pid, signal.SIGSTOP)
+            futs = [fe.submit("c", bufs) for _ in range(24)]
+            t0 = time.monotonic()
+            closer = threading.Thread(target=fe.close, daemon=True)
+            closer.start()
+            closer.join(timeout=60)
+            assert not closer.is_alive(), "close() hung on inflight window"
+            closed = True
+            assert time.monotonic() - t0 < 60
+            for f in futs:
+                assert f.done(), "close() dropped a future silently"
+                with pytest.raises(Exception):
+                    f.result(0)
+        finally:
+            try:
+                os.kill(fe._handles[0].process.pid, signal.SIGCONT)
+            except (ProcessLookupError, OSError):
+                pass
+            if not closed:
+                fe.close()
