@@ -20,6 +20,19 @@ request), so the phases replay a realistic decode-style chain. The report
 occupancy, pool and intern counters per N, plus serial/batched output
 parity. Acceptance for this repo: at >= 8 tenants, batched admission beats
 serial replay on throughput, and intern hits >= N-1.
+
+Two further phases exercise the continuous (iteration-level) scheduler:
+
+  * **streams** — the same dependent chain driven two ways at 8 tenants:
+    request-level (client round-trip per step, legacy dispatcher) vs
+    continuous (``submit_stream``: resident server-side decode, outputs
+    carried between fused steps). Gates: identical finals, continuous
+    throughput >= request-level.
+  * **open-loop** (``--open-loop --rate R``) — seeded Poisson arrivals
+    from tenants split across QoS tiers 0/1, driven into a deliberately
+    narrow ``max_batch`` so a backlog forms. Reports per-tier p50/p99 and
+    mean step occupancy; gates (under overload): tier-1 p99 < tier-0 p99,
+    and the execution-pattern trace ring is non-empty and schema-valid.
 """
 from __future__ import annotations
 
@@ -118,6 +131,181 @@ def _run_phase(n_tenants: int, rounds: int, max_batch: int,
     }
 
 
+def _bench_setup(n_tenants: int, dim: int, waves: int, width: int,
+                 server, body_loops: int = 1):
+    """Register ``n_tenants`` identical-structure tenants; seeded buffers.
+
+    ``body_loops`` scales per-task compute without changing the region
+    structure — the open-loop phase needs service time (not scheduling
+    overhead) to dominate each step, or queueing delay, which is where
+    tier QoS acts, would be noise.
+    """
+    import jax.numpy as jnp
+
+    def body(x, w):
+        for _ in range(body_loops):
+            x = jnp.tanh(x @ w) * 0.5 + x
+        return x
+
+    rng = np.random.default_rng(0)
+    shared_w = jnp.asarray(rng.standard_normal((dim, dim)), jnp.float32)
+    starts = []
+    for i in range(n_tenants):
+        tier = i % 2
+        server.register_tenant(f"t{i}", _tenant_region(i, waves, width, body),
+                               tier=tier)
+        bufs = {f"x{s}": jnp.asarray(rng.standard_normal((dim, dim)),
+                                     jnp.float32) for s in range(width)}
+        bufs["w"] = shared_w            # same object: broadcast, not stacked
+        starts.append(bufs)
+    return starts
+
+
+def _run_streams_phase(n_tenants: int, steps: int, dim: int, waves: int,
+                       width: int, continuous: bool,
+                       max_wait_ms: float = 25.0) -> dict:
+    """Drive ``steps``-step dependent chains for every tenant, one of two ways.
+
+    ``continuous=False``: client-driven — each tenant thread round-trips
+    one request per step (the legacy run-to-completion dispatcher).
+    ``continuous=True``: ONE ``submit_stream`` per tenant; the carry
+    happens server-side between fused steps of the resident batch.
+    """
+    import threading as _threading
+
+    from repro.core import clear_intern_cache
+    from repro.serving import RegionServer
+
+    clear_intern_cache()
+    server = RegionServer(
+        max_batch=n_tenants, max_wait_ms=max_wait_ms, continuous=continuous,
+        name=f"bench-streams-{'cont' if continuous else 'reqlevel'}")
+    starts = _bench_setup(n_tenants, dim, waves, width, server)
+    finals: list[dict | None] = [None] * n_tenants
+
+    def run_once(n_steps: int, keep: bool) -> float:
+        errors: list[BaseException] = []
+        if continuous:
+            t0 = time.perf_counter()
+            futs = [server.submit_stream(f"t{i}", starts[i], n_steps)
+                    for i in range(n_tenants)]
+            outs = [f.result(timeout=300) for f in futs]
+            wall = time.perf_counter() - t0
+            if keep:
+                for i, out in enumerate(outs):
+                    finals[i] = {k: np.asarray(v) for k, v in out.items()}
+            return wall
+
+        def chain(i: int) -> None:
+            try:
+                bufs, out = dict(starts[i]), {}
+                for _ in range(n_steps):
+                    out = server.serve(f"t{i}", bufs, timeout=300)
+                    bufs.update(out)
+                if keep:
+                    finals[i] = {k: np.asarray(v) for k, v in out.items()}
+            except BaseException as e:
+                errors.append(e)
+
+        threads = [_threading.Thread(target=chain, args=(i,))
+                   for i in range(n_tenants)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if errors:
+            raise errors[0]
+        return time.perf_counter() - t0
+
+    run_once(1, keep=False)             # warm: trace+compile off the clock
+    wall = run_once(steps, keep=True)
+    stats = server.stats()
+    server.close()
+    m = stats["metrics"]
+    return {
+        "continuous": continuous,
+        "tenants": n_tenants,
+        "steps": steps,
+        "wall_s": wall,
+        "throughput_sps": n_tenants * steps / max(wall, 1e-9),
+        "batches": m["batches"],
+        "batch_occupancy_mean": m["batch_occupancy_mean"],
+        "joins": m.get("joins", 0),
+        "leaves": m.get("leaves", 0),
+        "trace": m.get("trace"),
+        "pool": {k: stats["pool"][k] for k in ("hits", "misses", "entries")},
+        "intern": stats["intern"],
+        "_finals": finals,
+    }
+
+
+def _run_open_loop(n_tenants: int, n_requests: int, rate: float, dim: int,
+                   waves: int, width: int, max_batch: int = 2,
+                   seed: int = 0, body_loops: int = 32) -> dict:
+    """Open-loop Poisson arrivals into a continuous server, tiers 0/1.
+
+    ``max_batch`` is kept deliberately below the tenant count so the
+    offered load exceeds per-step service capacity and a backlog forms —
+    that backlog is where tier-weighted admission (weight ``2**tier``)
+    separates the tiers' tails. Arrivals and tenant choice are seeded, so
+    the offered sequence is reproducible; per-request latency is measured
+    server-side (admission -> completion) in the per-tier reservoirs.
+    """
+    from repro.core import clear_intern_cache
+    from repro.serving import (RegionServer, ServerMetrics, validate_trace)
+
+    clear_intern_cache()
+    server = RegionServer(max_batch=max_batch, max_wait_ms=1.0,
+                          continuous=True, name="bench-openloop")
+    starts = _bench_setup(n_tenants, dim, waves, width, server,
+                          body_loops=body_loops)
+
+    # Warm every pow-2 bucket the run can hit, then zero the metrics so
+    # compile time never pollutes the tier latency comparison.
+    futs = [server.submit(f"t{i}", starts[i]) for i in range(n_tenants)]
+    for f in futs:
+        f.result(timeout=300)
+    server.metrics = ServerMetrics()
+
+    rng = np.random.default_rng(seed)
+    inter = rng.exponential(1.0 / max(rate, 1e-9), n_requests)
+    arrive = np.cumsum(inter)
+    choice = rng.integers(0, n_tenants, n_requests)
+    futs, tiers = [], []
+    t0 = time.perf_counter()
+    for k in range(n_requests):
+        delay = t0 + arrive[k] - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+        i = int(choice[k])
+        futs.append(server.submit(f"t{i}", starts[i]))
+        tiers.append(i % 2)
+    for f in futs:
+        f.result(timeout=300)
+    wall = time.perf_counter() - t0
+    stats = server.stats()
+    trace = server.metrics.trace.snapshot()
+    server.close()
+    validate_trace(trace)
+    m = stats["metrics"]
+    tier_lat = {t: {"p50_ms": s["p50_s"] * 1e3, "p99_ms": s["p99_s"] * 1e3,
+                    "count": s["count"]}
+                for t, s in m["tiers"].items()}
+    return {
+        "tenants": n_tenants,
+        "requests": n_requests,
+        "offered_rate_rps": rate,
+        "achieved_rps": n_requests / max(wall, 1e-9),
+        "max_batch": max_batch,
+        "tier_latency": tier_lat,
+        "batch_occupancy_mean": m["batch_occupancy_mean"],
+        "queue_depth_peak": m["queue_depth_peak"],
+        "trace_steps": len(trace),
+        "trace_summary": m["trace"],
+    }
+
+
 def run(tenant_counts=(1, 2, 4, 8), rounds: int = 16, dim: int = 16,
         waves: int = 4, width: int = 4, max_wait_ms: float = 25.0,
         out_path: str = "BENCH_serving.json") -> dict:
@@ -161,17 +349,70 @@ def run(tenant_counts=(1, 2, 4, 8), rounds: int = 16, dim: int = 16,
     return report
 
 
+def _streams_section(steps: int, dim: int, waves: int, width: int,
+                     n_tenants: int = 8) -> dict:
+    """Continuous vs request-level streams at ``n_tenants``; checks parity."""
+    reqlevel = _run_streams_phase(n_tenants, steps, dim, waves, width,
+                                  continuous=False)
+    cont = _run_streams_phase(n_tenants, steps, dim, waves, width,
+                              continuous=True)
+    parity = 0.0
+    for a, b in zip(reqlevel.pop("_finals"), cont.pop("_finals")):
+        assert a is not None and b is not None
+        for k in a:
+            np.testing.assert_allclose(b[k], a[k], rtol=2e-4, atol=2e-4)
+            parity = max(parity, float(np.abs(a[k] - b[k]).max()))
+    section = {
+        "tenants": n_tenants, "steps": steps,
+        "request_level": reqlevel, "continuous": cont,
+        "speedup_throughput": (cont["throughput_sps"]
+                               / max(reqlevel["throughput_sps"], 1e-9)),
+        "parity_max_abs_diff": parity,
+    }
+    print(f"streams tenants={n_tenants} steps={steps}: request-level "
+          f"{reqlevel['throughput_sps']:8.1f} steps/s | continuous "
+          f"{cont['throughput_sps']:8.1f} steps/s "
+          f"(occ {cont['batch_occupancy_mean']:.2f}) | "
+          f"{section['speedup_throughput']:5.2f}x", flush=True)
+    return section
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized: tiny sweep; asserts parity + structural "
-                         "sharing (throughput is reported, not gated — too "
-                         "noisy at smoke size)")
+                    help="CI-sized: tiny sweep + continuous/QoS gates "
+                         "(continuous >= request-level at 8 tenants, tier-1 "
+                         "p99 < tier-0 p99 under overload, trace "
+                         "schema-valid)")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="run ONLY the open-loop Poisson phase (seeded "
+                         "arrivals, QoS tiers 0/1) and print per-tier "
+                         "p50/p99 + mean occupancy")
+    ap.add_argument("--rate", type=float, default=2000.0,
+                    help="[--open-loop] offered arrival rate, req/s")
+    ap.add_argument("--requests", type=int, default=256,
+                    help="[--open-loop] total arrivals")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args(argv)
+    if args.open_loop:
+        ol = _run_open_loop(8, args.requests, args.rate, 64, 3, 2)
+        print(f"open-loop rate={args.rate:.0f}/s: achieved "
+              f"{ol['achieved_rps']:.1f} req/s, occ "
+              f"{ol['batch_occupancy_mean']:.2f}, queue peak "
+              f"{ol['queue_depth_peak']}, trace {ol['trace_steps']} steps")
+        for t in sorted(ol["tier_latency"]):
+            s = ol["tier_latency"][t]
+            print(f"  tier {t}: n {s['count']}  p50 {s['p50_ms']:.2f} ms  "
+                  f"p99 {s['p99_ms']:.2f} ms")
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump({"bench": "serving-open-loop", "open_loop": ol},
+                          f, indent=1)
+            print(f"# wrote {args.out}", flush=True)
+        return
     if args.smoke:
         report = run(tenant_counts=(2, 4), rounds=4, dim=8, waves=2, width=2,
-                     out_path=args.out)
+                     out_path=None)
         for row in report["tenant_sweep"]:
             n = row["tenants"]
             assert row["parity_max_abs_diff"] < 1e-3, row
@@ -179,9 +420,28 @@ def main(argv=None) -> None:
             # >= 2 requests genuinely served by one fused vmap call —
             # fallback-degraded groups do not count as coalesced.
             assert row["batched"]["coalesced_requests"] >= 2, row
-        print("# smoke ok: parity + shared interned executable + coalescing")
+        streams = _streams_section(steps=8, dim=8, waves=2, width=2)
+        report["streams"] = streams
+        assert streams["parity_max_abs_diff"] < 1e-3, streams
+        assert streams["speedup_throughput"] >= 1.0, streams
+        # Calibrated overload: offered rate >> service rate (the whole
+        # backlog queues within ~4 steps), heavy per-step compute so
+        # queueing delay — where tier-weighted admission acts — dominates
+        # wall time. Seeded arrivals make the tier tally deterministic.
+        ol = _run_open_loop(8, 120, 20000.0, 64, 3, 2)
+        report["open_loop"] = ol
+        assert ol["trace_steps"] > 0, ol
+        t0, t1 = ol["tier_latency"].get("0"), ol["tier_latency"].get("1")
+        assert t0 and t1, ol
+        assert t1["p99_ms"] < t0["p99_ms"], ol
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(report, f, indent=1)
+            print(f"# wrote {args.out}", flush=True)
+        print("# smoke ok: parity + coalescing + continuous>=request-level "
+              "+ tier-1 p99 < tier-0 p99 under overload + schema-valid trace")
     else:
-        report = run(out_path=args.out)
+        report = run(out_path=None)
         for row in report["tenant_sweep"]:
             n = row["tenants"]
             assert row["intern_hits_serial"] >= n - 1, row
@@ -191,6 +451,14 @@ def main(argv=None) -> None:
                       f"{row['speedup_throughput']:.2f}x batched-vs-serial "
                       f"throughput, {row['intern_hits_serial']} intern hits "
                       f"(>= {n - 1} required)")
+        report["streams"] = _streams_section(steps=16, dim=16, waves=4,
+                                             width=4)
+        report["open_loop"] = _run_open_loop(8, args.requests, args.rate,
+                                             64, 3, 2)
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(report, f, indent=1)
+            print(f"# wrote {args.out}", flush=True)
 
 
 if __name__ == "__main__":

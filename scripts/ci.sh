@@ -13,7 +13,11 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
   shift
   # CI-sized benchmark smokes: fusion asserts fused/unfused parity + traced-
   # program shrink; serving asserts multi-tenant parity + structural sharing
-  # + coalescing; cluster gates the wire path — exact per-transport parity
+  # + coalescing, PLUS the continuous-batching gates — iteration-level
+  # streams must meet or beat request-level round-trips on throughput at 8
+  # tenants (identical finals), and under seeded open-loop Poisson overload
+  # tier-1 p99 must beat tier-0 p99 with a non-empty, schema-valid
+  # execution-pattern trace; cluster gates the wire path — exact per-transport parity
   # (tcp AND shm), the rpc-overhead-per-request budget, tolerant monotone
   # throughput across 1 -> 2 -> 4 workers (the seed wire path collapsed
   # here), warm-artifact shipping beating per-worker re-lowering on cold

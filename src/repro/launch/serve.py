@@ -107,6 +107,21 @@ def _run_single_stream(args, cfg, params) -> int:
     return 0
 
 
+def _tenant_tiers(args) -> list[int]:
+    """Per-tenant QoS tiers from ``--tiers`` ("1" or "0,1,...", cycled)."""
+    if not args.tiers:
+        return [0] * args.tenants
+    cycle = [max(0, int(t)) for t in str(args.tiers).split(",") if t.strip()]
+    return [cycle[i % len(cycle)] for i in range(args.tenants)]
+
+
+def _print_tier_latency(tiers_summary) -> None:
+    for tier in sorted(tiers_summary or {}, key=int):
+        s = tiers_summary[tier]
+        print(f"tier {tier}: n {s['count']}  p50 {s['p50_s']*1e3:.2f} ms  "
+              f"p99 {s['p99_s']*1e3:.2f} ms")
+
+
 def _run_server(args, cfg, params) -> int:
     from ..core import TDG
     from ..serving import RegionServer
@@ -133,14 +148,18 @@ def _run_server(args, cfg, params) -> int:
     t_prefill = time.time() - t0
 
     server = RegionServer(max_batch=args.max_batch or args.tenants,
-                          max_wait_ms=args.max_wait_ms, name="decode-server")
+                          max_wait_ms=args.max_wait_ms, name="decode-server",
+                          continuous=False if args.request_level else None)
+    tiers = _tenant_tiers(args)
     for i in range(args.tenants):
         # One decode-step region per tenant — structurally identical across
         # tenants (same payload object), so they intern to one executable.
         tdg = TDG(f"decode[{i}]")
         tdg.add_task(decode, ins=["params", "tokens", "pos", "caches"],
                      outs=["next", "caches"], name="decode")
-        server.register_tenant(f"tenant{i}", tdg, outputs=("next", "caches"))
+        server.register_tenant(f"tenant{i}", tdg, outputs=("next", "caches"),
+                               tier=tiers[i],
+                               rate=args.tenant_rate or None)
 
     errors: list[BaseException] = []
 
@@ -184,6 +203,11 @@ def _run_server(args, cfg, params) -> int:
     print(f"pool:    {stats['pool']}  intern: {stats['intern']}")
     print(f"latency: p50 {m['latency']['p50_s']*1e3:.2f} ms  "
           f"p99 {m['latency']['p99_s']*1e3:.2f} ms")
+    _print_tier_latency(m.get("tiers"))
+    print(f"trace:   {m['trace']}")
+    if args.trace_out:
+        server.dump_trace(args.trace_out)
+        print(f"trace ring written to {args.trace_out}")
     for i in (0, args.tenants - 1):
         gen = jnp.stack(states[i]["out"], axis=1)
         print(f"tenant{i} sample token ids:", gen[0, :12].tolist())
@@ -224,7 +248,9 @@ def _run_cluster(args, cfg, params) -> int:
         registry_kwargs={"arch": args.arch, "smoke": args.smoke},
         max_batch=args.max_batch or args.tenants,
         max_wait_ms=args.max_wait_ms, token=args.token,
+        continuous=False if args.request_level else None,
         name="decode-cluster")
+    tiers = _tenant_tiers(args)
     for i in range(args.tenants):
         tdg = TDG(f"decode[{i}]")
         tdg.add_task(decode, ins=["params", "tokens", "pos", "caches"],
@@ -232,7 +258,8 @@ def _run_cluster(args, cfg, params) -> int:
         # params ship ONCE per worker (pinned); each step's request carries
         # only the varying decode state.
         frontend.register_tenant(f"tenant{i}", tdg, outputs=("next", "caches"),
-                                 pinned={"params": params})
+                                 pinned={"params": params}, tier=tiers[i],
+                                 rate=args.tenant_rate or None)
     t_spawn = time.time() - t0
 
     errors: list[BaseException] = []
@@ -260,6 +287,11 @@ def _run_cluster(args, cfg, params) -> int:
         t.join()
     t_decode = time.time() - t0
     stats = frontend.stats()
+    if args.trace_out:
+        import json as _json
+        with open(args.trace_out, "w") as f:
+            _json.dump(frontend.trace(), f, indent=1)
+        print(f"per-worker trace rings written to {args.trace_out}")
     frontend.close()
     if errors:
         raise errors[0]
@@ -315,6 +347,18 @@ def main(argv=None):
                     help="[--server/--cluster] coalescing ceiling (0 = #tenants)")
     ap.add_argument("--max-wait-ms", type=float, default=5.0,
                     help="[--server/--cluster] admission window for coalescing")
+    ap.add_argument("--request-level", action="store_true",
+                    help="[--server/--cluster] legacy run-to-completion "
+                         "batching instead of continuous (iteration-level)")
+    ap.add_argument("--tiers", default=None, metavar="T0,T1,...",
+                    help="[--server/--cluster] per-tenant QoS tiers, cycled "
+                         "over tenants (e.g. '0,1'); default all tier 0")
+    ap.add_argument("--tenant-rate", type=float, default=0.0,
+                    help="[--server/--cluster] per-tenant token-bucket rate "
+                         "limit in req/s (0 = unlimited)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="[--server/--cluster] dump the execution-pattern "
+                         "trace ring(s) to PATH as JSON after the run")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)

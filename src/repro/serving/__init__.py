@@ -2,28 +2,36 @@
 
 The serving tier of the Taskgraph reproduction (see docs/serving.md):
 an admission queue coalesces concurrent requests against structurally
-identical regions into one batched fused replay, an LRU warm pool shares
-compiled executables across tenants, and metrics expose queue/batch/latency
-behaviour so detrimental execution patterns are observable. The cluster
-tier (:mod:`repro.serving.cluster`) puts a socket-RPC front on
-``RegionServer.submit`` and ships warm compiled artifacts to worker
-processes instead of re-lowering per host.
+identical regions into one batched fused replay — continuously, at the
+iteration level, with tenants joining/leaving a resident per-class batch
+between fused steps — an LRU warm pool shares compiled executables across
+tenants, per-tenant QoS (priority tiers + token-bucket rate limits) shapes
+admission under load, and metrics (including a per-batch execution-pattern
+trace ring) expose queue/batch/latency behaviour so detrimental execution
+patterns are observable. The cluster tier (:mod:`repro.serving.cluster`)
+puts a socket-RPC front on ``RegionServer.submit`` and ships warm compiled
+artifacts to worker processes instead of re-lowering per host.
 """
 from .cluster import (ClusterError, ClusterFrontend, ClusterRemoteError,
                       StickyRouter, WorkerDied, WorkerNode, resolve_registry)
 from .faults import FaultPlan, InjectedFault
-from .metrics import LatencyReservoir, ServerMetrics, percentile
+from .metrics import (TRACE_SCHEMA, ExecutionTraceRing, LatencyReservoir,
+                      ServerMetrics, percentile, validate_trace)
 from .pool import PoolEntry, WarmPool
-from .server import DeadlineExceeded, QueueFull, RegionServer, Tenant
+from .qos import SmoothWRR, TokenBucket, tier_weight
+from .server import (DeadlineExceeded, QueueFull, RateLimited, RegionServer,
+                     Tenant)
 from .shm import ShmRing
 from .spawner import (LocalSpawner, RemoteSpawner, SpawnedWorker, SpawnError,
                       parse_worker_spec)
 
 __all__ = [
-    "RegionServer", "Tenant", "DeadlineExceeded", "QueueFull",
+    "RegionServer", "Tenant", "DeadlineExceeded", "QueueFull", "RateLimited",
     "FaultPlan", "InjectedFault",
     "WarmPool", "PoolEntry",
     "ServerMetrics", "LatencyReservoir", "percentile",
+    "ExecutionTraceRing", "TRACE_SCHEMA", "validate_trace",
+    "TokenBucket", "SmoothWRR", "tier_weight",
     "ClusterFrontend", "WorkerNode", "StickyRouter", "resolve_registry",
     "ClusterError", "ClusterRemoteError", "WorkerDied",
     "ShmRing",

@@ -118,9 +118,18 @@ from ..core import serialize as _serialize
 from ..core.tdg import TDG, structure_signature
 from . import faults as _faults
 from . import rpc
-from .server import DeadlineExceeded, QueueFull, RegionServer
+from .server import (DeadlineExceeded, QueueFull, RateLimited,
+                     RegionServer)
 from .spawner import (LocalSpawner, RemoteSpawner, SpawnedWorker,
                       parse_worker_spec)
+
+# Typed serving errors that must survive the wire round trip: the worker
+# str-formats them as "TypeName: detail", the frontend maps the prefix
+# back through this registry (see _WorkerHandle._remote_error). All three
+# are terminal — never retried as if the worker had died.
+for _cls in (DeadlineExceeded, QueueFull, RateLimited):
+    rpc.register_wire_error(_cls)
+del _cls
 
 _WORKERS_ENV = "REPRO_CLUSTER_WORKERS"
 _SHIP_ENV = "REPRO_SHIP_ARTIFACTS"
@@ -471,6 +480,10 @@ class WorkerNode:
                              daemon=True).start()
         elif op == "stats":
             conn.send({"op": "result", "id": mid, "stats": self.stats()})
+        elif op == "trace":
+            conn.send({"op": "result", "id": mid,
+                       "trace": self.server.metrics.trace.snapshot(),
+                       "summary": self.server.metrics.trace.summary()})
         elif op == "ping":
             conn.send({"op": "result", "id": mid, "pid": os.getpid(),
                        "port": self.port})
@@ -523,7 +536,9 @@ class WorkerNode:
         already = False
         try:
             self.server.register_tenant(name, tdg, outputs=outputs,
-                                        kernel_mode=msg.get("kernel_mode"))
+                                        kernel_mode=msg.get("kernel_mode"),
+                                        tier=msg.get("tier"),
+                                        rate=msg.get("rate"))
         except ValueError as exc:
             if "already registered" not in str(exc):
                 raise
@@ -648,9 +663,10 @@ class StickyRouter:
 
 class _TenantRecord:
     __slots__ = ("name", "tdg_dict", "outputs", "kernel_mode", "route_key",
-                 "worker", "artifact", "pin_key", "requests")
+                 "worker", "artifact", "pin_key", "requests", "tier", "rate")
 
-    def __init__(self, name, tdg_dict, outputs, kernel_mode, route_key):
+    def __init__(self, name, tdg_dict, outputs, kernel_mode, route_key,
+                 tier=None, rate=None):
         self.name = name
         self.tdg_dict = tdg_dict
         self.outputs = outputs
@@ -660,6 +676,10 @@ class _TenantRecord:
         self.artifact: bytes | None = None
         self.pin_key: str | None = None
         self.requests = 0
+        # QoS config crosses the wire with every (re-)registration, so a
+        # respawned or failover worker applies the same tier/rate policy.
+        self.tier: int | None = tier
+        self.rate: float | None = rate
 
 
 #: Max submissions packed into one ``submit_batch`` frame. Large enough
@@ -913,12 +933,14 @@ class _WorkerHandle:
 
         Worker-side errors cross the wire as ``"TypeName: detail"``;
         deadline and shedding failures must come back as their own types
-        (``DeadlineExceeded`` is terminal, ``QueueFull`` means back off —
-        neither should be retried as if the worker had died)."""
+        (``DeadlineExceeded`` is terminal, ``QueueFull`` means back off,
+        ``RateLimited`` means slow this tenant down — none should be
+        retried as if the worker had died). The name→class mapping lives
+        in :func:`rpc.register_wire_error`'s registry."""
         if isinstance(detail, str):
-            for cls in (DeadlineExceeded, QueueFull):
-                if detail.startswith(cls.__name__ + ":"):
-                    return cls(f"worker {self.idx}: {detail}")
+            cls = rpc.wire_error_class(detail)
+            if cls is not None:
+                return cls(f"worker {self.idx}: {detail}")
         return ClusterRemoteError(f"worker {self.idx}: {detail}")
 
     # ------------------------------------------------------------ liveness
@@ -1118,15 +1140,18 @@ class ClusterFrontend:
     shutdown_grace:
         Seconds :meth:`close` waits at each escalation step
         (join → terminate → kill) before moving to the next.
-    max_batch / max_wait_ms / pool_capacity / fuse:
+    max_batch / max_wait_ms / pool_capacity / fuse / continuous:
         Forwarded to every locally spawned worker's ``RegionServer``
-        (remote workers configure theirs at bootstrap).
+        (remote workers configure theirs at bootstrap); ``continuous``
+        selects iteration-level vs request-level batching worker-side
+        (``None`` honours each worker's ``REPRO_CONTINUOUS``).
     """
 
     def __init__(self, workers: int | Sequence[str] | None = None, *,
                  registry: Any, registry_kwargs: Mapping[str, Any] | None = None,
                  max_batch: int = 8, max_wait_ms: float = 2.0,
                  pool_capacity: int = 64, fuse: bool | str = "auto",
+                 continuous: bool | None = None,
                  ship_artifacts: bool | None = None,
                  token: str | None = None,
                  transport: str | None = None,
@@ -1189,7 +1214,8 @@ class ClusterFrontend:
         self._local_token = local_token
         self._server_kwargs = {"max_batch": max_batch,
                                "max_wait_ms": max_wait_ms,
-                               "pool_capacity": pool_capacity, "fuse": fuse}
+                               "pool_capacity": pool_capacity, "fuse": fuse,
+                               "continuous": continuous}
         self._ids = itertools.count(1)
         self._lock = threading.Lock()
         self._tenants: dict[str, _TenantRecord] = {}
@@ -1437,9 +1463,17 @@ class ClusterFrontend:
                         outputs: tuple[str, ...] | None = None,
                         kernel_mode: str | None = None,
                         warm_path: str | None = None,
-                        pinned: Mapping[str, Any] | None = None
+                        pinned: Mapping[str, Any] | None = None,
+                        tier: int | None = None,
+                        rate: float | None = None
                         ) -> _TenantRecord:
         """Route + register a tenant on its structure-sticky worker.
+
+        ``tier`` / ``rate`` are the tenant's QoS config (priority tier and
+        token-bucket req/s); they ship with the registration so the worker
+        enforces them at ITS admission queue, and re-ship on every
+        failover/respawn re-registration. ``None`` defers to the worker's
+        ``REPRO_TENANT_TIER`` / ``REPRO_TENANT_RATE`` environment.
 
         Exactly one of ``tdg`` / ``warm_path`` selects the region source,
         mirroring ``RegionServer.register_tenant``. With ``warm_path``, the
@@ -1474,7 +1508,11 @@ class ClusterFrontend:
                                 for p in payloads), mode)
         record = _TenantRecord(name, tdg_dict,
                                tuple(outputs) if outputs else None,
-                               mode, route_key)
+                               mode, route_key,
+                               tier=(None if tier is None
+                                     else max(0, int(tier))),
+                               rate=(None if rate is None
+                                     else max(0.0, float(rate))))
         record.artifact = artifact
         if pinned is not None:
             record.pin_key = self._pin_group_for(dict(pinned))
@@ -1520,7 +1558,8 @@ class ClusterFrontend:
                "tdg": record.tdg_dict,
                "outputs": list(record.outputs) if record.outputs else None,
                "kernel_mode": record.kernel_mode,
-               "pin_key": record.pin_key}
+               "pin_key": record.pin_key,
+               "tier": record.tier, "rate": record.rate}
         ship_pin = False
         if record.pin_key is not None:
             with self._lock:
@@ -1767,7 +1806,8 @@ class ClusterFrontend:
         metric_keys = ("admitted", "completed", "failed", "batches",
                        "coalesced_requests", "batch_fallbacks", "aot_served",
                        "aot_hydrate_failures", "aot_topology_rejects",
-                       "shed", "deadline_sheds")
+                       "shed", "deadline_sheds", "rate_limited",
+                       "joins", "leaves")
         agg = {k: 0 for k in metric_keys}
         pool = {"hits": 0, "misses": 0, "evictions": 0, "hydrations": 0,
                 "entries": 0}
@@ -1842,3 +1882,24 @@ class ClusterFrontend:
                 "aggregate": {**agg, "pool": pool, "intern": intern,
                               "hydrated_inband": hydrated_inband},
                 "workers": per_worker, "wire": wire}
+
+    def trace(self) -> dict:
+        """Per-worker execution-pattern trace rings (see metrics.TRACE_SCHEMA).
+
+        Each live worker's ring comes back oldest-first under its index;
+        a dead/unreachable worker maps to ``None``. Use this to see step
+        occupancy, join/leave churn and stragglers fleet-wide — the
+        aggregate counters in :meth:`stats` cannot show a detrimental
+        execution *pattern*, only its average."""
+        out: dict[int, dict | None] = {}
+        for h in self._handles:
+            if not h.alive:
+                out[h.idx] = None
+                continue
+            try:
+                reply = h.request({"op": "trace"}, timeout=60.0)
+                out[h.idx] = {"records": reply["trace"],
+                              "summary": reply["summary"]}
+            except Exception:
+                out[h.idx] = None
+        return out

@@ -14,13 +14,25 @@ serving layer therefore records, per request and per batch:
 * executable-pool **hit/miss counters** (surfaced by the server from
   :class:`~repro.serving.pool.WarmPool`), the serving-level intern hit rate.
 
+Aggregate counters are necessary but not sufficient: 2406.03077's central
+observation is that stragglers and occupancy collapse hide *inside* the
+aggregates. The continuous-batching scheduler therefore also records one
+:class:`ExecutionTraceRing` entry **per executed step** — step index,
+structure class, occupancy, bucket, join/leave/shed events, per-tier
+membership, wall time, and a straggler flag (wall time > 3x the class's
+EMA) — dumpable as JSON (:meth:`ExecutionTraceRing.dump`) for offline
+analysis, plus a per-*tier* latency reservoir so p50/p99 are visible per
+QoS tier, not just fleet-wide.
+
 Everything here is lock-protected and cheap (O(1) per event, bounded
 memory), so metrics can stay on in production serving paths.
 """
 from __future__ import annotations
 
+import json
 import math
 import threading
+import time
 
 
 def percentile(sorted_values: list[float], q: float) -> float:
@@ -72,6 +84,125 @@ class LatencyReservoir:
         }
 
 
+#: The execution-pattern trace record schema: field name -> accepted types.
+#: ``tiers`` maps tier (as a JSON-safe string key) -> member count at that
+#: step. A record must carry exactly these fields — the benchmark gate and
+#: offline tooling both call :func:`validate_trace` against this table.
+TRACE_SCHEMA: dict = {
+    "step": int,            # per-class step index (1-based)
+    "class_id": int,        # dense id of the structure class
+    "t_ms": (int, float),   # ms since the ring was created
+    "occupancy": int,       # resident members this step executed
+    "bucket": int,          # power-of-two occupancy bucket actually run
+    "joins": int,           # members admitted at this step boundary
+    "leaves": int,          # members retired/migrated at this boundary
+    "sheds": int,           # members deadline-shed at this boundary
+    "wall_ms": (int, float),  # step execution wall time
+    "straggler": bool,      # wall_ms > 3x this class's EMA (after warmup)
+    "coalesced": bool,      # one fused vmap call served the whole step
+    "tiers": dict,          # {str(tier): member count}
+}
+
+
+def validate_trace(records: list) -> None:
+    """Raise ``ValueError`` unless every record matches :data:`TRACE_SCHEMA`.
+
+    Exact-key validation (no missing, no extra) so schema drift between
+    the scheduler and offline analysis tools fails loudly in CI rather
+    than silently producing unparseable dumps.
+    """
+    want = set(TRACE_SCHEMA)
+    for i, rec in enumerate(records):
+        if not isinstance(rec, dict):
+            raise ValueError(f"trace[{i}]: not a dict: {type(rec).__name__}")
+        got = set(rec)
+        if got != want:
+            raise ValueError(
+                f"trace[{i}]: fields {sorted(got)} != schema {sorted(want)}")
+        for field, types in TRACE_SCHEMA.items():
+            if not isinstance(rec[field], types) or (
+                    types is int and isinstance(rec[field], bool)):
+                raise ValueError(
+                    f"trace[{i}].{field}: {type(rec[field]).__name__} is "
+                    f"not {types}")
+        for tier, count in rec["tiers"].items():
+            if not isinstance(tier, str) or not isinstance(count, int):
+                raise ValueError(f"trace[{i}].tiers: want str->int, got "
+                                 f"{tier!r}: {count!r}")
+
+
+class ExecutionTraceRing:
+    """Bounded ring of per-step execution-pattern records.
+
+    One entry per executed continuous-batching step (see
+    :data:`TRACE_SCHEMA`). The ring computes the ``straggler`` flag itself
+    from a per-class exponential moving average of step wall time — a step
+    is a straggler when it takes more than ``3x`` the class's EMA, judged
+    only after ``warmup`` steps so cold compiles don't flag every class's
+    first step. ``capacity``-bounded like the latency reservoir: traces
+    must be safe to leave on in production.
+    """
+
+    #: Steps per class before the straggler EMA is trusted.
+    warmup = 5
+    #: Multiplier over the class EMA that flags a straggler.
+    threshold = 3.0
+    #: EMA smoothing factor.
+    alpha = 0.2
+
+    def __init__(self, capacity: int = 4096):
+        self.capacity = max(1, capacity)
+        self._lock = threading.Lock()
+        self._buf: list[dict] = []
+        self._next = 0
+        self._t0 = time.monotonic()
+        self._ema: dict[int, tuple[float, int]] = {}   # cid -> (ema, n)
+        self.count = 0
+        self.stragglers = 0
+
+    def record(self, rec: dict) -> dict:
+        """Append one step record (``straggler``/``t_ms`` filled in here)."""
+        rec = dict(rec)
+        with self._lock:
+            rec.setdefault("t_ms", (time.monotonic() - self._t0) * 1e3)
+            cid, wall = rec["class_id"], float(rec["wall_ms"])
+            ema, n = self._ema.get(cid, (wall, 0))
+            rec["straggler"] = bool(n >= self.warmup
+                                    and wall > self.threshold * ema)
+            self._ema[cid] = (ema + self.alpha * (wall - ema), n + 1)
+            if rec["straggler"]:
+                self.stragglers += 1
+            if len(self._buf) < self.capacity:
+                self._buf.append(rec)
+            else:
+                self._buf[self._next] = rec
+                self._next = (self._next + 1) % self.capacity
+            self.count += 1
+        return rec
+
+    def snapshot(self) -> list[dict]:
+        """The retained records, oldest first."""
+        with self._lock:
+            return [dict(r) for r in
+                    (self._buf[self._next:] + self._buf[:self._next])]
+
+    def summary(self) -> dict:
+        with self._lock:
+            return {"steps": self.count, "retained": len(self._buf),
+                    "stragglers": self.stragglers,
+                    "classes": len(self._ema)}
+
+    def dump(self, path: str, meta: dict | None = None) -> dict:
+        """Write the trace as JSON for offline execution-pattern analysis."""
+        records = self.snapshot()
+        validate_trace(records)
+        doc = {"schema": sorted(TRACE_SCHEMA), **(meta or {}),
+               "summary": self.summary(), "records": records}
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=1)
+        return doc
+
+
 class ServerMetrics:
     """Thread-safe counters + latency reservoir for one RegionServer."""
 
@@ -88,11 +219,17 @@ class ServerMetrics:
         self.aot_topology_rejects = 0  # artifact for a different topology
         self.shed = 0                 # rejected at admission: queue bound hit
         self.deadline_sheds = 0       # dropped unexecuted: deadline expired
+        self.rate_limited = 0         # refused at admission: token bucket dry
+        self.joins = 0                # members admitted into resident batches
+        self.leaves = 0               # members retired from resident batches
         self.occupancy_sum = 0
         self.occupancy_max = 0
         self.queue_depth_peak = 0
         self.queue_depth_last = 0
         self.latency = LatencyReservoir(latency_capacity)
+        self.tier_latency: dict[int, LatencyReservoir] = {}
+        self._tier_capacity = latency_capacity
+        self.trace = ExecutionTraceRing()
 
     # -- event hooks (called by the server) --------------------------------
     def on_admit(self, queue_depth: int) -> None:
@@ -127,7 +264,7 @@ class ServerMetrics:
                 self.coalesced_requests += occupancy
 
     def on_done(self, latency_seconds: float, failed: bool = False,
-                aot: bool = False) -> None:
+                aot: bool = False, tier: int | None = None) -> None:
         with self._lock:
             if failed:
                 self.failed += 1
@@ -136,6 +273,27 @@ class ServerMetrics:
             if aot:
                 self.aot_served += 1
             self.latency.record(latency_seconds)
+            if tier is not None and not failed:
+                res = self.tier_latency.get(tier)
+                if res is None:
+                    res = self.tier_latency[tier] = \
+                        LatencyReservoir(self._tier_capacity)
+                res.record(latency_seconds)
+
+    def on_rate_limited(self, n: int = 1) -> None:
+        """``n`` requests refused at admission because the tenant's token
+        bucket was dry — per-tenant fairness, distinct from the global
+        queue-bound ``shed``. Never admitted, so not in ``admitted``."""
+        with self._lock:
+            self.rate_limited += n
+
+    def on_step(self, rec: dict) -> None:
+        """One continuous-batching step executed: trace it + roll up the
+        join/leave counters the trace would otherwise hide in a ring."""
+        with self._lock:
+            self.joins += rec.get("joins", 0)
+            self.leaves += rec.get("leaves", 0)
+        self.trace.record(rec)
 
     def on_batch_fallback(self) -> None:
         with self._lock:
@@ -199,9 +357,15 @@ class ServerMetrics:
                 "aot_topology_rejects": self.aot_topology_rejects,
                 "shed": self.shed,
                 "deadline_sheds": self.deadline_sheds,
+                "rate_limited": self.rate_limited,
+                "joins": self.joins,
+                "leaves": self.leaves,
                 "batch_occupancy_mean": round(mean_occ, 3),
                 "batch_occupancy_max": self.occupancy_max,
                 "queue_depth_peak": self.queue_depth_peak,
                 "queue_depth_last": self.queue_depth_last,
                 "latency": self.latency.summary(),
+                "tiers": {str(t): r.summary()
+                          for t, r in sorted(self.tier_latency.items())},
+                "trace": self.trace.summary(),
             }

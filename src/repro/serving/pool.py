@@ -52,6 +52,7 @@ class PoolEntry:
     fn: Callable[..., Any]
     payloads: tuple = ()
     meta: dict = dataclasses.field(default_factory=dict)
+    hits: int = 0
 
 
 class WarmPool:
@@ -73,6 +74,7 @@ class WarmPool:
                 self._counters["misses"] += 1
                 return None
             self._counters["hits"] += 1
+            entry.hits += 1
             self._entries.move_to_end(key)
             return entry
 
@@ -100,9 +102,20 @@ class WarmPool:
             return self._entries.get(key)
 
     def stats(self) -> dict:
-        """Hit/miss/eviction/hydration counters + current entry count."""
+        """Hit/miss/eviction/hydration counters + current entry count.
+
+        ``hot`` is the per-entry hit distribution (kind + hits per live
+        entry, hottest first): under continuous batching it is how you
+        verify membership churn keeps re-slicing the SAME pooled
+        executables — a churn-driven retrace shows up as many one-hit
+        entries instead of a few hot ones.
+        """
         with self._lock:
-            return {**self._counters, "entries": len(self._entries)}
+            hot = sorted(({"kind": e.kind, "hits": e.hits}
+                          for e in self._entries.values()),
+                         key=lambda r: -r["hits"])
+            return {**self._counters, "entries": len(self._entries),
+                    "hot": hot}
 
     def clear(self) -> None:
         with self._lock:

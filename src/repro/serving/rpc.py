@@ -265,6 +265,33 @@ class AuthError(ProtocolError):
     """The handshake failed authentication (missing or wrong token)."""
 
 
+# ------------------------------------------------------- typed wire errors
+#
+# Remote failures cross the wire as strings ("TypeName: detail", the
+# worker's str-formatting of the exception). Exception classes that must
+# survive the round trip *typed* — so frontend callers can catch
+# QueueFull/DeadlineExceeded/RateLimited instead of bare RuntimeError —
+# register here by name; the frontend maps a detail string back through
+# :func:`wire_error_class`. A registry (vs. a hard-coded tuple in
+# cluster.py) keeps the set extensible without touching the mapping code.
+
+_WIRE_ERRORS: dict[str, type] = {}
+
+
+def register_wire_error(cls: type) -> type:
+    """Register an exception class to be re-raised typed from wire errors."""
+    _WIRE_ERRORS[cls.__name__] = cls
+    return cls
+
+
+def wire_error_class(detail: str) -> type | None:
+    """The registered class a ``"TypeName: detail"`` string names, if any."""
+    name, sep, _ = detail.partition(":")
+    if sep and name in _WIRE_ERRORS:
+        return _WIRE_ERRORS[name]
+    return None
+
+
 # ---------------------------------------------------------------- JSON codec
 
 def _enc(obj: Any, blobs: list[bytes]) -> Any:

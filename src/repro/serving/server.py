@@ -36,8 +36,31 @@ executables:
   ``kernel_mode_scope`` around every lowering and call (exactly
   ``ReplayExecutor``'s pinning), so a global ``REPRO_KERNELS`` flip cannot
   change what an already-registered tenant executes.
+* **Continuous (iteration-level) batching.** The default scheduler is no
+  longer run-to-completion: each structure class owns a *resident batch*
+  that tenants join and leave **between** fused replay steps. New requests
+  are admitted at step boundaries into the existing power-of-two occupancy
+  buckets, finished sequences retire without draining their batch-mates,
+  and membership churn re-slices the same pooled/interned executables —
+  it never retraces. Multi-step decode work rides :meth:`RegionServer.
+  submit_stream`: the member stays resident across steps, each step's
+  outputs overwriting its same-named input slots (the repo's standard
+  decode-carry idiom), so a K-step stream costs K fused steps and zero
+  per-step client round-trips. ``continuous=False`` (or
+  ``REPRO_CONTINUOUS=0``) restores the PR-6 run-to-completion dispatcher
+  — kept as the benchmark baseline and kill switch.
+* **QoS admission.** Per-tenant token buckets (:class:`~repro.serving.
+  qos.TokenBucket`; ``rate=`` at registration or ``REPRO_TENANT_RATE``)
+  refuse over-rate submissions with typed :class:`RateLimited`; priority
+  tiers (``tier=`` / ``REPRO_TENANT_TIER``) drive smooth weighted
+  round-robin admission at step boundaries (weight ``2**tier``) and
+  compose with PR 7's bounded queue so **low-tier work sheds first**: at
+  a full queue a higher-tier arrival evicts the newest lowest-tier waiter
+  (its future fails ``QueueFull``) instead of being refused itself.
 * **Metrics.** Queue depth, batch occupancy, pool hit rate, p50/p99
-  replay latency — see :mod:`repro.serving.metrics`.
+  replay latency — now per tier — plus a per-step execution-pattern
+  trace ring (:class:`~repro.serving.metrics.ExecutionTraceRing`,
+  :meth:`RegionServer.dump_trace`) — see :mod:`repro.serving.metrics`.
 """
 from __future__ import annotations
 
@@ -58,12 +81,19 @@ from ..core.tdg import TDG, buffers_signature, structure_signature
 from ..kernels import registry as _kreg
 from .metrics import ServerMetrics
 from .pool import PoolEntry, WarmPool
+from .qos import SmoothWRR, TokenBucket, tenant_rate_default, \
+    tenant_tier_default, tier_weight
 
 #: Admission-queue bound (requests). ``0`` / unset = unbounded (the
 #: pre-backpressure behaviour). When the queue is at the bound, new
 #: submissions are refused with :class:`QueueFull` instead of growing the
 #: queue without limit under overload.
 QUEUE_BOUND_ENV = "REPRO_QUEUE_BOUND"
+
+#: Scheduler selector. Unset/``1`` = iteration-level (continuous)
+#: batching; ``0``/``false``/``off`` = the PR-6 run-to-completion
+#: dispatcher (benchmark baseline / kill switch).
+CONTINUOUS_ENV = "REPRO_CONTINUOUS"
 
 
 class QueueFull(RuntimeError):
@@ -84,10 +114,28 @@ class DeadlineExceeded(RuntimeError):
     retry machinery never retries past a deadline."""
 
 
+class RateLimited(RuntimeError):
+    """Admission refused: the tenant's token bucket is dry.
+
+    Per-tenant backpressure, distinct from the server-wide
+    :class:`QueueFull`: THIS tenant exceeded its configured rate
+    (``register_tenant(rate=...)`` / ``REPRO_TENANT_RATE``) — its
+    neighbours are unaffected. Typed so it crosses the cluster RPC wire
+    by name (like ``QueueFull``/``DeadlineExceeded``) and is terminal:
+    retrying a rate-limited request on a sibling would defeat the limit.
+    """
+
+
 def queue_bound_default() -> int:
     """The env-configured admission bound (0 = unbounded)."""
     raw = os.environ.get(QUEUE_BOUND_ENV, "").strip()
     return max(0, int(raw)) if raw else 0
+
+
+def continuous_default() -> bool:
+    """Env-configured scheduler choice (default: continuous batching on)."""
+    raw = os.environ.get(CONTINUOUS_ENV, "").strip().lower()
+    return raw not in ("0", "false", "off", "no")
 
 
 @dataclasses.dataclass
@@ -97,7 +145,9 @@ class Tenant:
     ``sig``/``slot_map``/``payloads`` are the canonical structure computed
     once at registration; ``kernel_mode`` is the *resolved* substrate
     (never ``"auto"``), chosen at registration exactly like
-    ``ReplayExecutor`` pins it at construction.
+    ``ReplayExecutor`` pins it at construction. ``tier`` is the QoS
+    priority (higher = more admission weight at step boundaries, sheds
+    last under pressure); ``rate`` > 0 arms a per-tenant token bucket.
     """
 
     name: str
@@ -112,12 +162,15 @@ class Tenant:
     aot_key: tuple | None = None
     aot_sig: tuple | None = None
     requests: int = 0
+    tier: int = 0
+    rate: float = 0.0
 
     def __post_init__(self) -> None:
         self.payload_ids = tuple(id(p) for p in self.payloads)
         self.from_canon = {c: a for a, c in self.slot_map.items()}
         self.input_slots = tuple(s for s in self.tdg.input_slots
                                  if s in self.slot_map)
+        self.bucket = TokenBucket(self.rate) if self.rate > 0 else None
         self._fn: Callable[[dict], dict] | None = None
         self._fn_lock = threading.Lock()
 
@@ -139,11 +192,19 @@ class Tenant:
 
 
 class _Request:
+    """One admitted unit of work — and, continuously, one batch *member*.
+
+    Under the continuous scheduler a request with ``steps > 1`` is a
+    resident stream: it stays in its class's batch across steps, each
+    step's outputs overwriting its same-named input slots, and its future
+    resolves with the FINAL step's outputs.
+    """
+
     __slots__ = ("tenant", "buffers", "canon_buffers", "key", "future",
-                 "t_submit", "served_aot", "deadline")
+                 "t_submit", "served_aot", "deadline", "steps", "steps_done")
 
     def __init__(self, tenant: Tenant, buffers: dict, canon_buffers: dict,
-                 key: tuple, deadline: float | None = None):
+                 key: tuple, deadline: float | None = None, steps: int = 1):
         self.tenant = tenant
         self.buffers = buffers
         self.canon_buffers = canon_buffers
@@ -152,6 +213,30 @@ class _Request:
         self.t_submit = time.monotonic()
         self.served_aot = False
         self.deadline = deadline       # absolute time.monotonic(), or None
+        self.steps = steps
+        self.steps_done = 0
+
+
+class _ClassState:
+    """Continuous-scheduler state for one coalescing key (structure class).
+
+    ``resident`` is the live batch stepped as one fused replay;
+    ``pending`` holds admitted-but-not-yet-joined members, drained into
+    ``resident`` at step boundaries by tier-weighted round robin.
+    """
+
+    __slots__ = ("key", "cid", "resident", "pending", "step", "wrr")
+
+    def __init__(self, key: tuple, cid: int):
+        self.key = key
+        self.cid = cid
+        self.resident: list[_Request] = []
+        self.pending: list[_Request] = []
+        self.step = 0
+        self.wrr = SmoothWRR()         # tier selector for admission slots
+
+    def busy(self) -> bool:
+        return bool(self.resident or self.pending)
 
 
 class RegionServer:
@@ -179,20 +264,28 @@ class RegionServer:
         (single-request AND batched paths): ``True`` / ``False`` /
         ``"auto"`` (honour ``REPRO_FUSE``), as in ``lower.lower_tdg``.
     autostart:
-        Start the dispatcher thread immediately. Tests pass ``False``,
+        Start the scheduler thread immediately. Tests pass ``False``,
         enqueue a known set of requests, then call :meth:`start` for a
-        deterministic first batch.
+        deterministic first batch / first step-boundary admission.
+    continuous:
+        ``True`` = iteration-level batching (resident per-class batches,
+        step-boundary joins/leaves, streams); ``False`` = the PR-6
+        run-to-completion dispatcher. ``None`` honours
+        ``REPRO_CONTINUOUS`` (default: continuous).
     """
 
     def __init__(self, max_batch: int = 8, max_wait_ms: float = 2.0,
                  pool_capacity: int = 64, fuse: bool | str = "auto",
                  name: str = "region-server", autostart: bool = True,
-                 queue_bound: int | None = None):
+                 queue_bound: int | None = None,
+                 continuous: bool | None = None):
         self.name = name
         self.max_batch = max(1, int(max_batch))
         self.max_wait_s = max(0.0, float(max_wait_ms)) / 1e3
         self.queue_bound = (queue_bound_default() if queue_bound is None
                             else max(0, int(queue_bound)))
+        self.continuous = (continuous_default() if continuous is None
+                           else bool(continuous))
         self.fuse = fuse
         self.pool = WarmPool(capacity=pool_capacity)
         self.metrics = ServerMetrics()
@@ -201,8 +294,15 @@ class RegionServer:
         self._cv = threading.Condition()
         self._closed = False
         self._started = False
+        # Continuous-scheduler state (unused by the legacy dispatcher).
+        self._classes: dict[tuple, _ClassState] = {}
+        self._next_cid = 0
+        self._pending_count = 0        # members parked in class pendings
+        self._class_wrr = SmoothWRR()  # which class steps next
         self._thread = threading.Thread(
-            target=self._dispatch_loop, name=f"{name}-dispatch", daemon=True)
+            target=(self._scheduler_loop if self.continuous
+                    else self._dispatch_loop),
+            name=f"{name}-dispatch", daemon=True)
         if autostart:
             self.start()
 
@@ -223,7 +323,7 @@ class RegionServer:
         with self._cv:
             self._closed = True
             self._cv.notify_all()
-            pending = bool(self._queue)
+            pending = bool(self._queue) or self._pending_count > 0
         if not self._started and pending:
             self.start()
         if self._started:
@@ -241,6 +341,8 @@ class RegionServer:
                         kernel_mode: str | None = None,
                         warm_path: str | None = None,
                         fn_registry: "_serialize.TaskFnRegistry | None" = None,
+                        tier: int | None = None,
+                        rate: float | None = None,
                         ) -> Tenant:
         """Register a tenant by TDG, or hydrate one from a warm artifact.
 
@@ -253,6 +355,11 @@ class RegionServer:
         sidecar degrades silently to the ordinary (interned, lazily
         traced) replay path — hydration is an optimization, never a
         correctness dependency.
+
+        ``tier`` (QoS priority; higher wins contended admission slots and
+        sheds last) and ``rate`` (sustained req/s through a token bucket;
+        0 = unlimited) default to the per-tenant ``REPRO_TENANT_TIER`` /
+        ``REPRO_TENANT_RATE`` environment specs.
         """
         if (tdg is None) == (warm_path is None):
             raise ValueError("pass exactly one of tdg= or warm_path=")
@@ -272,7 +379,11 @@ class RegionServer:
                         outputs=tuple(outputs) if outputs is not None else None,
                         kernel_mode=mode, sig=sig, slot_map=slot_map,
                         payloads=payloads, warm_path=warm_path,
-                        fuse=self.fuse)
+                        fuse=self.fuse,
+                        tier=(tenant_tier_default(name) if tier is None
+                              else max(0, int(tier))),
+                        rate=(tenant_rate_default(name) if rate is None
+                              else max(0.0, float(rate))))
         with self._cv:
             if name in self._tenants:
                 raise ValueError(f"tenant {name!r} already registered")
@@ -337,7 +448,8 @@ class RegionServer:
 
     # ------------------------------------------------------------ admission
     def _make_request(self, tenant_name: str, buffers: Mapping[str, Any],
-                      deadline: float | None = None) -> "_Request":
+                      deadline: float | None = None,
+                      steps: int = 1) -> "_Request":
         """Validate + canonicalize one submission into a queue entry."""
         tenant = self.tenant(tenant_name)
         missing = [s for s in tenant.input_slots if s not in buffers]
@@ -349,7 +461,84 @@ class RegionServer:
                  if k in tenant.slot_map}
         key = (tenant.sig, tenant.payload_ids, buffers_signature(canon),
                tenant.kernel_mode)
-        return _Request(tenant, buffers, canon, key, deadline=deadline)
+        return _Request(tenant, buffers, canon, key, deadline=deadline,
+                        steps=steps)
+
+    def _waiting_locked(self) -> int:
+        """Admitted-but-not-resident requests: the bounded-queue population.
+
+        Under the continuous scheduler, waiting work lives both in the
+        raw admission queue and in per-class pending lists (parked for a
+        step boundary) — the queue bound must count both or draining into
+        pendings would quietly disable backpressure.
+        """
+        return len(self._queue) + self._pending_count
+
+    def _evict_lower_tier_locked(self, tier: int) -> "_Request | None":
+        """Pop the newest waiting request of the lowest tier below ``tier``.
+
+        The low-tier-sheds-first half of tier QoS: at a full queue a
+        higher-tier arrival displaces best-effort work instead of being
+        refused. Newest-first within the victim tier, so the longest-
+        waiting low-tier request keeps its FIFO claim on the next slot.
+        """
+        victim_tier = tier
+        place: tuple | None = None
+        for i in range(len(self._queue) - 1, -1, -1):
+            if self._queue[i].tenant.tier < victim_tier:
+                victim_tier = self._queue[i].tenant.tier
+                place = (None, i)
+        for cls in self._classes.values():
+            for i in range(len(cls.pending) - 1, -1, -1):
+                if cls.pending[i].tenant.tier < victim_tier:
+                    victim_tier = cls.pending[i].tenant.tier
+                    place = (cls, i)
+        if place is None:
+            return None
+        cls, i = place
+        if cls is None:
+            victim = self._queue[i]
+            del self._queue[i]
+        else:
+            victim = cls.pending.pop(i)
+            self._pending_count -= 1
+        return victim
+
+    def _admit(self, req: "_Request") -> tuple[int, "_Request | None"]:
+        """Admission control for one request: closed / rate / bound checks.
+
+        Returns ``(queue depth, evicted victim or None)``; raises
+        :class:`RateLimited` / :class:`QueueFull`. The victim's future is
+        failed by the caller OUTSIDE the lock.
+        """
+        tenant = req.tenant
+        with self._cv:
+            if self._closed:
+                raise RuntimeError(f"server {self.name!r} is closed")
+            if tenant.bucket is not None and not tenant.bucket.take():
+                self.metrics.on_rate_limited()
+                raise RateLimited(
+                    f"tenant {tenant.name!r} exceeded its rate limit "
+                    f"({tenant.rate:g} req/s); request refused")
+            victim = None
+            if self.queue_bound and self._waiting_locked() >= self.queue_bound:
+                victim = self._evict_lower_tier_locked(tenant.tier)
+                if victim is None:
+                    self.metrics.on_shed()
+                    raise QueueFull(
+                        f"server {self.name!r} admission queue is at its "
+                        f"bound ({self.queue_bound}); request shed")
+            self._queue.append(req)
+            tenant.requests += 1
+            depth = self._waiting_locked()
+            self._cv.notify_all()
+        if victim is not None:
+            self.metrics.on_shed()
+            victim.future.set_exception(QueueFull(
+                f"server {self.name!r} admission queue is at its bound "
+                f"({self.queue_bound}); shed for a tier-{tenant.tier} "
+                f"arrival"))
+        return depth, victim
 
     def submit(self, tenant_name: str, buffers: Mapping[str, Any],
                deadline: float | None = None) -> Future:
@@ -359,21 +548,36 @@ class RegionServer:
         ``None`` for no deadline): a request still undispatched when it
         passes is shed (``DeadlineExceeded`` future, ``deadline_sheds``
         counter) instead of wasting a replay. Raises :class:`QueueFull`
-        when the bounded admission queue is at capacity.
+        when the bounded admission queue is at capacity (unless a
+        lower-tier waiter can be shed instead) and :class:`RateLimited`
+        when the tenant's token bucket is dry.
         """
         req = self._make_request(tenant_name, buffers, deadline=deadline)
-        with self._cv:
-            if self._closed:
-                raise RuntimeError(f"server {self.name!r} is closed")
-            if self.queue_bound and len(self._queue) >= self.queue_bound:
-                self.metrics.on_shed()
-                raise QueueFull(
-                    f"server {self.name!r} admission queue is at its bound "
-                    f"({self.queue_bound}); request shed")
-            self._queue.append(req)
-            req.tenant.requests += 1
-            depth = len(self._queue)
-            self._cv.notify_all()
+        depth, _ = self._admit(req)
+        self.metrics.on_admit(depth)
+        return req.future
+
+    def submit_stream(self, tenant_name: str, buffers: Mapping[str, Any],
+                      steps: int, deadline: float | None = None) -> Future:
+        """Enqueue a ``steps``-step resident stream (continuous mode only).
+
+        The member joins its structure class's resident batch at a step
+        boundary and stays for ``steps`` fused replay steps; between
+        steps, outputs overwrite same-named input slots (the decode-carry
+        idiom — ``bufs.update(out)``), all server-side, with no per-step
+        client round-trip. The future resolves with the FINAL step's
+        outputs. Joining and leaving never retraces: membership churn
+        re-slices the same pooled power-of-two-bucketed executables.
+        """
+        if not self.continuous:
+            raise RuntimeError(
+                "submit_stream requires continuous batching "
+                "(RegionServer(continuous=True) / REPRO_CONTINUOUS=1)")
+        if int(steps) < 1:
+            raise ValueError(f"steps must be >= 1, got {steps}")
+        req = self._make_request(tenant_name, buffers, deadline=deadline,
+                                 steps=int(steps))
+        depth, _ = self._admit(req)
         self.metrics.on_admit(depth)
         return req.future
 
@@ -420,30 +624,46 @@ class RegionServer:
             self.metrics.on_deadline_shed(n_expired)
         if admitted:
             overflow: list[_Request] = []
+            limited: list[_Request] = []
+            victims: list[_Request] = []
+            n_in = 0
             with self._cv:
                 if self._closed:
                     err = RuntimeError(f"server {self.name!r} is closed")
                     for req in admitted:
                         req.future.set_exception(err)
                     return results
-                for i, req in enumerate(admitted):
+                for req in admitted:
+                    tenant = req.tenant
+                    if tenant.bucket is not None and not tenant.bucket.take():
+                        limited.append(req)
+                        continue
                     if self.queue_bound and \
-                            len(self._queue) >= self.queue_bound:
-                        overflow = admitted[i:]
-                        admitted = admitted[:i]
-                        break
+                            self._waiting_locked() >= self.queue_bound:
+                        victim = self._evict_lower_tier_locked(tenant.tier)
+                        if victim is None:
+                            overflow.append(req)
+                            continue
+                        victims.append(victim)
                     self._queue.append(req)
-                    req.tenant.requests += 1
-                depth = len(self._queue)
+                    tenant.requests += 1
+                    n_in += 1
+                depth = self._waiting_locked()
                 self._cv.notify_all()
-            for req in overflow:
+            for req in limited:
+                req.future.set_exception(RateLimited(
+                    f"tenant {req.tenant.name!r} exceeded its rate limit "
+                    f"({req.tenant.rate:g} req/s); request refused"))
+            if limited:
+                self.metrics.on_rate_limited(len(limited))
+            for req in overflow + victims:
                 req.future.set_exception(QueueFull(
                     f"server {self.name!r} admission queue is at its bound "
                     f"({self.queue_bound}); request shed"))
-            if overflow:
-                self.metrics.on_shed(len(overflow))
-            if admitted:
-                self.metrics.on_admit_many(len(admitted), depth)
+            if overflow or victims:
+                self.metrics.on_shed(len(overflow) + len(victims))
+            if n_in:
+                self.metrics.on_admit_many(n_in, depth)
         return results
 
     def serve(self, tenant_name: str, buffers: Mapping[str, Any],
@@ -459,11 +679,16 @@ class RegionServer:
             "server": self.name,
             "max_batch": self.max_batch,
             "queue_bound": self.queue_bound,
+            "continuous": self.continuous,
             "tenants": tenants,
             "metrics": self.metrics.snapshot(),
             "pool": self.pool.stats(),
             "intern": _lower.intern_stats(),
         }
+
+    def dump_trace(self, path: str) -> dict:
+        """Write the execution-pattern trace ring to ``path`` as JSON."""
+        return self.metrics.trace.dump(path, meta={"server": self.name})
 
     # ------------------------------------------------------------- dispatch
     def _take_matching(self, group: list[_Request], key: tuple) -> None:
@@ -506,6 +731,237 @@ class RegionServer:
                         self._cv.wait(remaining)
                     self._take_matching(group, head.key)
             self._execute_group(group)
+
+    # ------------------------------------------- continuous (iteration-level)
+    def _drain_queue_locked(self) -> None:
+        """Park every queued request in its structure class's pending list."""
+        while self._queue:
+            req = self._queue.popleft()
+            cls = self._classes.get(req.key)
+            if cls is None:
+                cls = self._classes[req.key] = _ClassState(req.key,
+                                                           self._next_cid)
+                self._next_cid += 1
+            cls.pending.append(req)
+            self._pending_count += 1
+
+    def _pick_class_locked(self) -> "_ClassState | None":
+        """Smooth-WRR over busy classes, weighted by their best member tier.
+
+        A class hosting a tier-1 member gets ~2x the step slots of an
+        all-tier-0 class, which is how tier priority shapes *step* order
+        (admission order within a class is the per-class tier WRR).
+        """
+        weights: dict[tuple, int] = {}
+        for key, cls in self._classes.items():
+            if not cls.busy():
+                continue
+            w = 1
+            for r in cls.resident:
+                w = max(w, tier_weight(r.tenant.tier))
+            for r in cls.pending:
+                w = max(w, tier_weight(r.tenant.tier))
+            weights[key] = w
+        key = self._class_wrr.pick(weights)
+        return None if key is None else self._classes[key]
+
+    def _want_window_locked(self, cls: "_ClassState") -> bool:
+        """Hold a coalescing window open for this class's first step?
+
+        Only when the batch would otherwise start at occupancy 1 with the
+        whole server idle: no residents yet, pending below max_batch,
+        nothing queued, and no other class with work. A resident batch
+        never waits — steps must keep their cadence for members already
+        decoding — and a busy server never head-of-line blocks one class
+        waiting on companions for another.
+        """
+        if self.max_batch <= 1 or self.max_wait_s <= 0 or self._closed:
+            return False
+        if cls.resident or len(cls.pending) >= self.max_batch:
+            return False
+        if self._queue:
+            return False
+        return not any(other is not cls and other.busy()
+                       for other in self._classes.values())
+
+    def _shed_expired_locked(self, cls: "_ClassState") -> list:
+        """Pop members (resident or pending) whose deadline has passed."""
+        now = time.monotonic()
+        expired = []
+        for lst in (cls.resident, cls.pending):
+            for r in lst[:]:
+                if r.deadline is not None and r.deadline <= now:
+                    lst.remove(r)
+                    if lst is cls.pending:
+                        self._pending_count -= 1
+                    expired.append(r)
+        return expired
+
+    def _admit_members_locked(self, cls: "_ClassState") -> int:
+        """Fill free resident slots from pending, tier-weighted, FIFO in tier.
+
+        Admission happens ONLY here — at a step boundary — so with
+        ``autostart=False`` the membership of the first step is a pure
+        function of what was submitted before :meth:`start`. The per-class
+        :class:`SmoothWRR` picks which tier supplies each slot (weight
+        ``2**tier``), and within a tier arrival order is preserved.
+        """
+        joins = 0
+        while cls.pending and len(cls.resident) < self.max_batch:
+            tiers: dict[int, int] = {}
+            for r in cls.pending:
+                tiers.setdefault(r.tenant.tier, 0)
+                tiers[r.tenant.tier] += 1
+            pick = cls.wrr.pick({t: tier_weight(t) for t in tiers})
+            for i, r in enumerate(cls.pending):
+                if r.tenant.tier == pick:
+                    cls.resident.append(cls.pending.pop(i))
+                    self._pending_count -= 1
+                    joins += 1
+                    break
+        return joins
+
+    def _scheduler_loop(self) -> None:
+        """Continuous-batching scheduler: one fused replay step per wakeup.
+
+        Each iteration drains the admission queue into per-class pending
+        lists, picks the next class to step (tier-weighted smooth WRR),
+        admits joiners / sheds expired members at the step boundary, and
+        runs ONE step for that class's resident batch outside the lock.
+        Members with ``steps_done < steps`` stay resident with outputs
+        carried into same-named input slots; finished members retire
+        without draining the batch.
+        """
+        while True:
+            with self._cv:
+                self._drain_queue_locked()
+                cls = self._pick_class_locked()
+                if cls is None:
+                    if self._closed:
+                        return
+                    self._cv.wait()
+                    continue
+                if self._want_window_locked(cls):
+                    deadline = time.monotonic() + self.max_wait_s
+                    while True:
+                        remaining = deadline - time.monotonic()
+                        if remaining <= 0:
+                            break
+                        self._cv.wait(remaining)
+                        self._drain_queue_locked()
+                        if not self._want_window_locked(cls):
+                            break
+                expired = self._shed_expired_locked(cls)
+                joins = self._admit_members_locked(cls)
+                group = list(cls.resident)
+                cls.step += 1
+                step_idx = cls.step
+            if expired:
+                now = time.monotonic()
+                self.metrics.on_deadline_shed(len(expired))
+                for r in expired:
+                    self.metrics.on_done(now - r.t_submit, failed=True)
+                    r.future.set_exception(DeadlineExceeded(
+                        f"deadline passed while queued for tenant "
+                        f"{r.tenant.name!r}"))
+            if group:
+                self._execute_step(cls, group, step_idx,
+                                   joins=joins, sheds=len(expired))
+
+    def _execute_step(self, cls: "_ClassState", group: list, step_idx: int,
+                      joins: int, sheds: int) -> None:
+        """Run ONE fused replay step for a resident batch; settle membership.
+
+        Reuses the request-level execution paths unchanged —
+        ``_run_single`` for a lone resident, ``_run_batched`` (pooled
+        pow-2-bucketed vmap executables, per-request serial fallback) for
+        more — so membership churn hits the same intern/pool caches and
+        never retraces. Afterwards: failures and finished members retire;
+        survivors carry outputs into same-named input slots, and a member
+        whose buffer signature drifted (shape change) migrates to the
+        class that now matches instead of poisoning this batch's bucket.
+        """
+        t0 = time.monotonic()
+        coalesced = False
+        try:
+            if len(group) == 1:
+                results: list = [self._run_single(group[0])]
+            else:
+                results, coalesced = self._run_batched(group)
+            jax.block_until_ready([r for r in results
+                                   if not isinstance(r, Exception)])
+        except Exception as exc:
+            results = [exc] * len(group)
+        wall_ms = (time.monotonic() - t0) * 1e3
+        done: list = []
+        failed: list = []
+        leaves = 0
+        with self._cv:
+            for member, out in zip(group, results):
+                if isinstance(out, Exception):
+                    cls.resident.remove(member)
+                    failed.append((member, out))
+                    leaves += 1
+                    continue
+                member.steps_done += 1
+                if member.steps_done >= member.steps:
+                    cls.resident.remove(member)
+                    done.append((member, out))
+                    leaves += 1
+                    continue
+                tenant = member.tenant
+                member.buffers = {**member.buffers,
+                                  **{k: v for k, v in out.items()
+                                     if k in member.buffers}}
+                canon = {tenant.slot_map[k]: v
+                         for k, v in member.buffers.items()
+                         if k in tenant.slot_map}
+                member.canon_buffers = canon
+                new_key = (tenant.sig, tenant.payload_ids,
+                           buffers_signature(canon), tenant.kernel_mode)
+                if new_key != cls.key:
+                    cls.resident.remove(member)
+                    member.key = new_key
+                    target = self._classes.get(new_key)
+                    if target is None:
+                        target = self._classes[new_key] = _ClassState(
+                            new_key, self._next_cid)
+                        self._next_cid += 1
+                    target.pending.append(member)
+                    self._pending_count += 1
+                    leaves += 1
+            self._cv.notify_all()
+        now = time.monotonic()
+        for member, exc in failed:
+            self.metrics.on_done(now - member.t_submit, failed=True)
+            member.future.set_exception(exc)
+        for member, out in done:
+            self.metrics.on_done(now - member.t_submit,
+                                 aot=member.served_aot,
+                                 tier=member.tenant.tier)
+            member.future.set_result(out)
+        self.metrics.on_batch(len(group), coalesced=coalesced)
+        tiers: dict[str, int] = {}
+        for member in group:
+            label = str(member.tenant.tier)
+            tiers[label] = tiers.get(label, 0) + 1
+        bucket = 1
+        if len(group) >= 2:
+            bucket = 2
+            while bucket < len(group):
+                bucket *= 2
+        self.metrics.on_step({
+            "step": step_idx,
+            "class_id": cls.cid,
+            "occupancy": len(group),
+            "bucket": bucket,
+            "joins": joins,
+            "leaves": leaves,
+            "sheds": sheds,
+            "wall_ms": wall_ms,
+            "coalesced": coalesced,
+            "tiers": tiers,
+        })
 
     # ------------------------------------------------------------- execution
     def _execute_group(self, group: list[_Request]) -> None:

@@ -156,6 +156,10 @@ def main(argv=None) -> int:
                          "$REPRO_RPC_TRANSPORT or auto): tcp refuses "
                          "frontend shm-setup offers, shm/auto attach when "
                          "the segments are reachable")
+    ap.add_argument("--request-level", action="store_true",
+                    help="use the legacy run-to-completion batch dispatcher "
+                         "instead of continuous (iteration-level) batching "
+                         "(default: continuous, or $REPRO_CONTINUOUS)")
     args = ap.parse_args(argv)
 
     host, port = parse_bind(args.bind)
@@ -166,7 +170,8 @@ def main(argv=None) -> int:
                       transport=args.transport,
                       max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
                       pool_capacity=args.pool_capacity,
-                      queue_bound=args.queue_bound)
+                      queue_bound=args.queue_bound,
+                      continuous=False if args.request_level else None)
     if args.port_file:
         tmp = args.port_file + ".tmp"
         with open(tmp, "w") as f:

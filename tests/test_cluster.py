@@ -28,7 +28,9 @@ from repro.core import (ReplayExecutor, TopologyMismatch,
                         executable_serialization_available,
                         topology_fingerprint, warmup_and_save)
 from repro.serving import (ClusterError, ClusterFrontend, ClusterRemoteError,
-                           RegionServer, ShmRing, StickyRouter, rpc)
+                           RateLimited, RegionServer, ShmRing, StickyRouter,
+                           rpc)
+from repro.serving.metrics import validate_trace
 from repro.serving.cluster import WorkerNode, _WorkerHandle, resolve_registry
 from repro.serving.demo import DEMO_REGISTRY, demo_affine, demo_mix, demo_region
 from repro.serving.spawner import SpawnedWorker, parse_worker_spec
@@ -701,6 +703,87 @@ class TestWorkerDeathRequeue:
                 np.testing.assert_allclose(np.asarray(out_b[key]),
                                            np.asarray(ground_b[key]),
                                            rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching + QoS over the wire (own frontends)
+# ---------------------------------------------------------------------------
+
+class TestContinuousCluster:
+    def test_kill_mid_resident_batch_supervised_all_resolve(self):
+        # Workers run continuous RegionServers (the default): a burst of
+        # concurrent submits forms a resident batch on the victim when it
+        # is SIGKILLed. With the supervisor ON, every in-flight step must
+        # resolve — requeued to the sibling with ground-truth parity or
+        # failed with a typed error, zero hangs — and the respawned slot
+        # must keep serving. The surviving fleet's execution-pattern trace
+        # must be retrievable over the wire and schema-valid.
+        with ClusterFrontend(workers=2, registry=REGISTRY_SPEC,
+                             heartbeat_secs=0.3, lease_misses=3,
+                             respawn_max=3, name="test-contkill") as fe:
+            shared = jnp.asarray(
+                np.random.default_rng(27).standard_normal((DIM, DIM)),
+                jnp.float32)
+            tdg = demo_region("ck[0]")
+            fe.register_tenant("ck", tdg, pinned={"w": shared}, tier=1)
+            bufs = {f"x{s}": jnp.asarray(
+                np.random.default_rng(28 + s).standard_normal((DIM, DIM)),
+                jnp.float32) for s in range(2)}
+            ground = ReplayExecutor(tdg).run({**bufs, "w": shared})
+            fe.serve("ck", bufs, timeout=300)       # warm the victim
+            victim = fe.tenant("ck").worker
+            respawns_before = fe.respawns
+            futs = [fe.submit("ck", bufs) for _ in range(12)]
+            fe._handles[victim].process.kill()      # SIGKILL mid-batch
+            ok, typed = 0, 0
+            for f in futs:
+                try:
+                    out = f.result(timeout=120)      # zero hangs
+                except (ClusterError, ClusterRemoteError, RuntimeError):
+                    typed += 1
+                    continue
+                for key in ground:
+                    np.testing.assert_allclose(
+                        np.asarray(out[key]), np.asarray(ground[key]),
+                        rtol=2e-5, atol=2e-5)
+                ok += 1
+            assert ok + typed == 12 and ok >= 1
+            st = fe.stats()["frontend"]
+            assert st["worker_deaths"] >= 1
+            deadline = time.monotonic() + 120
+            while fe.respawns == respawns_before \
+                    and time.monotonic() < deadline:
+                time.sleep(0.1)
+            assert fe.respawns > respawns_before    # supervised comeback
+            out_after = fe.serve("ck", bufs, timeout=120)
+            for key in ground:
+                np.testing.assert_allclose(np.asarray(out_after[key]),
+                                           np.asarray(ground[key]),
+                                           rtol=2e-5, atol=2e-5)
+            traces = [t for t in fe.trace().values() if t is not None]
+            assert traces                            # fleet trace reachable
+            for t in traces:
+                validate_trace(t["records"])
+            assert any(t["summary"]["steps"] >= 1 for t in traces)
+
+    def test_rate_limited_crosses_the_wire_typed(self):
+        # A tenant registered with rate=0.001 req/s has a one-token burst:
+        # the first request spends it, the second must come back as the
+        # TYPED RateLimited (matched by name through the rpc error
+        # registry), not an opaque ClusterRemoteError — and must NOT be
+        # retried onto another worker.
+        with ClusterFrontend(workers=1, registry=REGISTRY_SPEC,
+                             heartbeat_secs=0,
+                             name="test-ratewire") as fe:
+            tdg = demo_region("rl[0]")
+            fe.register_tenant("rl", tdg, tier=0, rate=0.001)
+            bufs = _bufs(31)
+            out = fe.serve("rl", bufs, timeout=300)  # spends the only token
+            _check(out, tdg, bufs)
+            with pytest.raises(RateLimited, match="rate limit"):
+                fe.serve("rl", bufs, timeout=120)
+            st = fe.stats()
+            assert st["aggregate"]["rate_limited"] == 1
 
 
 # ---------------------------------------------------------------------------

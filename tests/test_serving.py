@@ -16,7 +16,9 @@ from repro.core import (TDG, ReplayExecutor, clear_intern_cache,
                         executable_serialization_available, intern_stats,
                         warmup_and_save)
 from repro.core.serialize import TaskFnRegistry
-from repro.serving import RegionServer, WarmPool
+from repro.serving import (QueueFull, RateLimited, RegionServer, SmoothWRR,
+                           TokenBucket, WarmPool, tier_weight, validate_trace)
+from repro.serving import rpc
 
 REG = TaskFnRegistry()
 
@@ -497,3 +499,232 @@ class TestConcurrency:
         m = server.metrics.snapshot()
         assert m["completed"] == n * rounds
         assert m["failed"] == 0
+
+
+def _chain_oracle(tdg, start, steps, rtol=2e-4):
+    """Serial ground truth for a stream: replay ``steps`` times, carrying
+    outputs into the same-named input slots between iterations."""
+    ex = ReplayExecutor(tdg)
+    bufs = dict(start)
+    out = {}
+    for _ in range(steps):
+        out = ex.run(dict(bufs))
+        bufs.update({k: v for k, v in out.items() if k in bufs})
+    return out
+
+
+def _assert_stream(out, tdg, start, steps):
+    want = _chain_oracle(tdg, start, steps)
+    assert set(out) == set(want)
+    for k in want:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(want[k]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestContinuous:
+    """Iteration-level batching: resident per-class batches with tenants
+    joining/leaving between fused steps (the tentpole of the serving tier's
+    continuous mode)."""
+
+    def test_stream_parity_vs_replay_chain(self):
+        w = jnp.asarray(np.random.default_rng(7).standard_normal((6, 6)),
+                        jnp.float32)
+        server = RegionServer(max_batch=4, continuous=True, autostart=False)
+        tenants = []
+        for i in range(3):
+            tdg = _region(i)
+            server.register_tenant(f"t{i}", tdg)
+            tenants.append((tdg, _bufs(200 + i, shared_w=w)))
+        futs = [server.submit_stream(f"t{i}", b, steps=5)
+                for i, (_, b) in enumerate(tenants)]
+        server.start()
+        outs = [f.result(120) for f in futs]
+        server.close()
+        for (tdg, b), out in zip(tenants, outs):
+            _assert_stream(out, tdg, b, steps=5)
+
+    def test_join_leave_mid_stream_no_retrace(self):
+        # Two long streams and two short ones share one resident batch; the
+        # short pair retires after step 2 WITHOUT draining the batch, and
+        # the shrink must re-slice pooled executables, never retrace.
+        w = jnp.asarray(np.random.default_rng(8).standard_normal((6, 6)),
+                        jnp.float32)
+        server = RegionServer(max_batch=4, continuous=True, autostart=False)
+        plans = [4, 4, 2, 2]          # steps per tenant
+        tenants = []
+        for i, steps in enumerate(plans):
+            tdg = _region(i)
+            server.register_tenant(f"t{i}", tdg)
+            tenants.append((tdg, _bufs(210 + i, shared_w=w), steps))
+        futs = [server.submit_stream(f"t{i}", b, steps=s)
+                for i, (_, b, s) in enumerate(tenants)]
+        server.start()
+        outs = [f.result(120) for f in futs]
+        server.close()
+        for (tdg, b, s), out in zip(tenants, outs):
+            _assert_stream(out, tdg, b, steps=s)
+        # Execution pattern: 2 full steps at occupancy 4, then 2 at 2.
+        trace = server.metrics.trace.snapshot()
+        assert [r["occupancy"] for r in trace] == [4, 4, 2, 2]
+        assert trace[1]["leaves"] == 2      # short pair retires in place
+        assert trace[3]["leaves"] == 2
+        m = server.metrics.snapshot()
+        assert m["joins"] == 4 and m["leaves"] == 4
+        assert m["batches"] == 4
+        # ONE batched executable serves every step — churn re-sliced it
+        # (misses stay at 1, every later step is a pool hit on the same
+        # entry), it did not rebuild.
+        pool = server.pool.stats()
+        assert pool["misses"] == 1
+        assert pool["hits"] == 3
+        assert pool["hot"] == [{"kind": "batched", "hits": 3}]
+
+    def test_mid_stream_join_and_early_leave_parity(self):
+        # A 3-step stream and a 1-step request admitted at the same
+        # boundary: the single rides step 1 of the resident batch and
+        # leaves; the stream continues alone. Both match serial oracles.
+        w = jnp.eye(6, dtype=jnp.float32)
+        server = RegionServer(max_batch=2, continuous=True, autostart=False)
+        tdg_a, tdg_b = _region("a"), _region("b")
+        server.register_tenant("a", tdg_a)
+        server.register_tenant("b", tdg_b)
+        ba, bb = _bufs(220, shared_w=w), _bufs(221, shared_w=w)
+        fa = server.submit_stream("a", ba, steps=3)
+        fb = server.submit("b", bb)
+        server.start()
+        out_a, out_b = fa.result(120), fb.result(120)
+        server.close()
+        _assert_stream(out_a, tdg_a, ba, steps=3)
+        _check(out_b, tdg_b, bb)
+        trace = server.metrics.trace.snapshot()
+        assert [r["occupancy"] for r in trace] == [2, 1, 1]
+        assert trace[0]["joins"] == 2 and trace[0]["leaves"] == 1
+
+    def test_deterministic_step_boundary_admission(self):
+        # All requests queued before start: admission order is a pure
+        # function of (FIFO within tier) x (smooth weighted round-robin
+        # across tiers), so the trace tier tallies are reproducible.
+        w = jnp.eye(6, dtype=jnp.float32)
+        server = RegionServer(max_batch=2, continuous=True, autostart=False)
+        for i in range(8):
+            server.register_tenant(f"t{i}", _region(i), tier=i % 2)
+        futs = [server.submit(f"t{i % 8}", _bufs(230 + i, shared_w=w))
+                for i in range(24)]
+        server.start()
+        for f in futs:
+            f.result(120)
+        server.close()
+        trace = server.metrics.trace.snapshot()
+        assert len(trace) == 12
+        assert all(r["occupancy"] == 2 for r in trace)
+        tiers = [r["tiers"] for r in trace]
+        # tier-1 holds a 2x admission weight: it is never behind tier-0
+        # cumulatively, and drains first, leaving an all-tier-0 tail.
+        cum = {"0": 0, "1": 0}
+        for t in tiers:
+            for k, n in t.items():
+                cum[k] += n
+            assert cum["1"] >= cum["0"] or cum["1"] == 12
+        assert cum == {"0": 12, "1": 12}
+        assert tiers[0] == {"0": 1, "1": 1}
+        assert tiers[-3:] == [{"0": 2}] * 3     # tier-1 exhausted first
+
+    def test_submit_stream_requires_continuous(self):
+        with RegionServer(continuous=False) as server:
+            server.register_tenant("a", _region(0))
+            with pytest.raises(RuntimeError, match="continuous"):
+                server.submit_stream("a", _bufs(0), steps=2)
+        with RegionServer(continuous=True) as server:
+            server.register_tenant("a", _region(0))
+            with pytest.raises(ValueError, match="steps"):
+                server.submit_stream("a", _bufs(0), steps=0)
+
+    def test_continuous_stats_flag_and_trace_dump(self, tmp_path):
+        with RegionServer(continuous=True) as server:
+            server.register_tenant("a", _region(0))
+            _check(server.serve("a", _bufs(240)), _region(0), _bufs(240))
+            assert server.stats()["continuous"] is True
+            path = tmp_path / "trace.json"
+            dumped = server.dump_trace(str(path))
+        assert path.exists()
+        assert dumped["summary"]["steps"] >= 1
+
+
+class TestQoS:
+    """Per-tenant admission shaping: token buckets, priority tiers, and
+    tier-aware shedding (compose with the queue bound + deadlines)."""
+
+    def test_token_bucket_accounting_under_burst(self):
+        b = TokenBucket(rate=2.0, burst=2.0, now=0.0)
+        assert b.take(now=0.0) and b.take(now=0.0)      # burst drains
+        assert not b.take(now=0.0)                      # empty
+        assert not b.take(now=0.4)                      # 0.8 tokens: < 1
+        assert b.take(now=0.5)                          # refilled exactly 1
+        assert not b.take(now=0.5)
+        assert b.available(now=100.0) == pytest.approx(2.0)   # capped
+        assert b.take(n=2, now=100.0)
+        with pytest.raises(ValueError):
+            TokenBucket(rate=0.0)
+
+    def test_smooth_wrr_is_proportional_and_interleaved(self):
+        wrr = SmoothWRR()
+        weights = {1: 2, 0: 1}
+        picks = [wrr.pick(weights) for _ in range(6)]
+        assert picks == [1, 0, 1, 1, 0, 1]
+        assert tier_weight(1) == 2 * tier_weight(0)
+
+    def test_rate_limited_is_typed_and_counted(self):
+        server = RegionServer(continuous=True, autostart=False)
+        server.register_tenant("a", _region(0), rate=1.0)   # burst of 1
+        fut = server.submit("a", _bufs(0))
+        with pytest.raises(RateLimited, match="rate limit"):
+            server.submit("a", _bufs(1))
+        server.start()
+        fut.result(120)
+        server.close()
+        m = server.metrics.snapshot()
+        assert m["rate_limited"] == 1
+        assert m["completed"] == 1
+
+    def test_low_tier_shed_first_at_queue_bound(self):
+        # Queue at its bound, all waiters tier-0: a tier-1 arrival evicts
+        # the NEWEST low-tier waiter instead of being refused; a further
+        # tier-0 arrival (nothing lower to evict) is refused outright.
+        w = jnp.eye(6, dtype=jnp.float32)
+        server = RegionServer(max_batch=8, continuous=True, autostart=False,
+                              queue_bound=4)
+        server.register_tenant("low", _region("lo"), tier=0)
+        server.register_tenant("high", _region("hi"), tier=1)
+        low_futs = [server.submit("low", _bufs(300 + i, shared_w=w))
+                    for i in range(4)]
+        high_fut = server.submit("high", _bufs(310, shared_w=w))
+        with pytest.raises(QueueFull, match="tier-1"):
+            low_futs[-1].result(1)          # newest low waiter was shed
+        with pytest.raises(QueueFull):
+            server.submit("low", _bufs(311, shared_w=w))
+        server.start()
+        for f in low_futs[:-1] + [high_fut]:
+            f.result(120)
+        server.close()
+        m = server.metrics.snapshot()
+        assert m["shed"] == 2               # the victim + the refusal
+        assert m["completed"] == 4
+
+    def test_qos_env_defaults(self, monkeypatch):
+        monkeypatch.setenv("REPRO_TENANT_TIER", "a=2,*=0")
+        monkeypatch.setenv("REPRO_TENANT_RATE", "a=5,*=0")
+        with RegionServer(autostart=False) as server:
+            ta = server.register_tenant("a", _region(0))
+            tb = server.register_tenant("b", _region(1))
+        assert ta.tier == 2 and ta.rate == 5.0 and ta.bucket is not None
+        assert tb.tier == 0 and tb.rate == 0.0 and tb.bucket is None
+
+    def test_typed_errors_cross_the_wire_by_name(self):
+        from repro.serving.server import DeadlineExceeded
+        assert rpc.wire_error_class("RateLimited: tenant 'a' ...") \
+            is RateLimited
+        assert rpc.wire_error_class("QueueFull: bound") is QueueFull
+        assert rpc.wire_error_class("DeadlineExceeded: late") \
+            is DeadlineExceeded
+        assert rpc.wire_error_class("ValueError: nope") is None
+        assert rpc.wire_error_class("no colon here") is None
