@@ -1,6 +1,7 @@
 """Wave-fused vs unrolled replay lowering: trace / compile / steady-state.
 
-    PYTHONPATH=src python -m benchmarks.fusion [--smoke] [--out PATH]
+    PYTHONPATH=src python -m benchmarks.fusion [--smoke] [--devices N] \
+        [--out PATH]
 
 For each task granularity (waves x width grids of isomorphic matmul-chain
 tasks, the shape of the paper's Listing-1 / pipeline regions) this measures,
@@ -15,14 +16,41 @@ for the unrolled and the wave-fused lowering:
 and emits ``BENCH_fusion.json`` with a ``speedup_trace_compile`` figure per
 grid. The acceptance bar for this repo: >= 3x trace+compile reduction on a
 >= 512-task isomorphic-wave TDG.
+
+``--devices N`` additionally sweeps the SHARDED fused lowering
+(``lower_tdg(..., mesh=make_replay_mesh(n))``) over n in {1, 2, 4, ..., N}
+faked host devices (the flag must be set before jax initializes, which is
+why this module imports jax lazily) and records the sweep under a
+``devices`` key. Sharding the stacked batch axis only moves lanes between
+devices, so the gate is exact: ``parity_max_abs_diff == 0.0`` against the
+single-device fused output at every device count.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 import time
 
 import numpy as np
+
+
+def force_host_devices(n: int) -> None:
+    """Fake ``n`` host devices. Must run before jax first initializes."""
+    if "jax" in sys.modules:
+        import jax
+
+        if jax.device_count() < n:
+            raise SystemExit(
+                f"--devices {n}: jax already initialized with "
+                f"{jax.device_count()} device(s); set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={n} before launch")
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = \
+            f"{flags} --xla_force_host_platform_device_count={n}".strip()
 
 
 def _grid(n_waves: int, width: int, dim: int):
@@ -43,13 +71,13 @@ def _grid(n_waves: int, width: int, dim: int):
     return tdg, bufs
 
 
-def _measure(tdg, bufs, fuse: bool, reps: int) -> dict:
+def _measure(tdg, bufs, fuse: bool, reps: int, mesh=None) -> dict:
     import jax
 
     from benchmarks.common import timeit
     from repro.core import lower_tdg
 
-    fn = lower_tdg(tdg, jit=False, fuse=fuse)
+    fn = lower_tdg(tdg, jit=False, fuse=fuse, mesh=mesh)
     specs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
              for k, v in bufs.items()}
     t0 = time.perf_counter()
@@ -114,28 +142,94 @@ def run(grids=((4, 16), (8, 32), (8, 64)), dim: int = 16, reps: int = 5,
     return report
 
 
+def run_devices(grids=((4, 16), (8, 32)), dim: int = 16, reps: int = 5,
+                n_devices: int = 8) -> list:
+    """Sharded vs single-device fused replay over 1..n_devices.
+
+    Requires ``force_host_devices(n_devices)`` (or real devices) before jax
+    initializes. Parity against the 1-device fused output must be EXACT at
+    every device count — the callers gate on it.
+    """
+    import jax
+
+    from repro.launch.mesh import make_replay_mesh
+
+    avail = min(n_devices, jax.device_count())
+    counts = [n for n in (1, 2, 4, 8, 16, 32) if n <= avail]
+    rows = []
+    for n_waves, width in grids:
+        tdg, bufs = _grid(n_waves, width, dim)
+        sweep = []
+        ref = None
+        for n in counts:
+            mesh = make_replay_mesh(n) if n > 1 else None
+            m = _measure(tdg, bufs, fuse=True, reps=reps, mesh=mesh)
+            if ref is None:
+                ref = m["_out"]
+            diff = max(float(np.abs(np.asarray(ref[k])
+                                    - np.asarray(m["_out"][k])).max())
+                       for k in ref)
+            sweep.append({
+                "devices": n,
+                **{k: v for k, v in m.items() if k != "_out"},
+                "parity_max_abs_diff": diff,
+            })
+            print(f"{tdg.region:>16}: devices={n:2d} "
+                  f"trace+compile {m['trace_compile_s']:7.3f}s  "
+                  f"replay {m['replay_s']*1e3:7.2f}ms  "
+                  f"parity_max_abs_diff={diff}", flush=True)
+        rows.append({"tasks": tdg.num_tasks, "waves": n_waves,
+                     "width": width, "dim": dim, "sweep": sweep})
+    return rows
+
+
+def _gate_devices_parity(device_rows: list) -> None:
+    for row in device_rows:
+        for point in row["sweep"]:
+            assert point["parity_max_abs_diff"] == 0.0, (
+                "sharded fused replay diverged from single-device", point)
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized: one tiny grid, asserts parity + "
                          "jaxpr shrink (wall-time speedup is reported, "
                          "not gated — too noisy at smoke size)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="also sweep the sharded fused lowering over "
+                         "1..N faked host devices; gates on EXACT parity "
+                         "vs the single-device fused output")
     ap.add_argument("--out", default="BENCH_fusion.json")
     args = ap.parse_args(argv)
+    if args.devices > 1:
+        force_host_devices(args.devices)
     if args.smoke:
-        report = run(grids=((3, 12),), dim=8, reps=2, out_path=args.out)
+        report = run(grids=((3, 12),), dim=8, reps=2, out_path="")
         row = report["grids"][0]
         assert row["parity_max_abs_diff"] < 1e-3, row
         assert row["jaxpr_shrink"] > 1.0, row
+        if args.devices > 1:
+            report["devices"] = run_devices(grids=((3, 12),), dim=8, reps=2,
+                                            n_devices=args.devices)
+            _gate_devices_parity(report["devices"])
         print(f"# smoke ok: jaxpr_shrink={row['jaxpr_shrink']:.2f} "
-              f"speedup={row['speedup_trace_compile']:.2f}x")
+              f"speedup={row['speedup_trace_compile']:.2f}x"
+              + (" + exact sharded parity" if args.devices > 1 else ""))
     else:
-        report = run(out_path=args.out)
+        report = run(out_path="")
         big = [r for r in report["grids"] if r["tasks"] >= 512]
         for r in big:
             print(f"# acceptance [{r['waves']}x{r['width']}]: "
                   f"{r['speedup_trace_compile']:.2f}x trace+compile "
                   f"(target >= 3x)")
+        if args.devices > 1:
+            report["devices"] = run_devices(n_devices=args.devices)
+            _gate_devices_parity(report["devices"])
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"# wrote {args.out}", flush=True)
 
 
 if __name__ == "__main__":

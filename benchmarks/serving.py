@@ -1,6 +1,7 @@
 """Multi-tenant serving: batched admission vs serial per-request replay.
 
-    PYTHONPATH=src python -m benchmarks.serving [--smoke] [--out PATH]
+    PYTHONPATH=src python -m benchmarks.serving [--smoke] [--devices N] \
+        [--out PATH]
 
 For each tenant count N, this drives N concurrent tenants — structurally
 identical taskgraph regions (same payload function, private buffers, one
@@ -28,6 +29,9 @@ Two further phases exercise the continuous (iteration-level) scheduler:
     continuous (``submit_stream``: resident server-side decode, outputs
     carried between fused steps). Gates: identical finals, continuous
     throughput >= request-level.
+  * **--devices N** — the batched phase re-run under an N-device replay
+    mesh (``RegionServer(mesh=...)``), swept over 1..N faked host devices;
+    finals must be bit-exact against the 1-device run.
   * **open-loop** (``--open-loop --rate R``) — seeded Poisson arrivals
     from tenants split across QoS tiers 0/1, driven into a deliberately
     narrow ``max_batch`` so a backlog forms. Reports per-tier p50/p99 and
@@ -56,7 +60,8 @@ def _tenant_region(i: int, waves: int, width: int, body):
 
 
 def _run_phase(n_tenants: int, rounds: int, max_batch: int,
-               max_wait_ms: float, dim: int, waves: int, width: int) -> dict:
+               max_wait_ms: float, dim: int, waves: int, width: int,
+               mesh=None) -> dict:
     import jax.numpy as jnp
 
     from repro.core import clear_intern_cache
@@ -67,6 +72,7 @@ def _run_phase(n_tenants: int, rounds: int, max_batch: int,
 
     clear_intern_cache()
     server = RegionServer(max_batch=max_batch, max_wait_ms=max_wait_ms,
+                          mesh=mesh,
                           name=f"bench-{'batched' if max_batch > 1 else 'serial'}")
     rng = np.random.default_rng(0)
     shared_w = jnp.asarray(rng.standard_normal((dim, dim)), jnp.float32)
@@ -377,6 +383,49 @@ def _streams_section(steps: int, dim: int, waves: int, width: int,
     return section
 
 
+def _devices_section(n_devices: int, rounds: int, dim: int, waves: int,
+                     width: int, n_tenants: int = 8) -> dict:
+    """Batched admission under a replay mesh, swept over device counts.
+
+    Every tenant chain re-runs from identical seeded inputs, so the
+    sharded server's finals must be BIT-EXACT against the 1-device run:
+    sharding the coalesced request axis moves lanes, never values.
+    """
+    import jax
+
+    from repro.launch.mesh import make_replay_mesh
+
+    avail = min(n_devices, jax.device_count())
+    counts = [n for n in (1, 2, 4, 8, 16) if n <= avail]
+    sweep = []
+    ref_finals = None
+    for n in counts:
+        mesh = make_replay_mesh(n) if n > 1 else None
+        phase = _run_phase(n_tenants, rounds, n_tenants, 25.0, dim, waves,
+                           width, mesh=mesh)
+        finals = phase.pop("_finals")
+        parity = 0.0
+        if ref_finals is None:
+            ref_finals = finals
+        else:
+            for a, b in zip(ref_finals, finals):
+                assert a is not None and b is not None
+                for k in a:
+                    np.testing.assert_array_equal(b[k], a[k])
+                    parity = max(parity, float(np.abs(a[k] - b[k]).max()))
+        sweep.append({"devices": n,
+                      "throughput_rps": phase["throughput_rps"],
+                      "latency_p50_ms": phase["latency_p50_ms"],
+                      "batch_occupancy_mean": phase["batch_occupancy_mean"],
+                      "coalesced_requests": phase["coalesced_requests"],
+                      "parity_max_abs_diff": parity})
+        print(f"devices={n:2d}: {phase['throughput_rps']:8.1f} req/s "
+              f"(p50 {phase['latency_p50_ms']:6.2f} ms, occ "
+              f"{phase['batch_occupancy_mean']:.2f}) "
+              f"parity_max_abs_diff={parity}", flush=True)
+    return {"tenants": n_tenants, "rounds": rounds, "sweep": sweep}
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -392,8 +441,16 @@ def main(argv=None) -> None:
                     help="[--open-loop] offered arrival rate, req/s")
     ap.add_argument("--requests", type=int, default=256,
                     help="[--open-loop] total arrivals")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="also sweep mesh-sharded batched admission over "
+                         "1..N faked host devices; gates on bit-exact "
+                         "finals vs the 1-device run")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args(argv)
+    if args.devices > 1:
+        from benchmarks.fusion import force_host_devices
+
+        force_host_devices(args.devices)
     if args.open_loop:
         ol = _run_open_loop(8, args.requests, args.rate, 64, 3, 2)
         print(f"open-loop rate={args.rate:.0f}/s: achieved "
@@ -434,6 +491,10 @@ def main(argv=None) -> None:
         t0, t1 = ol["tier_latency"].get("0"), ol["tier_latency"].get("1")
         assert t0 and t1, ol
         assert t1["p99_ms"] < t0["p99_ms"], ol
+        if args.devices > 1:
+            report["devices"] = _devices_section(args.devices, rounds=4,
+                                                 dim=8, waves=2, width=2,
+                                                 n_tenants=4)
         if args.out:
             with open(args.out, "w") as f:
                 json.dump(report, f, indent=1)
@@ -455,6 +516,9 @@ def main(argv=None) -> None:
                                              width=4)
         report["open_loop"] = _run_open_loop(8, args.requests, args.rate,
                                              64, 3, 2)
+        if args.devices > 1:
+            report["devices"] = _devices_section(args.devices, rounds=8,
+                                                 dim=16, waves=4, width=4)
         if args.out:
             with open(args.out, "w") as f:
                 json.dump(report, f, indent=1)

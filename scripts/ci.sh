@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Tier-1 verification — the single source of truth for the test invocation,
 # so local runs and CI cannot drift. Usage:
-#   scripts/ci.sh                 # default tier-1 run (slow sweeps excluded)
+#   scripts/ci.sh                 # tier-1 + 8-device mesh leg (slow sweeps excluded)
 #   scripts/ci.sh -m slow         # opt into the slow interpret-mode sweeps
 #   scripts/ci.sh --bench-smoke   # fusion + serving + cluster + chaos benchmark smokes (+ tier-1 run)
 #   scripts/ci.sh --docs-smoke    # docs-and-examples smoke (+ tier-1 run)
@@ -31,6 +31,12 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
   # within tolerance, and no worker pids or shm segments may leak.
   # Full runs: benchmarks.fusion / .serving / .cluster / .chaos
   python -m benchmarks.fusion --smoke --out /tmp/BENCH_fusion_smoke.json
+  # Sharded-replay sweep: same smoke grid fused under 1/2/4/8 faked host
+  # devices — gates on parity_max_abs_diff == 0.0 at every device count
+  # (sharding the stacked batch axis moves lanes between devices, never
+  # values).
+  python -m benchmarks.fusion --smoke --devices 8 \
+    --out /tmp/BENCH_fusion_devices_smoke.json
   python -m benchmarks.serving --smoke --out /tmp/BENCH_serving_smoke.json
   python -m benchmarks.cluster --smoke --out /tmp/BENCH_cluster_smoke.json
   python -m benchmarks.chaos --smoke --out /tmp/BENCH_chaos_smoke.json
@@ -43,4 +49,11 @@ if [[ "${1:-}" == "--docs-smoke" ]]; then
   python -m examples.quickstart --n 64 --nb 4 --reps 1
   python scripts/check_docs.py
 fi
+# Mesh leg: the multi-device differential harness under 8 faked host
+# devices (the flag must be set before jax initializes, hence a separate
+# interpreter). In the plain tier-1 run below these tests skip themselves
+# on the single real CPU device; here every sharded-vs-single-device case
+# goes live.
+XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+  python -m pytest -x -q tests/test_mesh_replay.py tests/test_partition.py
 exec python -m pytest -x -q "$@"

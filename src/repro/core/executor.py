@@ -29,6 +29,7 @@ from . import lower as _lower
 from . import schedule as _schedule
 from .tdg import TDG, buffers_signature
 from ..kernels import registry as _kreg
+from ..sharding import replay as _shreplay
 
 
 @dataclasses.dataclass
@@ -159,24 +160,31 @@ class ReplayExecutor:
     def __init__(self, tdg: TDG, donate_slots: tuple[str, ...] = (),
                  order: list[int] | None = None,
                  kernel_mode: str | None = None,
-                 fuse: bool | str = "auto"):
+                 fuse: bool | str = "auto",
+                 mesh: Any = "auto"):
         tdg.validate()
         self.tdg = tdg
         self.donate_slots = tuple(donate_slots)
         self.order = order
         self.fuse = fuse
         self.kernel_mode = _kreg.resolved_mode(kernel_mode)
+        # Like the kernel substrate, the replay mesh is resolved ONCE at
+        # construction and pinned: fused executables bake their sharding
+        # constraints into the trace, so a mesh flip mid-lifetime must
+        # produce a different cache entry, never mutate an existing one.
+        self.mesh = _shreplay.resolve_mesh(mesh)
+        self.mesh_fp = _shreplay.mesh_fingerprint(self.mesh)
         self._cache: dict[tuple, Callable] = {}
         self.replays = 0
 
     def _compiled_for(self, buffers: Mapping[str, Any]) -> Callable:
-        sig = (buffers_signature(buffers), self.kernel_mode)
+        sig = (buffers_signature(buffers), self.kernel_mode, self.mesh_fp)
         fn = self._cache.get(sig)
         if fn is None:
             with _kreg.kernel_mode_scope(self.kernel_mode):
                 fn = _lower.lower_tdg(self.tdg, order=self.order,
                                       donate_slots=self.donate_slots,
-                                      fuse=self.fuse)
+                                      fuse=self.fuse, mesh=self.mesh)
             self._cache[sig] = fn
         return fn
 
@@ -195,8 +203,9 @@ class ReplayExecutor:
         with _kreg.kernel_mode_scope(self.kernel_mode):
             aot = _lower.aot_compile_tdg(self.tdg, buffers,
                                          donate_slots=self.donate_slots,
-                                         fuse=self.fuse)
-        self._cache[(buffers_signature(buffers), self.kernel_mode)] = aot
+                                         fuse=self.fuse, mesh=self.mesh)
+        self._cache[(buffers_signature(buffers), self.kernel_mode,
+                     self.mesh_fp)] = aot
         return aot
 
     def run(self, buffers: Mapping[str, Any], block: bool = True) -> dict:

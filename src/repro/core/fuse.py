@@ -38,6 +38,7 @@ import jax.numpy as jnp
 
 from . import schedule as _schedule
 from .tdg import TDG, abstract_leaf as _as_spec
+from ..sharding import replay as _shreplay
 
 STACK_AXIS = 0
 
@@ -188,8 +189,17 @@ def _run_unrolled(tdg: TDG, tids: Sequence[int], env: dict) -> None:
         _bind_outs(t, t.fn(*args), env)
 
 
-def _run_fused_class(tdg: TDG, cls: WaveClass, env: dict, batcher: str) -> None:
-    """Execute one isomorphism class as a single batched call."""
+def _run_fused_class(tdg: TDG, cls: WaveClass, env: dict, batcher: str,
+                     mesh=None) -> None:
+    """Execute one isomorphism class as a single batched call.
+
+    With a ``mesh``, the vmap-batched form pads the class to a multiple of
+    the mesh's batch-axis size (repeating the last member — padded lanes
+    are computed and dropped, never read) and constrains the stacked
+    arguments over the mesh so GSPMD splits the batch across devices.
+    ``batcher="map"`` is deliberately single-device: ``lax.map`` is a
+    sequential scan, so sharding its carried axis buys nothing.
+    """
     tasks = [tdg.tasks[t] for t in cls.tids]
     fn = tasks[0].fn
     arity = len(tasks[0].ins)
@@ -203,13 +213,20 @@ def _run_fused_class(tdg: TDG, cls: WaveClass, env: dict, batcher: str) -> None:
             _bind_outs(t, out, env)
         return
 
+    if batcher != "vmap":
+        mesh = None
     shared_args = {i: env[tasks[0].ins[i]] for i in range(arity)
                    if cls.shared[i]}
+    members = {i: [env[t.ins[i]] for t in tasks] for i in varying}
+    for i in varying:
+        _shreplay.pad_group(members[i], mesh)
     stacked = {
         i: jax.tree_util.tree_map(
-            lambda *xs: jnp.stack(xs, STACK_AXIS),
-            *[env[t.ins[i]] for t in tasks])
+            lambda *xs: jnp.stack(xs, STACK_AXIS), *members[i])
         for i in varying}
+    if mesh is not None:
+        stacked = {i: _shreplay.shard_leading(v, mesh)
+                   for i, v in stacked.items()}
 
     if batcher == "vmap":
         in_axes = tuple(None if cls.shared[i] else STACK_AXIS
@@ -243,7 +260,8 @@ def _run_fused_class(tdg: TDG, cls: WaveClass, env: dict, batcher: str) -> None:
 
 def fused_tdg_as_function(tdg: TDG, outputs: Sequence[str] | None = None,
                           min_class_size: int = 2,
-                          batcher: str = "vmap") -> Callable[[dict], dict]:
+                          batcher: str = "vmap",
+                          mesh=None) -> Callable[[dict], dict]:
     """Return ``f(buffers) -> {slot: value}`` with wave-fused task dispatch.
 
     Drop-in replacement for ``lower.tdg_as_function`` (pure, traceable,
@@ -251,6 +269,13 @@ def fused_tdg_as_function(tdg: TDG, outputs: Sequence[str] | None = None,
     the same partial order as any topological order. After each call (or
     trace), ``f.last_plan`` holds the :class:`FusionPlan` actually applied,
     including trace-time fallbacks.
+
+    ``mesh`` (a concrete :class:`jax.sharding.Mesh` or ``None``; resolution
+    of ``"auto"`` happens in ``lower.lower_tdg``) shards every fused
+    class's stacked batch axis across devices — see
+    :func:`_run_fused_class`. Classes that fall back to the unrolled form
+    stay single-device, which is the per-class fallback for unbatchable
+    payloads.
     """
     waves = _schedule.topo_waves(tdg)
     outputs = list(outputs) if outputs is not None else list(tdg.output_slots)
@@ -272,7 +297,7 @@ def fused_tdg_as_function(tdg: TDG, outputs: Sequence[str] | None = None,
                     applied.append(cls)
                     continue
                 try:
-                    _run_fused_class(tdg, cls, env, batcher)
+                    _run_fused_class(tdg, cls, env, batcher, mesh=mesh)
                     applied.append(cls)
                 except Exception:
                     # Payload not batchable (no vmap rule, data-dependent

@@ -42,6 +42,7 @@ import jax
 from . import fuse as _fuse
 from . import schedule as _schedule
 from .tdg import TDG, structure_signature
+from ..sharding import replay as _shreplay
 
 _FUSE_ENV = "REPRO_FUSE"
 
@@ -89,11 +90,14 @@ def fuse_enabled(fuse: bool | str = "auto") -> bool:
 
 
 def _base_function(tdg: TDG, outputs, fuse: bool, min_class_size: int,
-                   batcher: str) -> Callable[[dict], dict]:
+                   batcher: str, mesh=None) -> Callable[[dict], dict]:
     if fuse:
         return _fuse.fused_tdg_as_function(tdg, outputs=outputs,
                                            min_class_size=min_class_size,
-                                           batcher=batcher)
+                                           batcher=batcher, mesh=mesh)
+    # The unrolled form has no stacked batch axis to shard: mesh is a
+    # fused-path feature, and unrolled lowering is the single-device
+    # fallback by construction.
     return tdg_as_function(tdg, outputs=outputs)
 
 
@@ -163,7 +167,7 @@ def _kernel_registry():
 
 def _interned_lower(tdg: TDG, outputs, donate_slots: tuple[str, ...],
                     fuse: bool, min_class_size: int,
-                    batcher: str) -> Callable[[dict], dict]:
+                    batcher: str, mesh=None) -> Callable[[dict], dict]:
     sig, slot_map, payloads = structure_signature(tdg, outputs)
     canon_donate = tuple(sorted(
         slot_map[s] for s in donate_slots if s in slot_map))
@@ -172,11 +176,14 @@ def _interned_lower(tdg: TDG, outputs, donate_slots: tuple[str, ...],
     # not share an executable. The keyed mode is re-entered around every
     # call of the shared executable (jit traces lazily at first call), so a
     # caller invoking the lowered fn under a *different* ambient mode cannot
-    # poison the cache with a wrong-substrate trace.
+    # poison the cache with a wrong-substrate trace. The mesh fingerprint
+    # keys the cache for the same reason: sharding constraints are baked
+    # into the trace, so a 1-device and an N-device lowering of one
+    # structure must never share an executable.
     kreg = _kernel_registry()
     mode = kreg.resolved_mode()
     key = (sig, tuple(id(p) for p in payloads), canon_donate, fuse,
-           min_class_size, batcher, mode)
+           min_class_size, batcher, mode, _shreplay.mesh_fingerprint(mesh))
 
     with _intern_lock:
         entry = _intern_cache.get(key)
@@ -189,7 +196,7 @@ def _interned_lower(tdg: TDG, outputs, donate_slots: tuple[str, ...],
         actual_outputs = (list(outputs) if outputs is not None
                           else list(tdg.output_slots))
         base = _base_function(tdg, actual_outputs, fuse, min_class_size,
-                              batcher)
+                              batcher, mesh=mesh)
         from_canon = {c: a for a, c in slot_map.items()}
 
         def canon_run(cbuffers: dict) -> dict:
@@ -234,6 +241,7 @@ def lower_tdg(
     intern: bool | str = "auto",
     min_class_size: int = 2,
     batcher: str = "vmap",
+    mesh: Any = "auto",
 ) -> Callable[[dict], dict]:
     """Lower + (optionally) jit the TDG.
 
@@ -243,9 +251,17 @@ def lower_tdg(
     ``jit=True`` and no custom ``order`` is given; an explicit
     ``intern=True`` raises if those preconditions don't hold rather than
     silently skipping the cache.
+
+    ``mesh`` shards every fused class's stacked batch axis across devices:
+    a concrete ``jax.sharding.Mesh``, ``None`` (single-device), or
+    ``"auto"`` (honour an ambient ``sharding.partition.use_mesh`` scope,
+    then the ``REPRO_MESH`` env knob — see ``sharding.replay.resolve_mesh``).
+    The resolved mesh's fingerprint keys the intern cache, so 1-device and
+    N-device executables of one structure never collide.
     """
     donate_slots = tuple(donate_slots)
     do_fuse = fuse_enabled(fuse) and order is None
+    mesh = _shreplay.resolve_mesh(mesh) if do_fuse else None
     if intern == "auto":
         intern = jit and order is None
     elif intern and (not jit or order is not None):
@@ -253,8 +269,9 @@ def lower_tdg(
                          "(interned executables are jitted and wave-ordered)")
     if intern and jit and order is None:
         return _interned_lower(tdg, outputs, donate_slots, do_fuse,
-                               min_class_size, batcher)
-    fn = _base_function(tdg, outputs, do_fuse, min_class_size, batcher) \
+                               min_class_size, batcher, mesh=mesh)
+    fn = _base_function(tdg, outputs, do_fuse, min_class_size, batcher,
+                        mesh=mesh) \
         if order is None else tdg_as_function(tdg, order=order, outputs=outputs)
     if not jit:
         return fn
@@ -280,6 +297,11 @@ class AotExecutable:
     cost_analysis: dict | None = None
     trace_seconds: float = 0.0
     compile_seconds: float = 0.0
+    #: ``sharding.replay.mesh_fingerprint`` of the mesh this executable was
+    #: compiled under (``None`` = single-device). Rides the artifact's
+    #: topology fingerprint so an 8-device binary is rejected loudly on a
+    #: worker whose replay mesh differs.
+    mesh_fp: str | None = None
 
     @property
     def flops(self) -> float | None:
@@ -315,6 +337,7 @@ def aot_compile_tdg(
     fuse: bool | str = "auto",
     min_class_size: int = 2,
     batcher: str = "vmap",
+    mesh: Any = "auto",
 ) -> AotExecutable:
     """Eagerly trace + compile the replay executable for ``buffers``' shapes.
 
@@ -329,7 +352,9 @@ def aot_compile_tdg(
     from .tdg import abstract_leaf
 
     do_fuse = fuse_enabled(fuse)
-    fn = _base_function(tdg, outputs, do_fuse, min_class_size, batcher)
+    mesh = _shreplay.resolve_mesh(mesh) if do_fuse else None
+    fn = _base_function(tdg, outputs, do_fuse, min_class_size, batcher,
+                        mesh=mesh)
     specs = {k: jax.tree_util.tree_map(abstract_leaf, v)
              for k, v in buffers.items()}
     donate_slots = tuple(k for k in donate_slots if k in specs)
@@ -350,4 +375,5 @@ def aot_compile_tdg(
     return AotExecutable(compiled=compiled, input_specs=specs, fused=do_fuse,
                          donate_slots=donate_slots,
                          cost_analysis=_capture_cost_analysis(compiled),
-                         trace_seconds=t1 - t0, compile_seconds=t2 - t1)
+                         trace_seconds=t1 - t0, compile_seconds=t2 - t1,
+                         mesh_fp=_shreplay.mesh_fingerprint(mesh))

@@ -45,6 +45,7 @@ from . import lower as _lower
 from . import schedule as _schedule
 from .tdg import TDG, Task, buffers_signature
 from ..kernels import registry as _kreg
+from ..sharding import replay as _shreplay
 
 _REGISTRY: dict[tuple, "TaskGraphRegion"] = {}
 _registry_lock = threading.Lock()
@@ -99,11 +100,16 @@ class TaskGraphRegion:
     def __init__(self, build_fn: Callable, name: str | None = None,
                  nowait: bool = False, donate_slots: tuple[str, ...] = (),
                  recurrent: bool = True, outputs: tuple[str, ...] | None = None,
-                 fuse: bool | str = "auto"):
+                 fuse: bool | str = "auto", mesh: Any = "auto"):
         code = build_fn.__code__
         self.build_fn = build_fn
         self.outputs = tuple(outputs) if outputs is not None else None
         self.fuse = fuse
+        # Kept UNresolved ("auto" stays "auto"): regions are typically
+        # constructed at import time by the decorator, and resolving an env
+        # mesh builds device meshes — replay resolves per call instead
+        # (mirroring resolved_mode below), keyed into the replay cache.
+        self.mesh = mesh
         self.name = name or build_fn.__name__
         # paper §4.3.3: TDGs are identified by source location
         self.source_location = (code.co_filename, code.co_firstlineno, self.name)
@@ -154,13 +160,18 @@ class TaskGraphRegion:
         # Pin the kernel substrate per executable: the cache key carries the
         # resolved mode (like ReplayExecutor), so flipping REPRO_KERNELS
         # between replays re-lowers instead of serving a stale substrate.
+        # The replay mesh resolves (and keys) the same way, so flipping
+        # REPRO_MESH between replays re-lowers too.
         mode = _kreg.resolved_mode()
-        sig = (buffers_signature(buffers), mode)
+        mesh = _shreplay.resolve_mesh(self.mesh)
+        sig = (buffers_signature(buffers), mode,
+               _shreplay.mesh_fingerprint(mesh))
         fn = self._replay_cache.get(sig)
         with _kreg.kernel_mode_scope(mode):
             if fn is None:
                 fn = _lower.lower_tdg(self.tdg, donate_slots=self.donate_slots,
-                                      outputs=self.outputs, fuse=self.fuse)
+                                      outputs=self.outputs, fuse=self.fuse,
+                                      mesh=mesh)
                 self._replay_cache[sig] = fn
             out = fn(buffers)
         self.replays += 1
@@ -183,12 +194,14 @@ class TaskGraphRegion:
                 f"region {self.name!r} has no TDG yet — call build_static() "
                 "or record once before warming up")
         mode = _kreg.resolved_mode()
+        mesh = _shreplay.resolve_mesh(self.mesh)
         with _kreg.kernel_mode_scope(mode):
             aot = _lower.aot_compile_tdg(self.tdg, buffers,
                                          outputs=self.outputs,
                                          donate_slots=self.donate_slots,
-                                         fuse=self.fuse)
-        self._replay_cache[(buffers_signature(buffers), mode)] = aot
+                                         fuse=self.fuse, mesh=mesh)
+        self._replay_cache[(buffers_signature(buffers), mode,
+                            _shreplay.mesh_fingerprint(mesh))] = aot
         return aot
 
     def __call__(self, **buffers) -> dict:
@@ -230,13 +243,13 @@ class TaskGraphRegion:
 def taskgraph(fn: Callable | None = None, *, name: str | None = None,
               nowait: bool = False, donate_slots: tuple[str, ...] = (),
               recurrent: bool = True, outputs: tuple[str, ...] | None = None,
-              fuse: bool | str = "auto"):
+              fuse: bool | str = "auto", mesh: Any = "auto"):
     """Decorator form: ``@taskgraph`` / ``@taskgraph(nowait=True)``."""
 
     def wrap(f: Callable) -> TaskGraphRegion:
         return TaskGraphRegion(f, name=name, nowait=nowait,
                                donate_slots=donate_slots, recurrent=recurrent,
-                               outputs=outputs, fuse=fuse)
+                               outputs=outputs, fuse=fuse, mesh=mesh)
 
     if fn is not None:
         return wrap(fn)

@@ -142,21 +142,37 @@ class TopologyMismatch(RuntimeError):
     """
 
 
-def topology_fingerprint() -> dict:
+def topology_fingerprint(mesh: Any = "auto") -> dict:
     """The device-topology identity a compiled executable is bound to.
 
     A serialized XLA binary only loads on a matching runtime; this is the
     cheap, comparable summary shipped inside every artifact
     (:func:`executable_to_bytes`) and checked at hydrate time: platform
-    (cpu/gpu/tpu), device kind, visible device count, and the jax version
-    (serialized executables are not stable across jax releases).
+    (cpu/gpu/tpu), device kind, visible device count, the jax version
+    (serialized executables are not stable across jax releases), and the
+    replay-mesh fingerprint — an executable compiled with its batch axis
+    sharded over an 8-device mesh must not silently hydrate on a worker
+    replaying single-device.
+
+    ``mesh`` follows ``sharding.replay.resolve_mesh`` (``"auto"`` = the
+    ambient/env mesh of THIS process); producers pass the fingerprint
+    *string* the executable was actually compiled under
+    (``AotExecutable.mesh_fp``), which is used verbatim. Every value is
+    JSON-stable: the fingerprint crosses the cluster tier's JSON wire.
     """
+    from ..sharding import replay as _shreplay
+
+    if mesh is None or isinstance(mesh, str) and mesh != "auto":
+        mesh_fp = mesh
+    else:
+        mesh_fp = _shreplay.mesh_fingerprint(_shreplay.resolve_mesh(mesh))
     devices = jax.devices()
     return {
         "platform": devices[0].platform,
         "device_kind": devices[0].device_kind,
         "device_count": len(devices),
         "jax": jax.__version__,
+        "mesh": mesh_fp,
     }
 
 
@@ -191,7 +207,11 @@ def executable_to_bytes(aot) -> bytes:
     payload, in_tree, out_tree = se.serialize(aot.compiled)
     blob = {
         "version": 1,
-        "topology": topology_fingerprint(),
+        # The artifact's topology carries the mesh the executable was
+        # COMPILED under (aot.mesh_fp), not this process's ambient mesh —
+        # the two can differ (e.g. warming a single-device artifact from a
+        # mesh-enabled frontend).
+        "topology": topology_fingerprint(mesh=aot.mesh_fp),
         "payload": payload,
         "in_tree": in_tree,
         "out_tree": out_tree,
@@ -212,7 +232,7 @@ def save_executable(aot, path) -> None:
         f.write(data)
 
 
-def executable_from_bytes(data: bytes):
+def executable_from_bytes(data: bytes, mesh: Any = "auto"):
     """Hydrate an ``lower.AotExecutable`` from :func:`executable_to_bytes` output.
 
     Returns an executable ready to call on a buffer dict with the shapes it
@@ -220,9 +240,13 @@ def executable_from_bytes(data: bytes):
     corruption/version mismatch — and :class:`TopologyMismatch` when the
     embedded device-topology fingerprint disagrees with this process
     (checked BEFORE touching XLA's deserializer, so a cross-platform ship
-    is a clean rejection, not a runtime crash). Soft-fallback policy
-    belongs to the callers (``load_warm``, the serving tiers), which must
-    *count* the failure rather than silently masquerading as warm.
+    is a clean rejection, not a runtime crash). ``mesh`` declares the
+    replay mesh THIS consumer will run the executable under (``"auto"`` =
+    ambient/env; a ``RegionServer`` passes its own ``mesh_fp``): an
+    artifact whose batch axis was sharded differently is a mismatch, not a
+    silent wrong-topology hydrate. Soft-fallback policy belongs to the
+    callers (``load_warm``, the serving tiers), which must *count* the
+    failure rather than silently masquerading as warm.
     """
     se = _serialize_executable_module()
     if se is None:
@@ -236,7 +260,7 @@ def executable_from_bytes(data: bytes):
         raise ValueError(f"unsupported executable version {blob.get('version')}")
     shipped = blob.get("topology")
     if shipped is not None:
-        here = topology_fingerprint()
+        here = topology_fingerprint(mesh=mesh)
         if shipped != here:
             raise TopologyMismatch(
                 f"artifact was compiled for {shipped} but this process runs "
@@ -251,18 +275,19 @@ def executable_from_bytes(data: bytes):
     return _lower.AotExecutable(compiled=compiled, input_specs=specs,
                                 fused=blob["fused"],
                                 donate_slots=tuple(blob["donate_slots"]),
-                                cost_analysis=blob["cost_analysis"])
+                                cost_analysis=blob["cost_analysis"],
+                                mesh_fp=(shipped or {}).get("mesh"))
 
 
-def load_executable(path):
+def load_executable(path, mesh: Any = "auto"):
     """Load a compiled replay executable saved by :func:`save_executable`."""
     with open(path, "rb") as f:
         data = f.read()
-    return executable_from_bytes(data)
+    return executable_from_bytes(data, mesh=mesh)
 
 
 def warmup_and_save(tdg: TDG, buffers, path, registry: TaskFnRegistry,
-                    fuse: bool | str = "auto") -> dict:
+                    fuse: bool | str = "auto", mesh: Any = "auto") -> dict:
     """Save the TDG JSON *and* AOT-compile + persist its replay executable.
 
     The graph goes to ``path`` (portable, payloads by symbol) and the
@@ -278,7 +303,7 @@ def warmup_and_save(tdg: TDG, buffers, path, registry: TaskFnRegistry,
             "this jax build lacks jax.experimental.serialize_executable; "
             "use save_tdg() for the graph-only artifact")
     save_tdg(tdg, path, registry)
-    aot = _lower.aot_compile_tdg(tdg, buffers, fuse=fuse)
+    aot = _lower.aot_compile_tdg(tdg, buffers, fuse=fuse, mesh=mesh)
     aot_path = str(path) + ".aot"
     save_executable(aot, aot_path)
     return {
@@ -291,12 +316,14 @@ def warmup_and_save(tdg: TDG, buffers, path, registry: TaskFnRegistry,
     }
 
 
-def load_warm(path, registry: TaskFnRegistry):
+def load_warm(path, registry: TaskFnRegistry, mesh: Any = "auto"):
     """Load ``(tdg, aot_executable | None)`` saved by :func:`warmup_and_save`.
 
     The executable comes back ``None`` when the sidecar is missing or this
     jax build cannot deserialize it — callers fall back to the ordinary
-    (lazily traced) replay path in that case.
+    (lazily traced) replay path in that case. ``mesh`` is the consumer's
+    replay mesh, matched against the artifact exactly as in
+    :func:`executable_from_bytes`.
     """
     import os
 
@@ -305,7 +332,7 @@ def load_warm(path, registry: TaskFnRegistry):
     aot = None
     if os.path.exists(aot_path) and executable_serialization_available():
         try:
-            aot = load_executable(aot_path)
+            aot = load_executable(aot_path, mesh=mesh)
         except Exception:  # incompatible platform / jax version: soft-fail
             aot = None
     return tdg, aot

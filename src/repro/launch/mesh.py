@@ -25,6 +25,26 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     return jax.make_mesh(shape, axes, devices=devices)
 
 
+def make_replay_mesh(n_devices: int | None = None,
+                     axis: str = "data") -> jax.sharding.Mesh:
+    """1-D mesh over the fused-replay batch dimension.
+
+    ``axis`` defaults to ``"data"`` so ``partition.DEFAULT_RULES`` resolves
+    the logical ``"batch"`` axis onto it. ``n_devices=None`` takes every
+    local device — the ``REPRO_MESH=all`` configuration.
+    """
+    devices = jax.devices()
+    n = len(devices) if n_devices is None else int(n_devices)
+    if n < 1:
+        raise ValueError(f"need a positive device count, got {n_devices!r}")
+    if n > len(devices):
+        raise RuntimeError(
+            f"need {n} devices for the replay mesh, have {len(devices)} — "
+            f"on CPU set XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            "before any jax import")
+    return jax.make_mesh((n,), (axis,), devices=devices[:n])
+
+
 def make_small_mesh(n_data: int = 2, n_model: int = 2) -> jax.sharding.Mesh:
     """CPU-test mesh (uses however many host devices exist)."""
     n = n_data * n_model

@@ -561,7 +561,12 @@ class WorkerNode:
         artifact = msg.get("artifact")
         if artifact is not None:
             try:
-                aot = _serialize.executable_from_bytes(artifact)
+                # Match against THIS worker's replay mesh, not the ambient
+                # env: an artifact compiled batch-sharded over 8 devices
+                # must be rejected (TopologyMismatch) on a worker whose
+                # server replays single-device, and vice versa.
+                aot = _serialize.executable_from_bytes(
+                    artifact, mesh=self.server.mesh_fp)
                 self.server.install_aot(name, aot, hydrated=True)
                 self.hydrated_inband += 1
                 hydrated = True

@@ -79,6 +79,7 @@ from ..core import lower as _lower
 from ..core import serialize as _serialize
 from ..core.tdg import TDG, buffers_signature, structure_signature
 from ..kernels import registry as _kreg
+from ..sharding import replay as _shreplay
 from .metrics import ServerMetrics
 from .pool import PoolEntry, WarmPool
 from .qos import SmoothWRR, TokenBucket, tenant_rate_default, \
@@ -159,6 +160,9 @@ class Tenant:
     payloads: tuple
     warm_path: str | None = None
     fuse: bool | str = "auto"
+    #: The server's resolved replay mesh (a concrete Mesh or None), pinned
+    #: at registration — every lowering for this tenant shards under it.
+    mesh: Any = None
     aot_key: tuple | None = None
     aot_sig: tuple | None = None
     requests: int = 0
@@ -185,7 +189,7 @@ class Tenant:
             if self._fn is None:
                 with _kreg.kernel_mode_scope(self.kernel_mode):
                     self._fn = _lower.lower_tdg(
-                        self.tdg, fuse=self.fuse,
+                        self.tdg, fuse=self.fuse, mesh=self.mesh,
                         outputs=list(self.outputs)
                         if self.outputs is not None else None)
             return self._fn
@@ -278,7 +282,8 @@ class RegionServer:
                  pool_capacity: int = 64, fuse: bool | str = "auto",
                  name: str = "region-server", autostart: bool = True,
                  queue_bound: int | None = None,
-                 continuous: bool | None = None):
+                 continuous: bool | None = None,
+                 mesh: Any = "auto"):
         self.name = name
         self.max_batch = max(1, int(max_batch))
         self.max_wait_s = max(0.0, float(max_wait_ms)) / 1e3
@@ -287,6 +292,14 @@ class RegionServer:
         self.continuous = (continuous_default() if continuous is None
                            else bool(continuous))
         self.fuse = fuse
+        # Resolved ONCE at construction (like each tenant's kernel mode):
+        # every lowering this server performs — single-request, batched,
+        # warmup AOT — shards the coalesced batch axis under this mesh, and
+        # its fingerprint partitions the WarmPool keys so 1-device and
+        # N-device executables never collide. "auto" honours an ambient
+        # use_mesh scope, then REPRO_MESH (sharding.replay.resolve_mesh).
+        self.mesh = _shreplay.resolve_mesh(mesh)
+        self.mesh_fp = _shreplay.mesh_fingerprint(self.mesh)
         self.pool = WarmPool(capacity=pool_capacity)
         self.metrics = ServerMetrics()
         self._tenants: dict[str, Tenant] = {}
@@ -370,7 +383,8 @@ class RegionServer:
                 raise ValueError("warm_path= requires fn_registry= to "
                                  "re-link task payloads")
             sidecar_present = os.path.exists(str(warm_path) + ".aot")
-            tdg, aot = _serialize.load_warm(warm_path, fn_registry)
+            tdg, aot = _serialize.load_warm(warm_path, fn_registry,
+                                            mesh=self.mesh_fp)
         tdg.validate()
         mode = _kreg.resolved_mode(kernel_mode)
         sig, slot_map, payloads = structure_signature(
@@ -379,7 +393,7 @@ class RegionServer:
                         outputs=tuple(outputs) if outputs is not None else None,
                         kernel_mode=mode, sig=sig, slot_map=slot_map,
                         payloads=payloads, warm_path=warm_path,
-                        fuse=self.fuse,
+                        fuse=self.fuse, mesh=self.mesh,
                         tier=(tenant_tier_default(name) if tier is None
                               else max(0, int(tier))),
                         rate=(tenant_rate_default(name) if rate is None
@@ -416,7 +430,7 @@ class RegionServer:
         tenant = self.tenant(name)
         with _kreg.kernel_mode_scope(tenant.kernel_mode):
             aot = _lower.aot_compile_tdg(
-                tenant.tdg, buffers, fuse=tenant.fuse,
+                tenant.tdg, buffers, fuse=tenant.fuse, mesh=tenant.mesh,
                 outputs=list(tenant.outputs)
                 if tenant.outputs is not None else None)
         self._install_aot(tenant, aot)
@@ -440,7 +454,7 @@ class RegionServer:
     def _install_aot(self, tenant: Tenant, aot: "_lower.AotExecutable",
                      hydrated: bool = False) -> None:
         aot_sig = buffers_signature(aot.input_specs)
-        key = ("aot", tenant.name, aot_sig, tenant.kernel_mode)
+        key = ("aot", tenant.name, aot_sig, tenant.kernel_mode, self.mesh_fp)
         self.pool.put(key, PoolEntry("aot", aot, tenant.payloads),
                       hydrated=hydrated)
         tenant.aot_key = key
@@ -680,6 +694,7 @@ class RegionServer:
             "max_batch": self.max_batch,
             "queue_bound": self.queue_bound,
             "continuous": self.continuous,
+            "mesh": self.mesh_fp,
             "tenants": tenants,
             "metrics": self.metrics.snapshot(),
             "pool": self.pool.stats(),
@@ -1039,7 +1054,8 @@ class RegionServer:
             return entry.fn
         if tenant.warm_path is not None:
             try:
-                aot = _serialize.load_executable(str(tenant.warm_path) + ".aot")
+                aot = _serialize.load_executable(str(tenant.warm_path) + ".aot",
+                                                 mesh=self.mesh_fp)
             except Exception:
                 tenant.aot_key = None       # unrecoverable: stop retrying
                 self.metrics.on_aot_hydrate_failure()
@@ -1095,7 +1111,7 @@ class RegionServer:
             return [{r.tenant.from_canon[c]: v for c, v in canon_out.items()}
                     for r in group]
         key = ("batched", tenant0.sig, tenant0.payload_ids, shared,
-               tenant0.kernel_mode)
+               tenant0.kernel_mode, self.mesh_fp)
         entry = self.pool.get(key)
         if entry is None:
             entry = self.pool.put(key, PoolEntry(
@@ -1104,11 +1120,16 @@ class RegionServer:
         # of the last member, dropped after the call): jit specializes the
         # batched program per pytree arity, so without bucketing every
         # straggler-induced occupancy K would pay a fresh trace+compile.
-        # Buckets bound that to log2(max_batch) compilations total.
+        # Buckets bound that to log2(max_batch) compilations total. Under a
+        # mesh the bucket also rounds up to a batch-axis multiple so the
+        # request axis always splits evenly across devices (padded lanes
+        # repeat the last member and are dropped below).
         per_req = [{s: cb[s] for s in varying} for cb in canon]
         bucket = 2
         while bucket < len(per_req):
             bucket *= 2
+        msize = _shreplay.batch_axis_size(self.mesh)
+        bucket += (-bucket) % msize
         per_req.extend(per_req[-1:] * (bucket - len(per_req)))
         with _kreg.kernel_mode_scope(tenant0.kernel_mode):
             outs = entry.fn(tuple(per_req), shared_bufs)
@@ -1130,12 +1151,17 @@ class RegionServer:
         serves every batch size via jit's per-structure specialization.
         """
         with _kreg.kernel_mode_scope(tenant.kernel_mode):
+            # The inner region function stays single-device (mesh=None):
+            # the request axis vmapped below is the batch dim this server
+            # shards, and nesting a second wave-level shard inside it would
+            # constrain axes vmap has already consumed.
             base = _lower.lower_tdg(
-                tenant.tdg, jit=False, fuse=self.fuse,
+                tenant.tdg, jit=False, fuse=self.fuse, mesh=None,
                 outputs=list(tenant.outputs)
                 if tenant.outputs is not None else None)
         from_canon = tenant.from_canon
         slot_map = tenant.slot_map
+        mesh = self.mesh
 
         def canon_base(cbufs: dict) -> dict:
             out = base({from_canon[c]: v for c, v in cbufs.items()})
@@ -1144,6 +1170,10 @@ class RegionServer:
         def batched(per_req: tuple, shared_bufs: dict) -> tuple:
             stacked = jax.tree_util.tree_map(
                 lambda *xs: jnp.stack(xs, axis=0), *per_req)
+            # Split the stacked request axis across the replay mesh; the
+            # occupancy bucket above is always a batch-axis multiple, so
+            # the constraint never degrades to replicated.
+            stacked = _shreplay.shard_leading(stacked, mesh)
 
             def one(st: dict) -> dict:
                 return canon_base({**st, **shared_bufs})

@@ -1,5 +1,7 @@
 """Distribution: logical-axis partitioning rules over pod/data/model meshes."""
 from . import partition
+from . import replay
+from .replay import MESH_ENV, mesh_fingerprint, resolve_mesh
 from .partition import (
     DEFAULT_RULES,
     use_mesh,
@@ -11,6 +13,7 @@ from .partition import (
     batch_pspec,
 )
 
-__all__ = ["partition", "DEFAULT_RULES", "use_mesh", "active_mesh",
-           "constrain", "to_pspec", "param_pspecs", "param_shardings",
-           "batch_pspec"]
+__all__ = ["partition", "replay", "DEFAULT_RULES", "use_mesh",
+           "active_mesh", "constrain", "to_pspec", "param_pspecs",
+           "param_shardings", "batch_pspec", "MESH_ENV", "mesh_fingerprint",
+           "resolve_mesh"]

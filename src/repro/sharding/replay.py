@@ -1,0 +1,164 @@
+"""Mesh-sharded fused replay: spread the coalesced batch axis over devices.
+
+The fused replay path (``core/fuse.py``, ``serving/server.py``) turns a
+wave of isomorphic tasks — or a batch of coalesced tenant requests — into
+ONE vmap-batched call over a stacked leading axis. Every lane of that axis
+is independent by construction, which makes it the natural unit of data
+parallelism: constraining the stacked arrays to a 1-D device mesh lets
+GSPMD split the batch across all local devices while the traced program —
+and therefore the numerics — stay identical lane for lane. This module is
+the one place that policy lives:
+
+* :func:`resolve_mesh` turns a ``mesh=`` argument (``"auto"`` | ``None`` |
+  a concrete :class:`jax.sharding.Mesh`) into the mesh actually used,
+  honouring :func:`repro.sharding.partition.use_mesh` scopes and the
+  ``REPRO_MESH`` env knob (``N`` devices, ``all``, or ``0``/``off``).
+  Meshes that cannot shard the batch axis (size <= 1, or no axis the
+  ``"batch"`` rule resolves to) normalize to ``None`` — "sharded" is
+  never a zero-way split in disguise.
+* :func:`mesh_fingerprint` is the JSON-stable identity (``"data=8"``)
+  carried in intern-cache keys, ``WarmPool`` keys and
+  ``serialize.topology_fingerprint`` so single-device and N-device
+  executables never collide and cross-topology artifacts are rejected
+  loudly.
+* :func:`shard_leading` applies the ``with_sharding_constraint`` over the
+  stacked batch dim (``partition.batch_pspec``), sanitized per leaf so a
+  non-divisible dim degrades to replicated instead of erroring — callers
+  pad to a mesh multiple first (see ``fuse._run_fused_class``) so the
+  constraint actually bites.
+
+Sharding is exactness-preserving: lanes are independent, the per-lane op
+sequence is unchanged, and padded lanes are computed but never read — the
+differential harness in ``tests/test_mesh_replay.py`` asserts bit-equality
+against the single-device path.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from . import partition as _partition
+
+#: Env knob: ``REPRO_MESH=N`` shards fused replay over the first N local
+#: devices, ``all`` over every local device; unset/``0``/``off`` disables.
+MESH_ENV = "REPRO_MESH"
+
+_OFF = ("", "0", "off", "false", "no", "none")
+
+# env-spec -> Mesh, keyed by (raw value, visible device count) so a test
+# that monkeypatches the env (or a process that gains devices) never sees
+# a stale mesh.
+_env_cache: dict[tuple[str, int], Mesh] = {}
+
+
+def mesh_from_env() -> Mesh | None:
+    """The ``REPRO_MESH``-configured replay mesh (``None`` = disabled)."""
+    raw = os.environ.get(MESH_ENV, "").strip().lower()
+    if raw in _OFF:
+        return None
+    key = (raw, len(jax.devices()))
+    mesh = _env_cache.get(key)
+    if mesh is None:
+        from ..launch import mesh as _launch_mesh
+
+        if raw == "all":
+            mesh = _launch_mesh.make_replay_mesh()
+        else:
+            try:
+                n = int(raw)
+            except ValueError:
+                raise ValueError(
+                    f"{MESH_ENV}={raw!r} is not a device count, 'all', or "
+                    "0/off") from None
+            mesh = _launch_mesh.make_replay_mesh(n)
+        _env_cache[key] = mesh
+    return mesh
+
+
+def batch_axis_size(mesh: Mesh | None) -> int:
+    """How many ways ``mesh`` splits the replay batch axis (1 = no split)."""
+    if mesh is None:
+        return 1
+    axis = _partition.resolve_axis("batch", mesh, _partition.DEFAULT_RULES)
+    if axis is None:
+        return 1
+    n = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        n *= mesh.shape[a]
+    return n
+
+
+def resolve_mesh(mesh: Any = "auto") -> Mesh | None:
+    """Resolve a ``mesh=`` argument to the mesh fused replay will use.
+
+    Precedence: an explicit :class:`Mesh` wins; ``"auto"`` takes the
+    ambient :func:`partition.use_mesh` scope, then the ``REPRO_MESH`` env
+    knob; ``None`` forces single-device. Any result that cannot split the
+    batch axis at least 2 ways normalizes to ``None``, so callers (and
+    cache keys) only ever see a mesh that genuinely shards.
+    """
+    if mesh is None:
+        return None
+    if isinstance(mesh, Mesh):
+        resolved = mesh
+    elif mesh == "auto":
+        resolved = _partition.active_mesh()
+        if resolved is None:
+            resolved = mesh_from_env()
+    else:
+        raise ValueError(
+            f"mesh must be a jax.sharding.Mesh, None or 'auto', got {mesh!r}")
+    if resolved is None or batch_axis_size(resolved) <= 1:
+        return None
+    return resolved
+
+
+def mesh_fingerprint(mesh: Mesh | None) -> str | None:
+    """JSON-stable identity of a replay mesh (``"data=8"``; ``None`` = off).
+
+    This string — not the mesh object — is what keys intern caches and
+    ``WarmPool`` entries and rides inside ``serialize.topology_fingerprint``
+    across the cluster tier's JSON wire, so it must stay a plain string.
+    """
+    if mesh is None:
+        return None
+    return ",".join(f"{name}={size}" for name, size in mesh.shape.items())
+
+
+def pad_group(members: list, mesh: Mesh | None) -> int:
+    """Extend ``members`` (in place) to a batch-axis multiple; return #pads.
+
+    Padding repeats the last member, so padded lanes trace the exact same
+    program as real ones and are simply never read back — occupancy that
+    doesn't divide the mesh axis costs idle lanes, not correctness.
+    """
+    if mesh is None or not members:
+        return 0
+    pad = (-len(members)) % batch_axis_size(mesh)
+    members.extend(members[-1:] * pad)
+    return pad
+
+
+def shard_leading(tree: Any, mesh: Mesh | None) -> Any:
+    """Constrain every array leaf's leading (stacked batch) dim to ``mesh``.
+
+    Leaves whose leading dim the mesh axis does not divide are constrained
+    replicated instead (``partition.sanitize_spec``) — semantically the
+    identity either way, which is what keeps sharding exactness-preserving.
+    """
+    if mesh is None:
+        return tree
+
+    def leaf(x):
+        ndim = getattr(x, "ndim", 0)
+        if ndim == 0:
+            return x
+        spec = _partition.batch_pspec(mesh, extra=ndim - 1,
+                                      rules=_partition.DEFAULT_RULES)
+        spec = _partition.sanitize_spec(tuple(x.shape), spec, mesh)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(leaf, tree)

@@ -1389,7 +1389,13 @@ class TestDispatcherWirePath:
             # the dispatcher must NOT put another frame on the wire
             futs = [h.submit_async("t", {"n": np.float32(i)})
                     for i in range(5)]
-            time.sleep(0.25)
+            # poll (not a fixed sleep): wait until all five are queued,
+            # then the window invariant — exactly one frame in flight —
+            # must hold
+            deadline = time.monotonic() + 30
+            while h.dispatch_stats()["queued_entries"] < 5 \
+                    and time.monotonic() < deadline:
+                time.sleep(0.005)
             ds = h.dispatch_stats()
             assert ds["inflight_frames"] == 1
             assert ds["queued_entries"] == 5

@@ -205,10 +205,13 @@ class TestLoadShedding:
         with RegionServer(max_batch=1, autostart=False) as server:
             server.register_tenant("t", tdg)
             b = _bufs(4)
-            doomed = server.submit("t", b,
-                                   deadline=time.monotonic() + 0.05)
+            dl = time.monotonic() + 0.05
+            doomed = server.submit("t", b, deadline=dl)
             alive = server.submit("t", b)
-            time.sleep(0.1)
+            # poll past the deadline instant (a fixed sleep flakes when the
+            # submits themselves eat into the margin)
+            while time.monotonic() <= dl:
+                time.sleep(0.005)
             server.start()
             with pytest.raises(DeadlineExceeded, match="while queued"):
                 doomed.result(60)

@@ -1,0 +1,207 @@
+"""Unit coverage for the dormant sharding substrate (sharding/partition.py).
+
+PR 9 promoted this module from "used by the training demos" to a
+correctness dependency of the replay path (``sharding.replay`` resolves
+specs through it), so its contracts get direct tests: ``sanitize_spec``
+shrink-to-fit, ``param_pspecs``/``batch_pspec`` against real repo model
+configs, and ``use_mesh`` scope nesting/restore. Everything here runs on
+one CPU device; cases needing real axis sizes > 1 gate on device count and
+go live in the scripts/ci.sh mesh leg.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, reduced
+from repro.launch.mesh import make_replay_mesh
+from repro.models.model import init_params
+from repro.sharding import partition as P_
+
+DEVICES = jax.device_count()
+
+needs2 = pytest.mark.skipif(
+    DEVICES < 2, reason="needs 2 devices; run via scripts/ci.sh mesh leg")
+needs4 = pytest.mark.skipif(
+    DEVICES < 4, reason="needs 4 devices; run via scripts/ci.sh mesh leg")
+
+
+def _mesh2():
+    return jax.make_mesh((2,), ("data",), devices=jax.devices()[:2])
+
+
+def _mesh22():
+    return jax.make_mesh((2, 2), ("data", "model"),
+                         devices=jax.devices()[:4])
+
+
+# ---------------------------------------------------------------------------
+# sanitize_spec: shrink-to-fit against real axis sizes
+# ---------------------------------------------------------------------------
+
+class TestSanitizeSpec:
+    @needs2
+    def test_drops_axis_on_non_divisible_dim(self):
+        mesh = _mesh2()
+        assert P_.sanitize_spec((7, 64), P("data", None), mesh) == \
+            P(None, None)
+        assert P_.sanitize_spec((8, 64), P("data", None), mesh) == \
+            P("data", None)
+
+    @needs2
+    def test_per_dim_independent(self):
+        # one bad dim must not strip the spec from the good dims
+        mesh = _mesh2()
+        assert P_.sanitize_spec((7, 8), P(None, "data"), mesh) == \
+            P(None, "data")
+
+    @needs4
+    def test_tuple_entry_uses_product_of_axis_sizes(self):
+        # ("data", "model") on a 2x2 mesh splits 4 ways: 6 doesn't divide,
+        # 8 does
+        mesh = _mesh22()
+        assert P_.sanitize_spec((6,), P(("data", "model")), mesh) == P(None)
+        assert P_.sanitize_spec((8,), P(("data", "model")), mesh) == \
+            P(("data", "model"))
+
+    @needs2
+    def test_short_spec_extends_with_replicated_dims(self):
+        mesh = _mesh2()
+        assert P_.sanitize_spec((8, 3, 5), P("data"), mesh) == \
+            P("data", None, None)
+
+    def test_size_one_axes_always_fit(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"),
+                             devices=jax.devices()[:1])
+        assert P_.sanitize_spec((7, 13), P("data", "model"), mesh) == \
+            P("data", "model")
+
+
+# ---------------------------------------------------------------------------
+# param_pspecs / batch_pspec on repo model configs
+# ---------------------------------------------------------------------------
+
+def _tiny_params(arch):
+    cfg = reduced(get_config(arch))
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+class TestParamSpecsOnRepoConfigs:
+    @pytest.mark.parametrize("arch", ["qwen2.5-3b", "qwen3-moe-30b-a3b",
+                                      "mamba2-370m"])
+    def test_specs_well_formed_for_family(self, arch):
+        """Dense / MoE / SSM param trees: every spec fits its leaf's rank,
+        names only real mesh axes, and never reuses one mesh axis twice
+        (GSPMD rejects duplicate axes within one spec)."""
+        mesh = jax.make_mesh((1, 1), ("data", "model"),
+                             devices=jax.devices()[:1])
+        cfg, params = _tiny_params(arch)
+        specs = P_.param_pspecs(params, mesh)
+
+        def check(path, x, spec):
+            assert len(spec) <= x.ndim, (path, spec, x.shape)
+            flat = [a for e in spec if e is not None
+                    for a in (e if isinstance(e, tuple) else (e,))]
+            assert set(flat) <= set(mesh.axis_names), (path, spec)
+            assert len(flat) == len(set(flat)), (path, spec)
+
+        jax.tree_util.tree_map_with_path(
+            lambda p, x, s: check(p, x, s), params, specs)
+
+    def test_dense_spot_checks(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"),
+                             devices=jax.devices()[:1])
+        _, params = _tiny_params("qwen2.5-3b")
+        specs = P_.param_pspecs(params, mesh)
+        # vocab table: TP over vocab, FSDP over embed
+        assert specs["embed"]["table"] == P("model", "data")
+        # norms replicate
+        chex = jax.tree_util.tree_leaves(specs["final_norm"])
+        assert all(e is None for s in chex for e in s)
+
+    @needs2
+    def test_param_shardings_are_placeable(self):
+        """param_shardings must yield shardings jax.device_put accepts for
+        EVERY leaf of a real model — i.e. sanitize_spec already removed
+        anything the leaf shapes can't honour."""
+        mesh = _mesh2()
+        _, params = _tiny_params("qwen2.5-3b")
+        shardings = P_.param_shardings(params, mesh)
+        placed = jax.device_put(params, shardings)
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(placed)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_batch_pspec_shapes(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"),
+                             devices=jax.devices()[:1])
+        assert P_.batch_pspec(mesh) == P("data", None)
+        assert P_.batch_pspec(mesh, extra=3) == P("data", None, None, None)
+        # no mesh: fully replicated (resolution needs a mesh)
+        assert P_.batch_pspec(None) == P(None, None)
+
+    @needs2
+    def test_batch_pspec_on_replay_mesh(self):
+        assert P_.batch_pspec(make_replay_mesh(2), extra=0) == P("data")
+
+    def test_batch_pspec_custom_rules(self):
+        mesh = jax.make_mesh((1, 1), ("pod", "data"),
+                             devices=jax.devices()[:1])
+        # DEFAULT_RULES "batch" uses every present candidate, in order
+        assert P_.batch_pspec(mesh) == P(("pod", "data"), None)
+
+
+# ---------------------------------------------------------------------------
+# use_mesh scope: nesting, restore, exception safety
+# ---------------------------------------------------------------------------
+
+class TestUseMeshScope:
+    def test_nesting_restores_previous(self):
+        m1 = jax.make_mesh((1,), ("data",), devices=jax.devices()[:1])
+        m2 = jax.make_mesh((1, 1), ("data", "model"),
+                           devices=jax.devices()[:1])
+        assert P_.active_mesh() is None
+        with P_.use_mesh(m1):
+            assert P_.active_mesh() is m1
+            with P_.use_mesh(m2):
+                assert P_.active_mesh() is m2
+            assert P_.active_mesh() is m1
+        assert P_.active_mesh() is None
+
+    def test_restores_on_exception(self):
+        m1 = jax.make_mesh((1,), ("data",), devices=jax.devices()[:1])
+        with pytest.raises(RuntimeError):
+            with P_.use_mesh(m1):
+                raise RuntimeError("boom")
+        assert P_.active_mesh() is None
+
+    def test_scope_rules_drive_resolution(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"),
+                             devices=jax.devices()[:1])
+        with P_.use_mesh(mesh, rules={"batch": ("model",)}):
+            assert P_.resolve_axis("batch") == "model"
+        with P_.use_mesh(mesh):
+            assert P_.resolve_axis("batch") == "data"
+            # unknown logical axes and empty candidate lists resolve to None
+            assert P_.resolve_axis("no_such_axis") is None
+            assert P_.resolve_axis("seq") is None
+
+    def test_nested_scope_rules_restore(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"),
+                             devices=jax.devices()[:1])
+        with P_.use_mesh(mesh, rules={"batch": ("model",)}):
+            with P_.use_mesh(mesh):  # default rules inside
+                assert P_.resolve_axis("batch") == "data"
+            assert P_.resolve_axis("batch") == "model"
+
+    @needs2
+    def test_constrain_applies_active_mesh(self):
+        mesh = _mesh2()
+        x = jnp.ones((4, 3))
+        with P_.use_mesh(mesh):
+            out = jax.jit(lambda v: P_.constrain(v, ("batch", None)))(x)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+        assert isinstance(out.sharding, NamedSharding)
+        # jax may normalize trailing replicated dims away: check dim 0 only
+        assert out.sharding.spec[0] == "data"

@@ -54,7 +54,7 @@ def test_replay_cache_keyed_by_kernel_mode():
     with kreg.kernel_mode_scope("interpret"):
         region(x=jnp.arange(4.0), a=jnp.float32(1.0))
     assert len(region._replay_cache) == 2
-    modes = {mode for _, mode in region._replay_cache}
+    modes = {key[1] for key in region._replay_cache}
     assert modes == {"ref", "interpret"}
 
 
