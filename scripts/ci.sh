@@ -40,6 +40,13 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
   python -m benchmarks.serving --smoke --out /tmp/BENCH_serving_smoke.json
   python -m benchmarks.cluster --smoke --out /tmp/BENCH_cluster_smoke.json
   python -m benchmarks.chaos --smoke --out /tmp/BENCH_chaos_smoke.json
+  # Granularity-stability smoke (paper Fig. 10 + adaptive fusion): gates
+  # bit-exact adaptive-vs-static parity (max_abs_diff == 0.0) at every
+  # grain, adaptive <= static within tolerance everywhere, replay's
+  # fine/coarse degradation ratio beating eager's, and at least one
+  # cost-model map decision so the adaptive path is actually exercised.
+  python -m benchmarks.granularity_stability --smoke \
+    --out /tmp/BENCH_granularity_smoke.json
 fi
 if [[ "${1:-}" == "--docs-smoke" ]]; then
   shift

@@ -1,7 +1,11 @@
 """Core Taskgraph framework: TDG, record-and-replay, schedules, executors,
-wave-fused lowering, structural executable interning and AOT compilation."""
+wave-fused lowering, cost-model-driven batcher selection, structural
+executable interning and AOT compilation."""
 from .tdg import (TDG, Task, Edge, DepKind, EdgeKind, DependencyTable,
                   buffers_signature, structure_signature)
+from .costmodel import (CostModel, ClassCost, BatcherDecision, BucketTuner,
+                        adaptive_enabled, resolve_batcher, plan_key,
+                        default_model, fit_boundaries, pow2_boundaries)
 from .fuse import (FusionPlan, WaveClass, classify_wave, fused_tdg_as_function,
                    plan as fusion_plan)
 from .schedule import (
@@ -32,6 +36,9 @@ from .serialize import (TaskFnRegistry, TopologyMismatch, save_tdg, load_tdg,
 __all__ = [
     "TDG", "Task", "Edge", "DepKind", "EdgeKind", "DependencyTable",
     "buffers_signature", "structure_signature",
+    "CostModel", "ClassCost", "BatcherDecision", "BucketTuner",
+    "adaptive_enabled", "resolve_batcher", "plan_key", "default_model",
+    "fit_boundaries", "pow2_boundaries",
     "FusionPlan", "WaveClass", "classify_wave", "fused_tdg_as_function",
     "fusion_plan",
     "topo_order", "topo_waves", "round_robin_assign", "wave_placement",

@@ -25,6 +25,7 @@ from typing import Any, Callable, Mapping
 
 import jax
 
+from . import costmodel as _costmodel
 from . import lower as _lower
 from . import schedule as _schedule
 from .tdg import TDG, buffers_signature
@@ -161,12 +162,20 @@ class ReplayExecutor:
                  order: list[int] | None = None,
                  kernel_mode: str | None = None,
                  fuse: bool | str = "auto",
+                 batcher: str = "auto",
                  mesh: Any = "auto"):
         tdg.validate()
         self.tdg = tdg
         self.donate_slots = tuple(donate_slots)
         self.order = order
         self.fuse = fuse
+        # The batcher *plan* is resolved once, like the substrate and mesh:
+        # "auto" -> the adaptive cost-model policy (or "vmap" under
+        # REPRO_ADAPTIVE=0), and its plan key joins the per-signature cache
+        # signature so executables lowered under different plans never
+        # collide in this executor either.
+        self.batcher = batcher
+        self.plan_key = _costmodel.plan_key(batcher)
         self.kernel_mode = _kreg.resolved_mode(kernel_mode)
         # Like the kernel substrate, the replay mesh is resolved ONCE at
         # construction and pinned: fused executables bake their sharding
@@ -178,13 +187,15 @@ class ReplayExecutor:
         self.replays = 0
 
     def _compiled_for(self, buffers: Mapping[str, Any]) -> Callable:
-        sig = (buffers_signature(buffers), self.kernel_mode, self.mesh_fp)
+        sig = (buffers_signature(buffers), self.kernel_mode, self.mesh_fp,
+               self.plan_key)
         fn = self._cache.get(sig)
         if fn is None:
             with _kreg.kernel_mode_scope(self.kernel_mode):
                 fn = _lower.lower_tdg(self.tdg, order=self.order,
                                       donate_slots=self.donate_slots,
-                                      fuse=self.fuse, mesh=self.mesh)
+                                      fuse=self.fuse, batcher=self.batcher,
+                                      mesh=self.mesh)
             self._cache[sig] = fn
         return fn
 
@@ -203,9 +214,10 @@ class ReplayExecutor:
         with _kreg.kernel_mode_scope(self.kernel_mode):
             aot = _lower.aot_compile_tdg(self.tdg, buffers,
                                          donate_slots=self.donate_slots,
-                                         fuse=self.fuse, mesh=self.mesh)
+                                         fuse=self.fuse, batcher=self.batcher,
+                                         mesh=self.mesh)
         self._cache[(buffers_signature(buffers), self.kernel_mode,
-                     self.mesh_fp)] = aot
+                     self.mesh_fp, self.plan_key)] = aot
         return aot
 
     def run(self, buffers: Mapping[str, Any], block: bool = True) -> dict:

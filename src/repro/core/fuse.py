@@ -36,6 +36,7 @@ from typing import Any, Callable, Mapping, Sequence
 import jax
 import jax.numpy as jnp
 
+from . import costmodel as _costmodel
 from . import schedule as _schedule
 from .tdg import TDG, abstract_leaf as _as_spec
 from ..sharding import replay as _shreplay
@@ -55,16 +56,44 @@ def value_signature(v: Any) -> tuple:
 
 @dataclasses.dataclass(frozen=True)
 class WaveClass:
-    """One isomorphism class inside one wave."""
+    """One isomorphism class inside one wave.
+
+    ``batcher``/``reason``/``flops``/``bytes_accessed`` record how the
+    class was (or would be) dispatched and the measured numbers behind the
+    choice — "static" reason means a caller-pinned batcher, no cost model
+    consulted. ``padded`` counts mesh-alignment pad lanes actually added
+    at trace time (repeating the last member; computed, never read back).
+    """
 
     wave: int
     tids: tuple[int, ...]
     fused: bool                      # lowered as one batched call?
     shared: tuple[bool, ...]         # arg position uses one slot for all tids
+    batcher: str = "vmap"            # "vmap" | "map" | "unrolled"
+    reason: str = "static"           # what drove the batcher choice
+    flops: float | None = None       # measured per-member flops (if probed)
+    bytes_accessed: float | None = None  # measured per-member bytes accessed
+    padded: int = 0                  # pad lanes added for mesh alignment
 
     @property
     def size(self) -> int:
         return len(self.tids)
+
+    def decision(self) -> dict:
+        """JSON-safe audit record (plan summaries / the cost report)."""
+        inten = (self.flops / self.bytes_accessed
+                 if self.flops is not None and self.bytes_accessed else None)
+        return {
+            "wave": self.wave,
+            "size": self.size,
+            "fused": self.fused,
+            "batcher": self.batcher,
+            "flops": self.flops,
+            "bytes": self.bytes_accessed,
+            "intensity": None if inten is None else round(inten, 4),
+            "padded": self.padded,
+            "reason": self.reason,
+        }
 
 
 @dataclasses.dataclass
@@ -96,7 +125,21 @@ class FusionPlan:
     def fused_fraction(self) -> float:
         return self.fused_tasks / max(self.num_tasks, 1)
 
+    @property
+    def padded_lanes(self) -> int:
+        return sum(c.padded for c in self.classes)
+
+    @property
+    def pad_fraction(self) -> float:
+        """Pad lanes over total batched lanes (real + pad) — idle-work rate."""
+        lanes = sum(c.size + c.padded for c in self.classes if c.fused)
+        return self.padded_lanes / lanes if lanes else 0.0
+
     def summary(self) -> dict:
+        batchers: dict[str, int] = {}
+        for c in self.classes:
+            if c.fused:
+                batchers[c.batcher] = batchers.get(c.batcher, 0) + 1
         return {
             "region": self.region,
             "tasks": self.num_tasks,
@@ -105,6 +148,10 @@ class FusionPlan:
             "fused_classes": self.fused_classes,
             "fused_tasks": self.fused_tasks,
             "fused_fraction": round(self.fused_fraction, 4),
+            "batchers": batchers,
+            "padded_lanes": self.padded_lanes,
+            "pad_fraction": round(self.pad_fraction, 4),
+            "decisions": [c.decision() for c in self.classes],
         }
 
 
@@ -137,17 +184,53 @@ def classify_wave(tdg: TDG, wave_index: int, wave: Sequence[int],
     return classes
 
 
+def _decide_class(tdg: TDG, cls: WaveClass, batcher: str,
+                  spec_of: Callable[[str], Any] | None) -> WaveClass:
+    """Attach a batcher decision (and the numbers behind it) to one class.
+
+    ``batcher="auto"`` consults the process cost model: the class payload
+    is probe-compiled for ONE member's argument specs and the measured
+    flops/bytes pick vmap vs ``lax.map`` vs unrolled (see ``costmodel``).
+    A static batcher passes through untouched — no probe, reason "static".
+    """
+    if not cls.fused:
+        return dataclasses.replace(
+            cls, batcher="unrolled",
+            reason=f"class size {cls.size} below min_class_size")
+    if batcher != "auto":
+        return dataclasses.replace(cls, batcher=batcher, reason="static")
+    model = _costmodel.default_model()
+    t = tdg.tasks[cls.tids[0]]
+    arg_specs = None
+    if spec_of is not None:
+        try:
+            arg_specs = [spec_of(s) for s in t.ins]
+        except Exception:
+            arg_specs = None
+    if arg_specs is None:
+        d = model.decide(_costmodel.UNMEASURED, cls.size)
+    else:
+        d = model.decide_for(t.fn, arg_specs, cls.size)
+    return dataclasses.replace(
+        cls, batcher=d.batcher, fused=d.batcher != "unrolled",
+        reason=d.reason, flops=d.cost.flops,
+        bytes_accessed=d.cost.bytes_accessed)
+
+
 def plan(tdg: TDG, buffers: Mapping[str, Any] | None = None,
-         min_class_size: int = 2) -> FusionPlan:
+         min_class_size: int = 2, batcher: str = "vmap") -> FusionPlan:
     """Offline wave analysis (for stats, tests and benchmark reporting).
 
     With ``buffers`` (arrays or ``ShapeDtypeStruct`` trees for the region's
     input slots), slot shapes are propagated through the graph by abstract
     evaluation so classes match exactly what trace-time fusion will do;
     without them, grouping is structural (payload identity + arity) — an
-    upper bound on fusion opportunity.
+    upper bound on fusion opportunity. ``batcher="auto"`` additionally runs
+    the cost model over each class (requires ``buffers`` for measured
+    numbers; without them every class is "unmeasured" -> vmap fallback).
     """
-    sig_of = None
+    batcher = _costmodel.resolve_batcher(batcher)
+    sig_of = spec_of = None
     if buffers is not None:
         env: dict[str, Any] = {
             k: jax.tree_util.tree_map(_as_spec, v) for k, v in buffers.items()}
@@ -156,9 +239,12 @@ def plan(tdg: TDG, buffers: Mapping[str, Any] | None = None,
             out = jax.eval_shape(t.fn, *[env[s] for s in t.ins])
             _bind_outs(t, out, env)
         sig_of = lambda s: value_signature(env[s])  # noqa: E731
+        spec_of = lambda s: env[s]  # noqa: E731 (already abstract specs)
     classes: list[WaveClass] = []
     for wi, wave in enumerate(_schedule.topo_waves(tdg)):
-        classes.extend(classify_wave(tdg, wi, wave, sig_of, min_class_size))
+        classes.extend(
+            _decide_class(tdg, c, batcher, spec_of)
+            for c in classify_wave(tdg, wi, wave, sig_of, min_class_size))
     return FusionPlan(region=tdg.region, num_tasks=tdg.num_tasks,
                       classes=classes, min_class_size=min_class_size)
 
@@ -190,15 +276,17 @@ def _run_unrolled(tdg: TDG, tids: Sequence[int], env: dict) -> None:
 
 
 def _run_fused_class(tdg: TDG, cls: WaveClass, env: dict, batcher: str,
-                     mesh=None) -> None:
-    """Execute one isomorphism class as a single batched call.
+                     mesh=None) -> int:
+    """Execute one isomorphism class as a single batched call; return #pads.
 
     With a ``mesh``, the vmap-batched form pads the class to a multiple of
     the mesh's batch-axis size (repeating the last member — padded lanes
     are computed and dropped, never read) and constrains the stacked
     arguments over the mesh so GSPMD splits the batch across devices.
     ``batcher="map"`` is deliberately single-device: ``lax.map`` is a
-    sequential scan, so sharding its carried axis buys nothing.
+    sequential scan, so sharding its carried axis buys nothing. The return
+    value is the pad-lane count actually added (0 without a mesh), surfaced
+    through ``FusionPlan.summary()`` as ``padded_lanes``/``pad_fraction``.
     """
     tasks = [tdg.tasks[t] for t in cls.tids]
     fn = tasks[0].fn
@@ -211,15 +299,16 @@ def _run_fused_class(tdg: TDG, cls: WaveClass, env: dict, batcher: str,
         out = fn(*[env[tasks[0].ins[i]] for i in range(arity)])
         for t in tasks:
             _bind_outs(t, out, env)
-        return
+        return 0
 
     if batcher != "vmap":
         mesh = None
     shared_args = {i: env[tasks[0].ins[i]] for i in range(arity)
                    if cls.shared[i]}
     members = {i: [env[t.ins[i]] for t in tasks] for i in varying}
+    padded = 0
     for i in varying:
-        _shreplay.pad_group(members[i], mesh)
+        padded = _shreplay.pad_group(members[i], mesh)
     stacked = {
         i: jax.tree_util.tree_map(
             lambda *xs: jnp.stack(xs, STACK_AXIS), *members[i])
@@ -256,6 +345,7 @@ def _run_fused_class(tdg: TDG, cls: WaveClass, env: dict, batcher: str,
                     f"returned {type(out).__name__}")
             for oi, s in enumerate(t.outs):
                 env[s] = jax.tree_util.tree_map(take, out[oi])
+    return padded
 
 
 def fused_tdg_as_function(tdg: TDG, outputs: Sequence[str] | None = None,
@@ -270,6 +360,12 @@ def fused_tdg_as_function(tdg: TDG, outputs: Sequence[str] | None = None,
     trace), ``f.last_plan`` holds the :class:`FusionPlan` actually applied,
     including trace-time fallbacks.
 
+    ``batcher`` is ``"vmap"`` / ``"map"`` (one pinned dispatch for every
+    fused class, no cost model) or ``"auto"`` — per-class cost-model
+    selection from probe-measured flops/bytes (``core.costmodel``). The
+    ``REPRO_ADAPTIVE=0`` kill switch is resolved *here* so a function built
+    before the flag flip still honours it at trace time.
+
     ``mesh`` (a concrete :class:`jax.sharding.Mesh` or ``None``; resolution
     of ``"auto"`` happens in ``lower.lower_tdg``) shards every fused
     class's stacked batch axis across devices — see
@@ -282,6 +378,7 @@ def fused_tdg_as_function(tdg: TDG, outputs: Sequence[str] | None = None,
 
     def run(buffers: Mapping[str, Any]) -> dict:
         env = dict(buffers)
+        resolved = _costmodel.resolve_batcher(batcher)
         applied: list[WaveClass] = []
         for wi, wave in enumerate(waves):
             def sig_of(s):
@@ -291,21 +388,27 @@ def fused_tdg_as_function(tdg: TDG, outputs: Sequence[str] | None = None,
                     raise KeyError(
                         f"unbound slot {s!r} (region inputs: "
                         f"{tdg.input_slots})") from None
+            def spec_of(s):
+                return jax.tree_util.tree_map(_as_spec, env[s])
             for cls in classify_wave(tdg, wi, wave, sig_of, min_class_size):
+                cls = _decide_class(tdg, cls, resolved, spec_of)
                 if not cls.fused:
                     _run_unrolled(tdg, cls.tids, env)
                     applied.append(cls)
                     continue
                 try:
-                    _run_fused_class(tdg, cls, env, batcher, mesh=mesh)
-                    applied.append(cls)
+                    padded = _run_fused_class(tdg, cls, env, cls.batcher,
+                                              mesh=mesh)
+                    applied.append(dataclasses.replace(cls, padded=padded))
                 except Exception:
                     # Payload not batchable (no vmap rule, data-dependent
                     # control flow, ...): this class only degrades to the
                     # unrolled form. A payload broken under tracing per se
                     # re-raises from here with its real error.
                     _run_unrolled(tdg, cls.tids, env)
-                    applied.append(dataclasses.replace(cls, fused=False))
+                    applied.append(dataclasses.replace(
+                        cls, fused=False, batcher="unrolled",
+                        reason="trace fallback: payload not batchable"))
         run.last_plan = FusionPlan(region=tdg.region, num_tasks=tdg.num_tasks,
                                    classes=applied,
                                    min_class_size=min_class_size)

@@ -39,8 +39,13 @@ from typing import Any, Callable, Mapping, Sequence
 
 import jax
 
+from . import costmodel as _costmodel
 from . import fuse as _fuse
 from . import schedule as _schedule
+# Canonical definition lives in costmodel (the consumer of the numbers);
+# re-exported here because this module captures it on every AotExecutable
+# and tests/serialize reach it as lower._capture_cost_analysis.
+from .costmodel import capture_cost_analysis as _capture_cost_analysis
 from .tdg import TDG, structure_signature
 from ..sharding import replay as _shreplay
 
@@ -180,10 +185,18 @@ def _interned_lower(tdg: TDG, outputs, donate_slots: tuple[str, ...],
     # keys the cache for the same reason: sharding constraints are baked
     # into the trace, so a 1-device and an N-device lowering of one
     # structure must never share an executable.
+    # The batcher component is the *plan* key, not the raw argument:
+    # "vmap"/"map" literals for pinned plans, "auto/<thresholds>" for the
+    # adaptive policy (costmodel.plan_key). Two lowerings of one structure
+    # under different plans bake different dispatch into the trace and must
+    # never share an executable; under REPRO_ADAPTIVE=0, "auto" resolves to
+    # "vmap" and deliberately SHARES the static entry — the kill switch
+    # restores pre-adaptive behaviour including its cache hits.
     kreg = _kernel_registry()
     mode = kreg.resolved_mode()
     key = (sig, tuple(id(p) for p in payloads), canon_donate, fuse,
-           min_class_size, batcher, mode, _shreplay.mesh_fingerprint(mesh))
+           min_class_size, _costmodel.plan_key(batcher), mode,
+           _shreplay.mesh_fingerprint(mesh))
 
     with _intern_lock:
         entry = _intern_cache.get(key)
@@ -240,7 +253,7 @@ def lower_tdg(
     fuse: bool | str = "auto",
     intern: bool | str = "auto",
     min_class_size: int = 2,
-    batcher: str = "vmap",
+    batcher: str = "auto",
     mesh: Any = "auto",
 ) -> Callable[[dict], dict]:
     """Lower + (optionally) jit the TDG.
@@ -251,6 +264,13 @@ def lower_tdg(
     ``jit=True`` and no custom ``order`` is given; an explicit
     ``intern=True`` raises if those preconditions don't hold rather than
     silently skipping the cache.
+
+    ``batcher`` picks how each fused wave class dispatches: ``"vmap"`` /
+    ``"map"`` pin one batcher for every class (the pre-cost-model
+    behaviour), ``"auto"`` (default) selects per class from probe-measured
+    flops/bytes — see ``core.costmodel``; ``REPRO_ADAPTIVE=0`` collapses
+    ``"auto"`` back to ``"vmap"``. The resolved *plan* (not the raw
+    argument) keys the intern cache so different plans never collide.
 
     ``mesh`` shards every fused class's stacked batch axis across devices:
     a concrete ``jax.sharding.Mesh``, ``None`` (single-device), or
@@ -319,16 +339,6 @@ class AotExecutable:
         return self.compiled(args)
 
 
-def _capture_cost_analysis(compiled: Any) -> dict | None:
-    try:
-        ca = compiled.cost_analysis()
-    except Exception:  # pragma: no cover - backend-dependent
-        return None
-    if isinstance(ca, (list, tuple)):
-        ca = ca[0] if ca else None
-    return dict(ca) if ca else None
-
-
 def aot_compile_tdg(
     tdg: TDG,
     buffers: Mapping[str, Any],
@@ -336,7 +346,7 @@ def aot_compile_tdg(
     donate_slots: Sequence[str] = (),
     fuse: bool | str = "auto",
     min_class_size: int = 2,
-    batcher: str = "vmap",
+    batcher: str = "auto",
     mesh: Any = "auto",
 ) -> AotExecutable:
     """Eagerly trace + compile the replay executable for ``buffers``' shapes.

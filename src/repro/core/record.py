@@ -41,6 +41,7 @@ from typing import Any, Callable, Mapping
 
 import jax
 
+from . import costmodel as _costmodel
 from . import lower as _lower
 from . import schedule as _schedule
 from .tdg import TDG, Task, buffers_signature
@@ -100,11 +101,15 @@ class TaskGraphRegion:
     def __init__(self, build_fn: Callable, name: str | None = None,
                  nowait: bool = False, donate_slots: tuple[str, ...] = (),
                  recurrent: bool = True, outputs: tuple[str, ...] | None = None,
-                 fuse: bool | str = "auto", mesh: Any = "auto"):
+                 fuse: bool | str = "auto", batcher: str = "auto",
+                 mesh: Any = "auto"):
         code = build_fn.__code__
         self.build_fn = build_fn
         self.outputs = tuple(outputs) if outputs is not None else None
         self.fuse = fuse
+        # Like mesh below, kept unresolved: "auto" re-reads REPRO_ADAPTIVE
+        # per replay via costmodel.plan_key, which keys the replay cache.
+        self.batcher = batcher
         # Kept UNresolved ("auto" stays "auto"): regions are typically
         # constructed at import time by the decorator, and resolving an env
         # mesh builds device meshes — replay resolves per call instead
@@ -165,13 +170,14 @@ class TaskGraphRegion:
         mode = _kreg.resolved_mode()
         mesh = _shreplay.resolve_mesh(self.mesh)
         sig = (buffers_signature(buffers), mode,
-               _shreplay.mesh_fingerprint(mesh))
+               _shreplay.mesh_fingerprint(mesh),
+               _costmodel.plan_key(self.batcher))
         fn = self._replay_cache.get(sig)
         with _kreg.kernel_mode_scope(mode):
             if fn is None:
                 fn = _lower.lower_tdg(self.tdg, donate_slots=self.donate_slots,
                                       outputs=self.outputs, fuse=self.fuse,
-                                      mesh=mesh)
+                                      batcher=self.batcher, mesh=mesh)
                 self._replay_cache[sig] = fn
             out = fn(buffers)
         self.replays += 1
@@ -199,9 +205,11 @@ class TaskGraphRegion:
             aot = _lower.aot_compile_tdg(self.tdg, buffers,
                                          outputs=self.outputs,
                                          donate_slots=self.donate_slots,
-                                         fuse=self.fuse, mesh=mesh)
+                                         fuse=self.fuse, batcher=self.batcher,
+                                         mesh=mesh)
         self._replay_cache[(buffers_signature(buffers), mode,
-                            _shreplay.mesh_fingerprint(mesh))] = aot
+                            _shreplay.mesh_fingerprint(mesh),
+                            _costmodel.plan_key(self.batcher))] = aot
         return aot
 
     def __call__(self, **buffers) -> dict:
@@ -243,13 +251,15 @@ class TaskGraphRegion:
 def taskgraph(fn: Callable | None = None, *, name: str | None = None,
               nowait: bool = False, donate_slots: tuple[str, ...] = (),
               recurrent: bool = True, outputs: tuple[str, ...] | None = None,
-              fuse: bool | str = "auto", mesh: Any = "auto"):
+              fuse: bool | str = "auto", batcher: str = "auto",
+              mesh: Any = "auto"):
     """Decorator form: ``@taskgraph`` / ``@taskgraph(nowait=True)``."""
 
     def wrap(f: Callable) -> TaskGraphRegion:
         return TaskGraphRegion(f, name=name, nowait=nowait,
                                donate_slots=donate_slots, recurrent=recurrent,
-                               outputs=outputs, fuse=fuse, mesh=mesh)
+                               outputs=outputs, fuse=fuse, batcher=batcher,
+                               mesh=mesh)
 
     if fn is not None:
         return wrap(fn)

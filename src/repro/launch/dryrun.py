@@ -1,8 +1,14 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
-# NOTE: the two lines above MUST run before any jax import (jax locks the
-# device count at first init), which is why the docstring sits below them.
+# The 512-fake-device XLA_FLAGS override MUST be set before any jax import
+# (jax locks the device count at first init) — but ONLY when this module is
+# the program (`python -m repro.launch.dryrun`) or explicitly asked for via
+# REPRO_DRYRUN_DEVICES: merely importing a symbol from here must never
+# silently reconfigure jax for the whole process.
+if __name__ == "__main__" or os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count="
+        f"{os.environ.get('REPRO_DRYRUN_DEVICES') or 512}")
 DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
 For each cell this produces a JSON artifact under ``dryrun_artifacts/`` with

@@ -100,6 +100,7 @@ TRACE_SCHEMA: dict = {
     "wall_ms": (int, float),  # step execution wall time
     "straggler": bool,      # wall_ms > 3x this class's EMA (after warmup)
     "coalesced": bool,      # one fused vmap call served the whole step
+    "padded": int,          # idle pad lanes run to fill the bucket
     "tiers": dict,          # {str(tier): member count}
 }
 
@@ -222,6 +223,9 @@ class ServerMetrics:
         self.rate_limited = 0         # refused at admission: token bucket dry
         self.joins = 0                # members admitted into resident batches
         self.leaves = 0               # members retired from resident batches
+        self.pad_lanes = 0            # idle lanes run to round batches up
+        self.padded_batches = 0       # batches that carried >= 1 pad lane
+        self.bucket_retunes = 0       # adaptive bucket-boundary refits
         self.occupancy_sum = 0
         self.occupancy_max = 0
         self.queue_depth_peak = 0
@@ -279,6 +283,24 @@ class ServerMetrics:
                     res = self.tier_latency[tier] = \
                         LatencyReservoir(self._tier_capacity)
                 res.record(latency_seconds)
+
+    def on_pad(self, pad_lanes: int) -> None:
+        """One batched replay ran ``pad_lanes`` idle lanes to fill its
+        occupancy bucket (pad members repeat the last real request and are
+        never read back). Bucket granularity trades retraces for exactly
+        this waste — the counter is what the adaptive tuner's drift check
+        (and operators) watch to see whether the trade is still paying."""
+        if pad_lanes <= 0:
+            return
+        with self._lock:
+            self.pad_lanes += pad_lanes
+            self.padded_batches += 1
+
+    def on_bucket_retune(self, boundaries: list | None = None) -> None:
+        """The bucket tuner refit its occupancy-bucket boundaries (stale
+        pooled batched executables were invalidated alongside)."""
+        with self._lock:
+            self.bucket_retunes += 1
 
     def on_rate_limited(self, n: int = 1) -> None:
         """``n`` requests refused at admission because the tenant's token
@@ -360,6 +382,12 @@ class ServerMetrics:
                 "rate_limited": self.rate_limited,
                 "joins": self.joins,
                 "leaves": self.leaves,
+                "pad_lanes": self.pad_lanes,
+                "padded_batches": self.padded_batches,
+                "pad_fraction": round(
+                    self.pad_lanes / (self.pad_lanes + self.occupancy_sum), 4)
+                if self.pad_lanes + self.occupancy_sum else 0.0,
+                "bucket_retunes": self.bucket_retunes,
                 "batch_occupancy_mean": round(mean_occ, 3),
                 "batch_occupancy_max": self.occupancy_max,
                 "queue_depth_peak": self.queue_depth_peak,

@@ -64,7 +64,7 @@ class WarmPool:
         self._entries: collections.OrderedDict[tuple, PoolEntry] = \
             collections.OrderedDict()
         self._counters = {"hits": 0, "misses": 0, "evictions": 0,
-                          "hydrations": 0}
+                          "hydrations": 0, "invalidations": 0}
 
     def get(self, key: tuple) -> PoolEntry | None:
         """Look up ``key``, counting a hit (and refreshing LRU) or a miss."""
@@ -100,6 +100,23 @@ class WarmPool:
         """Like :meth:`get` but without touching counters or LRU order."""
         with self._lock:
             return self._entries.get(key)
+
+    def invalidate(self, predicate: Callable[[tuple, PoolEntry], bool]) -> int:
+        """Drop every entry for which ``predicate(key, entry)`` is true.
+
+        Returns the number removed (also counted in ``invalidations``,
+        distinct from capacity ``evictions``). This is how the adaptive
+        bucket tuner retires stale *batched* executables after a boundary
+        refit: their baked-in bucket sizes no longer match what the
+        scheduler will request, so keeping them warm only wastes pool
+        capacity on entries that can never hit again.
+        """
+        with self._lock:
+            dead = [k for k, e in self._entries.items() if predicate(k, e)]
+            for k in dead:
+                del self._entries[k]
+            self._counters["invalidations"] += len(dead)
+            return len(dead)
 
     def stats(self) -> dict:
         """Hit/miss/eviction/hydration counters + current entry count.

@@ -75,6 +75,7 @@ from typing import Any, Callable, Mapping
 import jax
 import jax.numpy as jnp
 
+from ..core import costmodel as _costmodel
 from ..core import lower as _lower
 from ..core import serialize as _serialize
 from ..core.tdg import TDG, buffers_signature, structure_signature
@@ -283,6 +284,7 @@ class RegionServer:
                  name: str = "region-server", autostart: bool = True,
                  queue_bound: int | None = None,
                  continuous: bool | None = None,
+                 adaptive: bool | str = "auto",
                  mesh: Any = "auto"):
         self.name = name
         self.max_batch = max(1, int(max_batch))
@@ -292,6 +294,14 @@ class RegionServer:
         self.continuous = (continuous_default() if continuous is None
                            else bool(continuous))
         self.fuse = fuse
+        # Adaptive occupancy buckets ("auto" honours REPRO_ADAPTIVE): the
+        # tuner starts on the pow-2 ladder and refits boundaries from the
+        # live occupancy histogram under a bounded retrace budget; a refit
+        # invalidates the pool's stale batched executables. adaptive=False
+        # (or REPRO_ADAPTIVE=0) pins the static pow-2 ladder for good.
+        self.adaptive = _costmodel.adaptive_enabled(adaptive)
+        self.buckets = _costmodel.BucketTuner(self.max_batch,
+                                              adaptive=self.adaptive)
         # Resolved ONCE at construction (like each tenant's kernel mode):
         # every lowering this server performs — single-request, batched,
         # warmup AOT — shards the coalesced batch axis under this mesh, and
@@ -581,7 +591,7 @@ class RegionServer:
         idiom — ``bufs.update(out)``), all server-side, with no per-step
         client round-trip. The future resolves with the FINAL step's
         outputs. Joining and leaving never retraces: membership churn
-        re-slices the same pooled power-of-two-bucketed executables.
+        re-slices the same pooled occupancy-bucketed executables.
         """
         if not self.continuous:
             raise RuntimeError(
@@ -694,10 +704,12 @@ class RegionServer:
             "max_batch": self.max_batch,
             "queue_bound": self.queue_bound,
             "continuous": self.continuous,
+            "adaptive": self.adaptive,
             "mesh": self.mesh_fp,
             "tenants": tenants,
             "metrics": self.metrics.snapshot(),
             "pool": self.pool.stats(),
+            "buckets": self.buckets.summary(),
             "intern": _lower.intern_stats(),
         }
 
@@ -889,7 +901,7 @@ class RegionServer:
 
         Reuses the request-level execution paths unchanged —
         ``_run_single`` for a lone resident, ``_run_batched`` (pooled
-        pow-2-bucketed vmap executables, per-request serial fallback) for
+        occupancy-bucketed vmap executables, per-request serial fallback) for
         more — so membership churn hits the same intern/pool caches and
         never retraces. Afterwards: failures and finished members retire;
         survivors carry outputs into same-named input slots, and a member
@@ -960,11 +972,12 @@ class RegionServer:
         for member in group:
             label = str(member.tenant.tier)
             tiers[label] = tiers.get(label, 0) + 1
-        bucket = 1
-        if len(group) >= 2:
-            bucket = 2
-            while bucket < len(group):
-                bucket *= 2
+        # The tuner's ladder (already retuned by this step's own
+        # observation, if it was going to) names the bucket the coalesced
+        # path actually ran; pad lanes only exist when ONE fused call
+        # served the step — the serial fallback runs nothing idle.
+        bucket, padded = (1, 0) if len(group) < 2 \
+            else self._bucket_and_pad(len(group))
         self.metrics.on_step({
             "step": step_idx,
             "class_id": cls.cid,
@@ -975,6 +988,7 @@ class RegionServer:
             "sheds": sheds,
             "wall_ms": wall_ms,
             "coalesced": coalesced,
+            "padded": padded if coalesced else 0,
             "tiers": tiers,
         })
 
@@ -1116,25 +1130,37 @@ class RegionServer:
         if entry is None:
             entry = self.pool.put(key, PoolEntry(
                 "batched", self._build_batched(tenant0), tenant0.payloads))
-        # Bucket occupancy to the next power of two (padding with a repeat
-        # of the last member, dropped after the call): jit specializes the
-        # batched program per pytree arity, so without bucketing every
-        # straggler-induced occupancy K would pay a fresh trace+compile.
-        # Buckets bound that to log2(max_batch) compilations total. Under a
+        # Bucket occupancy (padding with a repeat of the last member,
+        # dropped after the call): jit specializes the batched program per
+        # pytree arity, so without bucketing every straggler-induced
+        # occupancy K would pay a fresh trace+compile. Boundaries come from
+        # the BucketTuner — the pow-2 ladder until the live occupancy
+        # histogram justifies a refit (bounded retrace budget; static under
+        # REPRO_ADAPTIVE=0). A refit retires the pool's batched entries:
+        # their baked-in bucket sizes can never be requested again. Under a
         # mesh the bucket also rounds up to a batch-axis multiple so the
-        # request axis always splits evenly across devices (padded lanes
-        # repeat the last member and are dropped below).
+        # request axis always splits evenly across devices.
         per_req = [{s: cb[s] for s in varying} for cb in canon]
-        bucket = 2
-        while bucket < len(per_req):
-            bucket *= 2
-        msize = _shreplay.batch_axis_size(self.mesh)
-        bucket += (-bucket) % msize
-        per_req.extend(per_req[-1:] * (bucket - len(per_req)))
+        if self.buckets.observe(len(per_req)):
+            self.pool.invalidate(lambda k, e: e.kind == "batched")
+            self.metrics.on_bucket_retune(self.buckets.boundaries)
+        bucket, pad = self._bucket_and_pad(len(per_req))
+        per_req.extend(per_req[-1:] * pad)
+        self.metrics.on_pad(pad)
         with _kreg.kernel_mode_scope(tenant0.kernel_mode):
             outs = entry.fn(tuple(per_req), shared_bufs)
         return [{r.tenant.from_canon[c]: v for c, v in out_j.items()}
                 for r, out_j in zip(group, outs)]
+
+    def _bucket_and_pad(self, occupancy: int) -> tuple[int, int]:
+        """(bucket, pad lanes) for ``occupancy`` under the current ladder.
+
+        The tuner picks the boundary; a replay mesh then rounds up to a
+        batch-axis multiple so the request axis always splits evenly.
+        """
+        bucket = self.buckets.bucket_for(occupancy)
+        bucket += (-bucket) % _shreplay.batch_axis_size(self.mesh)
+        return bucket, bucket - occupancy
 
     def _build_batched(self, tenant: Tenant) -> Callable[..., tuple]:
         """One jitted cross-request batch callable on canonical slot names.
